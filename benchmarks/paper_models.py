@@ -1,0 +1,40 @@
+"""The paper's evaluation model set (§5.1: OPT series, Mistral-7B,
+Falcon-7B) as ArchConfigs — used by the paper-table benchmarks only."""
+from repro.configs.base import ArchConfig
+
+OPT_1_3B = ArchConfig(
+    name="opt-1.3b", family="dense", n_layers=24, d_model=2048, n_heads=32,
+    n_kv_heads=32, head_dim=64, d_ff=8192, vocab_size=50272, act="gelu",
+    gated_mlp=False, tie_embeddings=True, rope_theta=1e4,
+    source="[arXiv:2205.01068; hf]")
+
+OPT_2_7B = ArchConfig(
+    name="opt-2.7b", family="dense", n_layers=32, d_model=2560, n_heads=32,
+    n_kv_heads=32, head_dim=80, d_ff=10240, vocab_size=50272, act="gelu",
+    gated_mlp=False, tie_embeddings=True, rope_theta=1e4,
+    source="[arXiv:2205.01068; hf]")
+
+OPT_6_7B = ArchConfig(
+    name="opt-6.7b", family="dense", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=32, head_dim=128, d_ff=16384, vocab_size=50272, act="gelu",
+    gated_mlp=False, tie_embeddings=True, rope_theta=1e4,
+    source="[arXiv:2205.01068; hf]")
+
+OPT_13B = ArchConfig(
+    name="opt-13b", family="dense", n_layers=40, d_model=5120, n_heads=40,
+    n_kv_heads=40, head_dim=128, d_ff=20480, vocab_size=50272, act="gelu",
+    gated_mlp=False, tie_embeddings=True, rope_theta=1e4,
+    source="[arXiv:2205.01068; hf]")
+
+MISTRAL_7B = ArchConfig(
+    name="mistral-7b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336, vocab_size=32000,
+    attn_window=4096, rope_theta=1e4, source="[arXiv:2310.06825; hf]")
+
+FALCON_7B = ArchConfig(
+    name="falcon-7b", family="dense", n_layers=32, d_model=4544,
+    n_heads=71, n_kv_heads=71, head_dim=64, d_ff=18176, vocab_size=65024,
+    act="gelu", gated_mlp=False, rope_theta=1e4,
+    source="[arXiv:2311.16867; hf]")
+
+PAPER_MODELS = [OPT_1_3B, OPT_2_7B, OPT_6_7B, OPT_13B, MISTRAL_7B, FALCON_7B]

@@ -1,0 +1,117 @@
+"""Generate the EXPERIMENTS.md roofline table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.rooflines import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ARCH_ORDER = ["mamba2-780m", "qwen3-1.7b", "deepseek-coder-33b",
+              "granite-3-8b", "qwen2.5-14b", "hubert-xlarge",
+              "qwen2-vl-72b", "qwen2-moe-a2.7b", "phi3.5-moe-42b-a6.6b",
+              "recurrentgemma-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname: str, variants: bool = False) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        base = os.path.basename(f)
+        is_variant = any(t in base for t in
+                         ("__pipeline", "__model", "__2dtp", "_seqchunk",
+                          "__replicated"))
+        if is_variant != variants:
+            continue
+        with open(f) as fh:
+            r = json.load(fh)
+            r["_file"] = base
+            rows.append(r)
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s * 1e3:.1f}ms"
+
+
+def table(rows: List[Dict], mesh_tag: str) -> str:
+    out = ["| arch | shape | peak/dev (CPU-HLO) | compute | memory | "
+           "collective | dominant | MODEL_FLOPs/HLO | step lower-bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    index = {(r["arch"], r["shape"]): r for r in rows
+             if "memory" in r and mesh_tag in r.get("mesh", "")
+             and r.get("axes", [""])[0] == ("pod" if mesh_tag == "2x16x16"
+                                            else "data")}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = index.get((arch, shape))
+            if r is None:
+                continue
+            m = r["memory"]["peak_per_device"] / 2**30
+            if "cost" not in r:
+                out.append(f"| {arch} | {shape} | {m:.2f}GiB | - | - | - | "
+                           f"- | - | - |")
+                continue
+            c = r["cost"]["roofline"]
+            ratio = r["cost"].get("useful_flops_ratio", 0.0)
+            lb = max(c["compute_s"], c["memory_s"], c["collective_s"])
+            out.append(
+                f"| {arch} | {shape} | {m:.2f}GiB | {fmt_ms(c['compute_s'])}"
+                f" | {fmt_ms(c['memory_s'])} | {fmt_ms(c['collective_s'])}"
+                f" | **{c['dominant']}** | {ratio:.2f} | {fmt_ms(lb)} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    doms: Dict[str, int] = {}
+    for r in rows:
+        if "cost" in r and "singlepod" not in r.get("mesh", "x"):
+            pass
+    for r in rows:
+        if "cost" in r:
+            doms[r["cost"]["roofline"]["dominant"]] = \
+                doms.get(r["cost"]["roofline"]["dominant"], 0) + 1
+    return f"dominant-term histogram (all compiled cells): {doms}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(f"hardware: {PEAK_FLOPS/1e12:.0f} TF/s bf16, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI per chip\n")
+    print("## Single-pod baseline (16x16 = 256 chips)\n")
+    print(table(rows, "16x16"))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(rows, "2x16x16"))
+    vrows = load(args.dir, variants=True)
+    if vrows:
+        print("\n## Optimized variants (§Perf hillclimbs)\n")
+        print("| file | peak/dev | compute | memory | collective | dominant |")
+        print("|---|---|---|---|---|---|")
+        for r in vrows:
+            if "memory" not in r:
+                continue
+            m = r["memory"]["peak_per_device"] / 2**30
+            if "cost" in r:
+                c = r["cost"]["roofline"]
+                print(f"| {r['_file'].replace('.json','')} | {m:.2f}GiB | "
+                      f"{fmt_ms(c['compute_s'])} | {fmt_ms(c['memory_s'])} | "
+                      f"{fmt_ms(c['collective_s'])} | {c['dominant']} |")
+            else:
+                print(f"| {r['_file'].replace('.json','')} | {m:.2f}GiB "
+                      f"| - | - | - | - |")
+    print()
+    print(summary(rows))
+
+
+if __name__ == "__main__":
+    main()

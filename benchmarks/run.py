@@ -1,0 +1,281 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+Latency benches run on the byte/bandwidth-accurate cold-start simulator
+calibrated to the paper's testbed (core/simulator.py, GPU_PAPER) plus the
+TPU-v5e target constants; functional benches execute the real engine on
+reduced models (CPU wall-clock).
+
+Map (paper artifact -> bench):
+  Fig. 1/9, Table 1  -> bench_cold_start_breakdown, bench_breakdown_lora
+  Fig. 8             -> bench_ttft
+  Fig. 6             -> bench_strategy_crossover
+  Fig. 10            -> bench_ttft_lora
+  Fig. 11/12         -> bench_scaling_shapes
+  Fig. 13            -> bench_scaling_devices
+  Fig. 14            -> bench_adapter_epochs
+  Fig. 15/16         -> bench_recovery_loading
+  Fig. 17            -> bench_recovery_inference
+  (engine, CPU)      -> bench_engine_functional, bench_kernels
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_models import (FALCON_7B, MISTRAL_7B, OPT_1_3B,
+                                     OPT_2_7B, OPT_6_7B, OPT_13B,
+                                     PAPER_MODELS)
+from repro.configs.base import get_arch
+from repro.core import simulator as sim
+from repro.core.adapter_scheduler import (EagerPolicy, EpochSchedulerPolicy,
+                                          simulate_adapter_serving)
+from repro.core.simulator import GPU_PAPER, TPU_V5E
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 / Fig. 10: TTFT across models and systems
+# ---------------------------------------------------------------------------
+
+def bench_ttft(lora_rank: int = 0):
+    tag = "lora_" if lora_rank else ""
+    for cfg in PAPER_MODELS:
+        rows = {}
+        for strat in ("transformers", "serverlessllm", "pipeboost"):
+            r = sim.simulate_cold_start(cfg, GPU_PAPER, 2, strat,
+                                        lora_rank=lora_rank)
+            rows[strat] = r.ttft
+            emit(f"ttft_{tag}{cfg.name}_{strat}", r.ttft * 1e6)
+        red_sl = 100 * (1 - rows["pipeboost"] / rows["serverlessllm"])
+        red_tr = 100 * (1 - rows["pipeboost"] / rows["transformers"])
+        emit(f"ttft_{tag}{cfg.name}_reduction", 0.0,
+             f"vs_sllm={red_sl:.1f}% vs_transformers={red_tr:.1f}%")
+
+
+def bench_ttft_lora():
+    bench_ttft(lora_rank=16)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1/9, Table 1: startup breakdown
+# ---------------------------------------------------------------------------
+
+def bench_cold_start_breakdown():
+    for cfg in (MISTRAL_7B, OPT_13B):
+        for strat in ("serverlessllm", "pipeboost"):
+            r = sim.simulate_cold_start(cfg, GPU_PAPER, 2, strat)
+            for stage, t in r.breakdown.items():
+                if stage == "total":
+                    continue
+                emit(f"breakdown_{cfg.name}_{strat}_{stage}", t * 1e6,
+                     f"{100 * t / r.ttft:.1f}%_of_ttft")
+            load = r.breakdown["load_ckpt_dram"] + r.breakdown["load_params"]
+            emit(f"breakdown_{cfg.name}_{strat}_load_share", 0.0,
+                 f"{100 * load / r.ttft:.1f}%")
+
+
+def bench_breakdown_lora():
+    """Table 1: LoRA stages add negligible overhead."""
+    for cfg in (MISTRAL_7B, OPT_13B):
+        base = sim.simulate_cold_start(cfg, GPU_PAPER, 2, "pipeboost")
+        lora = sim.simulate_cold_start(cfg, GPU_PAPER, 2, "pipeboost",
+                                       lora_rank=16)
+        over = 100 * (lora.ttft - base.ttft) / base.ttft
+        emit(f"lora_overhead_{cfg.name}", (lora.ttft - base.ttft) * 1e6,
+             f"{over:.2f}%_ttft_increase")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: strategy crossover
+# ---------------------------------------------------------------------------
+
+def bench_strategy_crossover():
+    for rps in (0.5, 2.0, 8.0, 20.0, 40.0):
+        p = sim.simulate_request_latency(OPT_1_3B, GPU_PAPER, 4, rps,
+                                         strategy="pipeline")
+        s = sim.simulate_request_latency(OPT_1_3B, GPU_PAPER, 4, rps,
+                                         strategy="single")
+        emit(f"crossover_rps{rps}_pipeline", p["mean"] * 1e6)
+        emit(f"crossover_rps{rps}_single", s["mean"] * 1e6,
+             f"single_wins={s['mean'] < p['mean']}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11/12: input length & batch scaling
+# ---------------------------------------------------------------------------
+
+def bench_scaling_shapes():
+    for prompt in (200, 500):
+        sl = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, 2,
+                                     "serverlessllm", prompt=prompt)
+        pb = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, 2, "pipeboost",
+                                     prompt=prompt)
+        emit(f"inputlen{prompt}_mistral7b_sllm", sl.ttft * 1e6)
+        emit(f"inputlen{prompt}_mistral7b_pipeboost", pb.ttft * 1e6,
+             f"reduction={100 * (1 - pb.ttft / sl.ttft):.1f}%")
+    for batch in (64, 256):
+        sl = sim.simulate_cold_start(FALCON_7B, GPU_PAPER, 2,
+                                     "serverlessllm", batch=batch)
+        pb = sim.simulate_cold_start(FALCON_7B, GPU_PAPER, 2, "pipeboost",
+                                     batch=batch)
+        emit(f"batch{batch}_falcon7b_sllm", sl.ttft * 1e6)
+        emit(f"batch{batch}_falcon7b_pipeboost", pb.ttft * 1e6,
+             f"reduction={100 * (1 - pb.ttft / sl.ttft):.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 13: device-count scaling
+# ---------------------------------------------------------------------------
+
+def bench_scaling_devices():
+    base = None
+    for n in (1, 2, 4, 8):
+        pb = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, n, "pipeboost")
+        sl = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, n,
+                                     "serverlessllm")
+        base = base or pb.ttft
+        emit(f"devices{n}_mistral7b_pipeboost", pb.ttft * 1e6,
+             f"vs_1dev={100 * (1 - pb.ttft / base):.1f}% "
+             f"vs_sllm={100 * (1 - pb.ttft / sl.ttft):.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 14: epoch-based adapter switching
+# ---------------------------------------------------------------------------
+
+def bench_adapter_epochs():
+    for rps in (5.0, 10.0, 15.0, 20.0, 25.0):
+        ep = simulate_adapter_serving(
+            EpochSchedulerPolicy(epoch_budget=8, max_batch=8), rps=rps,
+            horizon=30.0, switch_prob=0.2)
+        eg = simulate_adapter_serving(EagerPolicy(max_batch=8), rps=rps,
+                                      horizon=30.0, switch_prob=0.2)
+        emit(f"adapter_rps{rps}_epoch", ep["mean"] * 1e6,
+             f"var={ep['var']:.4f} merges={ep['merges']:.0f}")
+        emit(f"adapter_rps{rps}_eager", eg["mean"] * 1e6,
+             f"var={eg['var']:.4f} merges={eg['merges']:.0f} "
+             f"epoch_cut={100 * (1 - ep['mean'] / max(eg['mean'], 1e-9)):.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 15/16: recovery during loading
+# ---------------------------------------------------------------------------
+
+def bench_recovery_loading():
+    pp = sim.simulate_loading_failure(MISTRAL_7B, GPU_PAPER, 4,
+                                      failed=[1, 2], mode="pp")
+    fl = sim.simulate_loading_failure(MISTRAL_7B, GPU_PAPER, 4,
+                                      failed=[1, 2], mode="full")
+    norm = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, 4, "pipeboost")
+    emit("recovery_load_pp", pp.recovery_time * 1e6,
+         f"ttft={pp.ttft:.2f}s")
+    emit("recovery_load_full", fl.recovery_time * 1e6,
+         f"ttft={fl.ttft:.2f}s cut={100 * (1 - pp.recovery_time / fl.recovery_time):.1f}%")
+    emit("recovery_load_normal_ttft", norm.ttft * 1e6, "no-crash baseline")
+    for n in (2, 3, 4):
+        r = sim.simulate_loading_failure(MISTRAL_7B, GPU_PAPER, n,
+                                         failed=[0], mode="pp")
+        emit(f"recovery_devices{n}_ttft", r.ttft * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 17: recovery during inference
+# ---------------------------------------------------------------------------
+
+def bench_recovery_inference():
+    for mode in ("pp", "full"):
+        tl = sim.simulate_inference_failure(MISTRAL_7B, GPU_PAPER, 4,
+                                            mode=mode)
+        post = [thr for t, thr in tl if t > 6.0]
+        halt = sum(1 for x in post if x == 0.0) * 0.25
+        dip = min(post)
+        emit(f"recovery_infer_{mode}_halt", halt * 1e6,
+             f"min_thr={dip:.0f}tok/s steady={tl[-1][1]:.0f}tok/s")
+
+
+# ---------------------------------------------------------------------------
+# Functional benches: the real engine on reduced models (CPU wall-clock)
+# ---------------------------------------------------------------------------
+
+def bench_engine_functional():
+    from repro.core.engine import PipeBoostEngine, generate
+    from repro.models import transformer as T
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    t0 = time.perf_counter()
+    eng.load_round()
+    logits = eng.prefill(batch)
+    t1 = time.perf_counter()
+    emit("engine_cold_prefill_reduced", (t1 - t0) * 1e6,
+         f"segments_loaded=1/4_per_device ready={eng.ready}")
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(8):
+        tok = jnp.argmax(eng.decode(tok), -1).astype(jnp.int32)
+    t1 = time.perf_counter()
+    emit("engine_decode8_reduced", (t1 - t0) * 1e6)
+    # crash + recover wall-clock (functional)
+    eng.crash([1, 2])
+    t0 = time.perf_counter()
+    stats = eng.recover()
+    t1 = time.perf_counter()
+    emit("engine_recover_reduced", (t1 - t0) * 1e6,
+         f"kv_reused={stats['reconstruct']['kv_reused']} "
+         f"full_prefill={stats['reconstruct']['full_prefill']}")
+
+
+def bench_kernels():
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 256, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    o = ops.flash_attention(q, k, v)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        o = ops.flash_attention(q, k, v)
+    jax.block_until_ready(o)
+    emit("kernel_flash_attn_256_interp", (time.perf_counter() - t0) / 3 * 1e6,
+         "interpret-mode (TPU target)")
+    W = jax.random.normal(key, (4, 256, 256), jnp.float32)
+    A = jax.random.normal(key, (4, 256, 8), jnp.float32)
+    Bm = jax.random.normal(key, (4, 8, 256), jnp.float32)
+    o = ops.lora_merge(W, A, Bm, 0.5)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        o = ops.lora_merge(W, A, Bm, 0.5)
+    jax.block_until_ready(o)
+    emit("kernel_lora_merge_interp", (time.perf_counter() - t0) / 3 * 1e6)
+
+
+# ---------------------------------------------------------------------------
+
+BENCHES = [
+    bench_ttft, bench_ttft_lora, bench_cold_start_breakdown,
+    bench_breakdown_lora, bench_strategy_crossover, bench_scaling_shapes,
+    bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
+    bench_recovery_inference, bench_engine_functional, bench_kernels,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Quickstart: PipeBoost cold start, serving-during-loading, crash recovery.
+
+Runs on CPU in ~a minute with a reduced model.  Shows the paper's three
+headline behaviours end-to-end through the public API:
+
+  1. the server is ready to infer after each device loads only 1/N of the
+     model (pipeline-parallel loading);
+  2. tokens served during background loading are identical to a fully
+     loaded server;
+  3. a 2-device crash mid-decode recovers exactly (layer reassignment +
+     KV reconstruction).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.engine import PipeBoostEngine, generate
+from repro.core import simulator as sim
+from repro.models import transformer as T
+
+
+def main():
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=8)
+    print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+
+    # --- 1. pipeline-parallel cold start --------------------------------
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    print(f"before loading: ready={eng.ready}")
+    eng.load_round()                      # ONE segment per device (1/N each)
+    print(f"after 1 round : ready={eng.ready}  "
+          f"loaded={eng.loaded_map()}  chain={eng.chain()}")
+
+    t0 = time.perf_counter()
+    logits = eng.prefill(batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"first token in {time.perf_counter() - t0:.2f}s (CPU, reduced): "
+          f"{np.asarray(tok)}")
+
+    # --- 2. serve during background loading == fully loaded -------------
+    e_early = PipeBoostEngine(cfg, params, 4, max_len=64)
+    e_early.load_round()
+    early = generate(e_early, batch, 8)
+    e_full = PipeBoostEngine(cfg, params, 4, max_len=64)
+    while e_full.load_round():
+        pass
+    full = generate(e_full, batch, 8)
+    print(f"partial-load tokens == full-load tokens: "
+          f"{np.array_equal(np.asarray(early), np.asarray(full))}")
+
+    # --- 3. crash mid-decode + pipeline-parallel recovery ---------------
+    e_crash = PipeBoostEngine(cfg, params, 4, max_len=64)
+    e_crash.load_round()
+    out = generate(e_crash, batch, 8, crash_at=4, crash_devices=[1, 2])
+    print(f"crash@token4 (devices 1,2) tokens still equal: "
+          f"{np.array_equal(np.asarray(out), np.asarray(full))}")
+    print(f"engine events: {[e for e, _ in e_crash.events]}")
+
+    # --- what this buys at real scale (byte-accurate simulator) ---------
+    print("\ncold-start TTFT on the paper's 2xA100 testbed (simulated):")
+    for strat in ("transformers", "serverlessllm", "pipeboost"):
+        r = sim.simulate_cold_start(get_arch("pipeboost-opt-1.3b"),
+                                    sim.GPU_PAPER, 2, strat)
+        print(f"  {strat:14s} TTFT={r.ttft:.2f}s  (ready@{r.t_ready:.2f}s, "
+              f"fully loaded@{r.t_full:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fault-tolerance drill across every architecture family: crash 2 of 4
+devices mid-decode and verify bit-exact recovery (paper §4.4), then show
+the recovery-time story on the simulator (paper Figs. 15-17).
+
+    PYTHONPATH=src python examples/recovery_drill.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import simulator as sim
+from repro.core.engine import PipeBoostEngine, generate
+from repro.models import transformer as T
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("functional drill (reduced models, CPU, 4 logical devices):")
+    for arch, layers in [("qwen3-1.7b", 8), ("mamba2-780m", 8),
+                         ("recurrentgemma-2b", 6), ("qwen2-moe-a2.7b", 4)]:
+        cfg = get_arch(arch).reduced(n_layers=layers)
+        params = T.init_params(cfg, key)
+        batch = {"tokens": jax.random.randint(key, (2, 16), 0,
+                                              cfg.vocab_size)}
+        ref_eng = PipeBoostEngine(cfg, params, 4, max_len=64)
+        ref_eng.load_round()
+        ref = generate(ref_eng, batch, 8)
+        eng = PipeBoostEngine(cfg, params, 4, max_len=64)
+        eng.load_round()
+        out = generate(eng, batch, 8, crash_at=4, crash_devices=[1, 2])
+        ok = np.array_equal(np.asarray(ref), np.asarray(out))
+        st = [s for e, s in eng.events if e == "recover"][0]
+        detail = st.get("reconstruct", {})
+        print(f"  {arch:22s} exact={ok}  kv_reused={detail.get('kv_reused', 0)}"
+              f" full_prefill={detail.get('full_prefill', 0)}"
+              f" skipped={detail.get('layers_skipped', 0)}")
+
+    print("\nsimulated recovery (paper testbed, Mistral-7B, 4 devices):")
+    pp = sim.simulate_loading_failure(
+        get_arch("qwen3-1.7b"), sim.GPU_PAPER, 4, failed=[1, 2], mode="pp")
+    fl = sim.simulate_loading_failure(
+        get_arch("qwen3-1.7b"), sim.GPU_PAPER, 4, failed=[1, 2], mode="full")
+    print(f"  loading-stage recovery: PP={pp.recovery_time:.2f}s "
+          f"full-restart={fl.recovery_time:.2f}s "
+          f"(cut {100*(1-pp.recovery_time/fl.recovery_time):.0f}%)")
+    tl_pp = sim.simulate_inference_failure(get_arch("qwen3-1.7b"),
+                                           sim.GPU_PAPER, 4, mode="pp")
+    tl_fl = sim.simulate_inference_failure(get_arch("qwen3-1.7b"),
+                                           sim.GPU_PAPER, 4, mode="full")
+    halt = sum(1 for _, thr in tl_fl if thr == 0.0) * 0.25
+    dip = min(thr for t, thr in tl_pp if t > 6.0)
+    peak = tl_pp[0][1]
+    print(f"  inference-stage crash : PP dips to {dip:.0f} tok/s "
+          f"(from {peak:.0f}) with NO halt; full restart halts {halt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

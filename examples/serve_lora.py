@@ -1,0 +1,59 @@
+"""Serve a base model + two LoRA adapters with continuous batching and
+epoch-based adapter switching (paper §4.3.2 / Fig. 14) — end-to-end driver.
+
+    PYTHONPATH=src python examples/serve_lora.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.adapter_scheduler import (EagerPolicy, EpochSchedulerPolicy,
+                                          simulate_adapter_serving)
+from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+from repro.models import transformer as T
+from repro.serving.engine import ServeRequest, ServingEngine
+
+
+def main():
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+
+    adapters = {}
+    for name in ("math", "code"):
+        lora = randomize_lora(jax.random.fold_in(key, hash(name) % 1000),
+                              init_lora(key, cfg, rank=4, name=name))
+        adapters[name] = merge_lora(params, lora)
+
+    eng = ServingEngine(cfg, params, n_slots=3, max_len=96,
+                        policy=EpochSchedulerPolicy(epoch_budget=3,
+                                                    max_batch=3),
+                        adapter_params=adapters)
+    rng = np.random.default_rng(0)
+    lanes = [None, "math", "code"]
+    for i in range(9):
+        eng.submit(ServeRequest(i, rng.integers(0, 250, size=8),
+                                max_new_tokens=5, adapter=lanes[i % 3]))
+    done = eng.run()
+    print(f"served {len(done)} requests with "
+          f"{eng.n_adapter_switches} adapter switches (epoch-batched)")
+    for r in done[:6]:
+        print(f"  req{r.rid} adapter={r.adapter or 'base':5s} "
+              f"tokens={r.generated}")
+
+    print("\nFig.14-style comparison (simulated, 20 RPS, 20% switch prob):")
+    ep = simulate_adapter_serving(EpochSchedulerPolicy(epoch_budget=8),
+                                  rps=20, horizon=30, switch_prob=0.2)
+    eg = simulate_adapter_serving(EagerPolicy(), rps=20, horizon=30,
+                                  switch_prob=0.2)
+    print(f"  epoch-based: mean={ep['mean']*1e3:.0f}ms "
+          f"var={ep['var']:.3f} merges={ep['merges']:.0f}")
+    print(f"  eager      : mean={eg['mean']*1e3:.0f}ms "
+          f"var={eg['var']:.3f} merges={eg['merges']:.0f}")
+    print(f"  latency cut: {100*(1-ep['mean']/eg['mean']):.1f}% "
+          f"(paper reports 63.1% at 25 RPS)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""granite-3-8b — GQA [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab_size=49155,
+    rope_theta=1e7,
+    tie_embeddings=True,
+    source="[hf:ibm-granite/granite-3.0-2b-base; hf]",
+)

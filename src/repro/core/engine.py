@@ -1,0 +1,252 @@
+"""PipeBoost engine: functional multi-device orchestration of
+pipeline-parallel loading, inference during loading, strategy switching,
+crash injection and recovery (paper §4.1–§4.4).
+
+This engine executes REAL models (repro.models) over *logical devices* — on
+this CPU container the devices are bookkeeping entities (what is loaded
+where, whose KV lives where) while compute runs on the host; on a real TPU
+slice the same state machine drives per-device `jax.device_put` of segment
+shards and the shard_map pipeline in repro/distributed/pipeline.py.  Timing
+comes from core/simulator.py; this module owns *correctness*:
+
+  * a request admitted before full load produces EXACTLY the same tokens as
+    a fully-loaded model (pipeline math is the same math);
+  * a crash + recovery produces the same KV/state as a fresh prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import analytic
+from repro.core.kv_reconstruct import reconstruct_cache
+from repro.core.planner import (LoadPlan, make_plan, reassign, viable_chain)
+from repro.lora.adapters import LoRAAdapter, merge_lora, unmerge_lora
+from repro.models import transformer
+
+
+class EngineError(RuntimeError):
+    pass
+
+
+@dataclass
+class DeviceState:
+    idx: int
+    alive: bool = True
+    loaded: Set[int] = field(default_factory=set)      # fully-loaded segments
+    kv_segments: Set[int] = field(default_factory=set)  # segments whose KV
+                                                         # this device owns
+
+
+@dataclass
+class EngineStatus:
+    ready: bool
+    fully_loaded: bool
+    strategy: str
+    alive: List[int]
+    loaded: Dict[int, List[int]]
+    chain: Optional[List[Tuple[int, int]]]
+
+
+class PipeBoostEngine:
+    """State machine + functional inference for one GPU-server analogue."""
+
+    def __init__(self, cfg: ArchConfig, params, n_devices: int,
+                 n_segments: Optional[int] = None, max_len: int = 256,
+                 adapters: Optional[Dict[str, LoRAAdapter]] = None):
+        self.cfg = cfg
+        self._full_params = params          # "checkpoint in DRAM"
+        self.n_devices = n_devices
+        lb = analytic.layer_bytes_list(cfg)
+        self.plan: LoadPlan = make_plan(lb, n_devices, n_segments)
+        self.devices = [DeviceState(i) for i in range(n_devices)]
+        self.max_len = max_len
+        self.strategy = "pipeline"          # -> "single" after switch
+        self.adapters = adapters or {}
+        self.active_adapter: Optional[str] = None
+        self._merged_params = params        # params w/ active adapter merged
+        self._cache: Optional[Dict] = None
+        self._tokens_seen: Optional[jnp.ndarray] = None
+        self.events: List[Tuple[str, Any]] = []
+        self._prefill_jit = jax.jit(
+            lambda p, b: transformer.forward(cfg, p, b, mode="prefill",
+                                             max_len=self.max_len))
+        self._decode_jit = jax.jit(
+            lambda p, t, c: transformer.decode_step(cfg, p, {"tokens": t}, c))
+
+    # ---------------- loading ------------------------------------------------
+
+    def load_next_segment(self, device: int) -> Optional[int]:
+        """Advance device's rotated loading order by one segment."""
+        d = self.devices[device]
+        if not d.alive:
+            raise EngineError(f"device {device} is dead")
+        for s in self.plan.order[device]:
+            if s not in d.loaded:
+                d.loaded.add(s)
+                self.events.append(("load", (device, s)))
+                return s
+        return None
+
+    def load_round(self) -> bool:
+        """One synchronous loading round across alive devices.  Returns True
+        if anything was loaded."""
+        any_loaded = False
+        for d in self.devices:
+            if d.alive and self.load_next_segment(d.idx) is not None:
+                any_loaded = True
+        return any_loaded
+
+    def loaded_map(self) -> Dict[int, List[int]]:
+        return {d.idx: sorted(d.loaded) for d in self.devices if d.alive}
+
+    def chain(self) -> Optional[List[Tuple[int, int]]]:
+        return viable_chain(self.plan, self.loaded_map(),
+                            [d.idx for d in self.devices if d.alive])
+
+    @property
+    def ready(self) -> bool:
+        return self.chain() is not None
+
+    @property
+    def fully_loaded(self) -> bool:
+        n = len(self.plan.segments)
+        return all(len(d.loaded) == n for d in self.devices if d.alive)
+
+    def status(self) -> EngineStatus:
+        return EngineStatus(self.ready, self.fully_loaded, self.strategy,
+                            [d.idx for d in self.devices if d.alive],
+                            self.loaded_map(), self.chain())
+
+    # ---------------- adapters (merged-LoRA, §4.3.2) -------------------------
+
+    def switch_adapter(self, name: Optional[str]):
+        if name == self.active_adapter:
+            return
+        params = self._full_params
+        if name is not None:
+            if name not in self.adapters:
+                raise EngineError(f"unknown adapter {name!r}")
+            params = merge_lora(params, self.adapters[name])
+        self.active_adapter = name
+        self._merged_params = params
+        self.events.append(("adapter_switch", name))
+
+    # ---------------- inference ---------------------------------------------
+
+    def _segment_layer_mask(self, segs: Set[int]) -> List[bool]:
+        """Per-global-layer: is the layer inside one of ``segs``."""
+        mask = [False] * self.cfg.n_layers
+        for s in segs:
+            seg = self.plan.segments[s]
+            for i in range(seg.layer_start, seg.layer_end):
+                mask[i] = True
+        return mask
+
+    def prefill(self, batch: Dict) -> jnp.ndarray:
+        """Serve a prefill the moment a chain exists (the paper's point:
+        this happens after each device loaded only ~1/N of the model)."""
+        chain = self.chain()
+        if chain is None:
+            raise EngineError("no viable pipeline chain: model not ready")
+        logits, cache = self._prefill_jit(self._merged_params, batch)
+        self._cache = cache
+        self._tokens_seen = batch.get("tokens")
+        # KV ownership follows the serving chain
+        for d in self.devices:
+            d.kv_segments = set()
+        for dev, seg in chain:
+            self.devices[dev].kv_segments.add(seg)
+        self.events.append(("prefill", chain))
+        return logits
+
+    def decode(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        if self._cache is None:
+            raise EngineError("prefill first")
+        if self.strategy == "pipeline" and self.chain() is None:
+            raise EngineError("pipeline chain broken — recover() first")
+        logits, self._cache = self._decode_jit(self._merged_params, tokens,
+                                               self._cache)
+        if self._tokens_seen is not None:
+            self._tokens_seen = jnp.concatenate(
+                [self._tokens_seen, tokens.reshape(-1, 1)], axis=1)
+        return logits
+
+    # ---------------- strategy switching (§4.3.3) ----------------------------
+
+    def maybe_switch_strategy(self, request_rate: float,
+                              crossover_rate: float = 0.0) -> bool:
+        """Seamless switch to per-device independent serving once every
+        device holds the full model (and the rate argues for it)."""
+        if self.strategy == "single":
+            return False
+        if self.fully_loaded and request_rate >= crossover_rate:
+            self.strategy = "single"
+            self.events.append(("strategy_switch", "single"))
+            return True
+        return False
+
+    # ---------------- failures + recovery (§4.4) -----------------------------
+
+    def crash(self, device_ids: Sequence[int]):
+        for i in device_ids:
+            self.devices[i].alive = False
+        self.events.append(("crash", list(device_ids)))
+
+    def recover(self) -> Dict[str, Any]:
+        """Pipeline-parallel recovery: layer reassignment + (if mid-decode)
+        KV/state reconstruction.  Returns a stats dict."""
+        alive = [d.idx for d in self.devices if d.alive]
+        if not alive:
+            raise EngineError("all devices dead")
+        stats: Dict[str, Any] = {}
+        ch = self.chain()
+        if ch is None:
+            # layer reassignment: survivors re-plan loading of missing spans
+            self.plan = reassign(self.plan, self.loaded_map(), alive)
+            stats["replanned"] = True
+            while not self.ready:
+                if not self.load_round():
+                    raise EngineError("cannot complete chain")
+            ch = self.chain()
+        stats["chain"] = ch
+
+        # KV reconstruction for in-flight decode state (if any)
+        if self._cache is not None and self._tokens_seen is not None:
+            surviving_kv: Set[int] = set()
+            for d in self.devices:
+                if d.alive:
+                    surviving_kv |= d.kv_segments
+            has_state = self._segment_layer_mask(surviving_kv)
+            self._cache, rstats = reconstruct_cache(
+                self.cfg, self._merged_params,
+                {"tokens": self._tokens_seen}, self._cache, has_state,
+                max_len=self.max_len)
+            stats["reconstruct"] = rstats
+            for dev, seg in ch:
+                self.devices[dev].kv_segments.add(seg)
+        self.events.append(("recover", stats))
+        return stats
+
+
+def generate(engine: PipeBoostEngine, batch: Dict, n_tokens: int,
+             crash_at: Optional[int] = None,
+             crash_devices: Sequence[int] = ()) -> jnp.ndarray:
+    """Greedy generation helper (tests/examples): returns (B, n_tokens)."""
+    logits = engine.prefill(batch)
+    outs = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    outs.append(tok)
+    for i in range(1, n_tokens):
+        if crash_at is not None and i == crash_at:
+            engine.crash(crash_devices)
+            engine.recover()
+        logits = engine.decode(tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,105 @@
+"""Activation-sharding policy hook.
+
+Model code stays distribution-agnostic: it calls ``constrain(x, role)`` at
+layer boundaries, which is a no-op unless a policy is installed (the
+dry-run / launchers install one).  This is the MaxText
+``with_logical_constraint`` pattern — explicit constraints stop the SPMD
+partitioner from inventing catastrophic activation reshardings in the
+backward pass (observed: "involuntary full rematerialization" + 136 GiB/dev
+peaks without them).
+
+Roles:
+  act    (B, S, D)   — residual stream:      (dp, seq, None)
+  ffh    (B, S, F)   — FFN/inner hidden:     (dp, seq, None)
+  heads  (B, S, H, d)— per-head activations: (dp, seq, None, None)
+  logits (B, S, V)   — unembedded logits:    (dp, seq, None)
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
+                 seq_axis: Optional[str] = "model",
+                 vocab_axis: Optional[str] = None,
+                 ff_axis: Optional[str] = None):
+        self.mesh = mesh
+        dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+        self.dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+        self.seq = seq_axis if (seq_axis in mesh.axis_names) else None
+        # decode: keep logits vocab-sharded (a full-vocab gather of the
+        # lm_head costs GBs/step; argmax needs only a tiny reduce)
+        self.vocab = vocab_axis if (vocab_axis in mesh.axis_names) else None
+        # decode TP: FFN hidden stays sharded over 'model' between the
+        # column- and row-parallel matmuls (Megatron pairing)
+        self.ff = ff_axis if (ff_axis in mesh.axis_names) else None
+
+    @property
+    def token_groups(self) -> int:
+        """Number of token shards (dp x seq) — MoE routes per group so
+        capacity/dispatch stay local (GShard per-group semantics)."""
+        n = 1
+        if self.dp is not None:
+            for a in (self.dp if isinstance(self.dp, tuple) else (self.dp,)):
+                n *= self.mesh.shape[a]
+        if self.seq is not None:
+            n *= self.mesh.shape[self.seq]
+        return n
+
+    def spec(self, role: str, ndim: int) -> P:
+        if role == "tok":
+            # token-major (T, ...) where T = B*S flattened
+            axes = []
+            if self.dp is not None:
+                axes += list(self.dp) if isinstance(self.dp, tuple) else [self.dp]
+            if self.seq is not None:
+                axes.append(self.seq)
+            lead = [tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)]
+            return P(*(lead + [None] * (ndim - 1)))
+        lead = [self.dp, self.seq]
+        if role == "logits" and self.vocab is not None and ndim >= 3:
+            return P(*(lead + [None] * (ndim - 3) + [self.vocab]))
+        if role == "ffh" and self.ff is not None and ndim >= 3:
+            return P(*(lead + [None] * (ndim - 3) + [self.ff]))
+        return P(*(lead + [None] * (ndim - 2)))
+
+
+def set_policy(policy: Optional[ShardingPolicy]):
+    _STATE.policy = policy
+
+
+def get_policy() -> Optional[ShardingPolicy]:
+    return getattr(_STATE, "policy", None)
+
+
+class use_policy:
+    def __init__(self, policy: Optional[ShardingPolicy]):
+        self.policy = policy
+
+    def __enter__(self):
+        self.prev = get_policy()
+        set_policy(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        set_policy(self.prev)
+
+
+def constrain(x, role: str = "act"):
+    """Pin ``x`` to the policy's sharding for ``role`` (no-op w/o policy)."""
+    pol = get_policy()
+    if pol is None or x.ndim < 2:
+        return x
+    try:
+        spec = pol.spec(role, x.ndim)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(pol.mesh, spec))
+    except Exception:
+        return x

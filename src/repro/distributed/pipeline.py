@@ -1,0 +1,316 @@
+"""PipeBoost pipeline-parallel serve step as a shard_map lowering.
+
+This is the paper's §4.3 technique in distributed form: stage *i* holds a
+contiguous slice of the (stacked) layers; microbatches flow stage→stage via
+``lax.ppermute`` over the 'stage' mesh axis on a GPipe belt schedule:
+
+    tick t:  stage s computes microbatch (t - s), then the belt shifts.
+
+All stages execute the same program (SPMD); off-belt stages compute on a
+zeros buffer whose results are discarded — the standard JAX collective-
+-permute pipeline (cf. GPipe [arXiv:1811.06965] / DAPPLE collective
+schedules), TPU-native rather than a torch.distributed port.
+
+Used for the TTFT-critical cold-start prefill (after strategy switching the
+engine serves per-replica, so decode rides the standard lowering).  Uniform
+layer stacks only (dense/GQA/MoE/SSM/encoder); the hybrid arch pipelines in
+the functional engine but is excluded from this lowering (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.attention import default_block_q
+from repro.launch.mesh import make_pipeline_mesh, pipeline_stages_for
+from repro.models import transformer
+from repro.models.transformer import _apply_norm
+
+
+def _uniform_kind(cfg: ArchConfig) -> str:
+    kinds = set(cfg.layer_kinds())
+    if len(kinds) != 1:
+        raise ValueError(
+            f"pipeline lowering needs a uniform layer stack; {cfg.name} has "
+            f"{sorted(kinds)} (hybrid pipelines run via core/engine.py)")
+    return next(iter(kinds))
+
+
+def build_pipeline_prefill(cfg: ArchConfig, *, n_stages: int, n_micro: int,
+                           mesh: Mesh, seq_len: int):
+    """Returns f(params, batch) -> last-token logits (B, V), shard_map'ed.
+
+    params['blocks'][kind] leaves are (L, ...) sharded over 'stage' on dim 0;
+    embed/head replicated (stage 0 embeds, last stage unembeds — replication
+    costs HBM but keeps the belt code uniform; refining this is a recorded
+    perf lever).
+    """
+    kind = _uniform_kind(cfg)
+    L_local = cfg.n_layers // n_stages
+
+    def body(params, batch):
+        # --- local (per-stage) program -----------------------------------
+        stage = jax.lax.axis_index("stage")
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        B = (tokens if tokens is not None else embeds).shape[0]
+        mb = B // n_micro
+        D = cfg.d_model
+        blocks = params["blocks"][kind]          # (L_local, ...) local slice
+
+        positions = jnp.broadcast_to(jnp.arange(seq_len)[None, :],
+                                     (mb, seq_len))
+
+        def embed_mb(i):
+            if tokens is not None:
+                sl = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+                return jnp.take(params["embed"], sl, axis=0)
+            return jax.lax.dynamic_slice_in_dim(embeds, i * mb, mb, 0)
+
+        def run_local_layers(x):
+            def layer(x, p_l):
+                if kind == "ssm":
+                    from repro.models import mamba2
+                    x, _ = mamba2.ssm_block_fwd(cfg, p_l, x)
+                else:
+                    x, _, _ = transformer.attn_layer_fwd(cfg, p_l, x,
+                                                         positions)
+                return x, None
+            x, _ = jax.lax.scan(layer, x, blocks)
+            return x
+
+        n_ticks = n_micro + n_stages - 1
+        logits_buf = jnp.zeros((n_micro, mb, cfg.padded_vocab), jnp.float32)
+
+        def tick(carry, t):
+            belt, logits_buf = carry             # belt: (mb, S, D)
+            mb_idx = t - stage                   # microbatch this stage sees
+            feed = jnp.clip(mb_idx, 0, n_micro - 1)
+            x_in = jnp.where(jnp.equal(stage, 0)[..., None, None],
+                             embed_mb(feed), belt)
+            x_out = run_local_layers(x_in)
+            # last stage: final norm + last-token unembed
+            xl = _apply_norm(cfg, params["final_norm"], x_out[:, -1:, :])
+            head = params["embed"].T if cfg.tie_embeddings \
+                else params["lm_head"]
+            lg = jnp.einsum("bsd,dv->bsv", xl, head,
+                            preferred_element_type=jnp.float32)[:, 0]
+            is_mine = (jnp.equal(stage, n_stages - 1)
+                       & (mb_idx >= 0) & (mb_idx < n_micro))
+            logits_buf = jax.lax.cond(
+                is_mine,
+                lambda b: jax.lax.dynamic_update_slice_in_dim(
+                    b, lg[None], feed, 0),
+                lambda b: b, logits_buf)
+            # belt shift: stage s -> s+1 (last stage's output is dropped
+            # by feeding zeros around the ring into stage 0, which ignores it)
+            nxt = jax.lax.ppermute(
+                x_out, "stage",
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, logits_buf), None
+
+        belt0 = jnp.zeros((mb, seq_len, D), jnp.dtype(cfg.dtype))
+        (_, logits_buf), _ = jax.lax.scan(tick, (belt0, logits_buf),
+                                          jnp.arange(n_ticks))
+        # only the last stage wrote real logits; share them along the belt
+        logits_buf = jax.lax.psum(logits_buf, "stage")
+        return logits_buf.reshape(B, cfg.padded_vocab)
+
+    # --- shard_map wiring --------------------------------------------------
+    def pspec_params(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if "blocks" in names and leaf.ndim >= 1:
+            return P("stage", *([None] * (leaf.ndim - 1)))
+        return P()          # embed/head/final_norm replicated per stage
+
+    def f(params, batch):
+        pspecs = jax.tree_util.tree_map_with_path(pspec_params, params)
+        bspecs = jax.tree.map(
+            lambda a: P("data", *([None] * (a.ndim - 1))), batch)
+        with default_block_q(512):
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(pspecs, bspecs),
+                out_specs=P("data", None),
+                check_rep=False,
+            )(params, batch)
+
+    return f
+
+
+def build_pipeline_prefill_seqchunk(cfg: ArchConfig, *, n_stages: int,
+                                    n_chunks: int, mesh: Mesh,
+                                    seq_len: int):
+    """TeraPipe-style pipeline prefill: microbatches are SEQUENCE CHUNKS of
+    the same requests [arXiv:2102.07988], not batch splits.
+
+    With tiny per-replica batches (the cold-start regime), batch-split
+    GPipe has n_micro <= B_local and drowns in bubbles (utilization
+    n_micro/(n_micro+S-1)).  Chunking the sequence gives n_chunks = S/chunk
+    microbatches regardless of batch: each stage keeps the KV of its local
+    layers for already-seen chunks and attends causally (q_offset +
+    kv_valid_len); the belt carries one (B, chunk, D) block per tick —
+    also ~n_chunks x smaller hidden-state hops.  See EXPERIMENTS.md §Perf.
+    """
+    kind = _uniform_kind(cfg)
+    if kind not in ("attn", "moe"):
+        raise ValueError("seq-chunk pipeline needs attention KV semantics")
+    assert seq_len % n_chunks == 0
+    chunk = seq_len // n_chunks
+    hd = cfg.resolved_head_dim
+
+    def body(params, batch):
+        stage = jax.lax.axis_index("stage")
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        B = (tokens if tokens is not None else embeds).shape[0]
+        D = cfg.d_model
+        blocks = params["blocks"][kind]
+        L_local = jax.tree.leaves(blocks)[0].shape[0]
+
+        def embed_chunk(i):
+            if tokens is not None:
+                sl = jax.lax.dynamic_slice_in_dim(tokens, i * chunk, chunk, 1)
+                return jnp.take(params["embed"], sl, axis=0)
+            return jax.lax.dynamic_slice_in_dim(embeds, i * chunk, chunk, 1)
+
+        n_ticks = n_chunks + n_stages - 1
+        logits_buf = jnp.zeros((B, cfg.padded_vocab), jnp.float32)
+        kv0 = jnp.zeros((L_local, 2, B, seq_len, cfg.n_kv_heads, hd),
+                        jnp.dtype(cfg.dtype))
+
+        def tick(carry, t):
+            belt, kv, logits_buf = carry
+            ci = jnp.clip(t - stage, 0, n_chunks - 1)     # chunk index here
+            x_in = jnp.where(jnp.equal(stage, 0), embed_chunk(ci), belt)
+            q_off = ci * chunk
+            positions = q_off + jnp.broadcast_to(jnp.arange(chunk)[None, :],
+                                                 (B, chunk))
+            if cfg.mrope:  # text-like stub stream: t=h=w position ids
+                positions = jnp.broadcast_to(positions[..., None],
+                                             (B, chunk, 3))
+
+            def layer(x, per):
+                p_l, kv_l = per
+                from repro.models.transformer import (_apply_norm, _ACTS,
+                                                      _apply_mlp,
+                                                      _project_qkv, _rope)
+                from repro.models import attention as attn_lib
+                from repro.models import moe as moe_lib
+                h = _apply_norm(cfg, p_l["ln1"], x)
+                q, k, v = _project_qkv(cfg, p_l, h)
+                q = _rope(cfg, q, positions)
+                k = _rope(cfg, k, positions)
+                kv_l = jax.lax.dynamic_update_slice(
+                    kv_l, jnp.stack([k, v]), (0, 0, q_off, 0, 0))
+                # causal over [0, q_off + chunk): prefix chunks full,
+                # current chunk causal — one blocked pass over the buffer
+                o = attn_lib.finalize_partial(
+                    attn_lib.attention_partial(
+                        q, kv_l[0], kv_l[1], causal=True, window=0,
+                        q_offset=q_off, k_offset=0,
+                        kv_valid_len=q_off + chunk,
+                        block_k=max(chunk, 1024)), q.dtype)
+                o = o.reshape(B, chunk, -1) @ p_l["wo"]
+                x = x + o
+                h2 = _apply_norm(cfg, p_l["ln2"], x)
+                if "router" in p_l["mlp"]:
+                    y, _ = moe_lib.moe_mlp(cfg, p_l["mlp"], h2,
+                                           _ACTS[cfg.act])
+                else:
+                    y = _apply_mlp(cfg, p_l["mlp"], h2)
+                return x + y, kv_l
+
+            x_out, kv = jax.lax.scan(layer, x_in, (blocks, kv))
+            # last stage, last chunk: final norm + last-token unembed
+            xl = _apply_norm(cfg, params["final_norm"], x_out[:, -1:, :])
+            head = params["embed"].T if cfg.tie_embeddings \
+                else params["lm_head"]
+            lg = jnp.einsum("bsd,dv->bsv", xl, head,
+                            preferred_element_type=jnp.float32)[:, 0]
+            is_last = (jnp.equal(stage, n_stages - 1)
+                       & jnp.equal(t - stage, n_chunks - 1))
+            logits_buf = jnp.where(is_last, lg, logits_buf)
+            nxt = jax.lax.ppermute(
+                x_out, "stage",
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, kv, logits_buf), None
+
+        belt0 = jnp.zeros((B, chunk, D), jnp.dtype(cfg.dtype))
+        (_, _, logits_buf), _ = jax.lax.scan(
+            tick, (belt0, kv0, logits_buf), jnp.arange(n_ticks))
+        logits_buf = jax.lax.psum(logits_buf, "stage")
+        return logits_buf
+
+    def pspec_params(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if "blocks" in names and leaf.ndim >= 1:
+            return P("stage", *([None] * (leaf.ndim - 1)))
+        return P()
+
+    def f(params, batch):
+        pspecs = jax.tree_util.tree_map_with_path(pspec_params, params)
+        bspecs = jax.tree.map(
+            lambda a: P("data", *([None] * (a.ndim - 1))), batch)
+        return shard_map(body, mesh=mesh, in_specs=(pspecs, bspecs),
+                         out_specs=P("data", None), check_rep=False,
+                         )(params, batch)
+
+    return f
+
+
+def build_pipeline_cell(cfg: ArchConfig, shape: ShapeConfig, *,
+                        total_chips: int = 256, n_micro: Optional[int] = None,
+                        seq_chunk: bool = False) -> Tuple[Any, tuple]:
+    """Dry-run entry: returns (jitted fn, arg structs) for the pipeline
+    prefill of one (arch x shape) cell."""
+    if shape.kind != "prefill":
+        raise ValueError("pipeline lowering targets the prefill (TTFT) step")
+    n_stages = pipeline_stages_for(cfg.n_layers)
+    B = shape.global_batch
+    n_data = total_chips // n_stages
+    while n_data > 1 and B % n_data != 0:
+        n_data //= 2        # idle replicas rather than unshardable batch
+    mesh = make_pipeline_mesh(n_stages, total=n_data * n_stages)
+    n_micro = n_micro or max(2, min(8, B // max(1, n_data)))
+
+    params_struct = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0),
+                                        jnp.bfloat16))
+    if cfg.family in ("audio", "vlm"):
+        batch_struct = {"embeds": jax.ShapeDtypeStruct(
+            (B, shape.seq_len, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch_struct = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len),
+                                                       jnp.int32)}
+
+    if seq_chunk:
+        n_chunks = max(n_stages, 8)
+        f = build_pipeline_prefill_seqchunk(
+            cfg, n_stages=n_stages, n_chunks=n_chunks, mesh=mesh,
+            seq_len=shape.seq_len)
+    else:
+        f = build_pipeline_prefill(cfg, n_stages=n_stages, n_micro=n_micro,
+                                   mesh=mesh, seq_len=shape.seq_len)
+
+    def pspec_params(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if "blocks" in names and leaf.ndim >= 1:
+            return P("stage", *([None] * (leaf.ndim - 1)))
+        return P()
+
+    pshard = jax.tree_util.tree_map_with_path(
+        lambda pa, l: NamedSharding(mesh, pspec_params(pa, l)), params_struct)
+    bshard = jax.tree.map(
+        lambda a: NamedSharding(mesh, P("data", *([None] * (a.ndim - 1)))),
+        batch_struct)
+    fn = jax.jit(f, in_shardings=(pshard, bshard),
+                 out_shardings=NamedSharding(mesh, P("data", None)))
+    return fn, (params_struct, batch_struct)

@@ -1,0 +1,191 @@
+"""Sharding rules (DESIGN.md §4).
+
+Scheme (works for every assigned arch — no head-count divisibility traps):
+
+  * activations: batch over ('pod','data'), sequence over 'model'
+                 (sequence/context parallelism);
+  * weights: FSDP/ZeRO-3-style — each >=2D leaf shards its largest
+             mesh-divisible dim over ('data','model') [+'pod' replication],
+             gathered at use by SPMD;  embedding/lm_head shard the vocab dim;
+  * KV caches: batch over ('pod','data'), cache-sequence over 'model'
+               (decode attention becomes sequence-parallel flash-decode with
+               a tiny logsumexp all-reduce);
+  * SSM/LRU states: batch over ('pod','data'), heads/width over 'model';
+  * optimizer state: same as the parameter it tracks (ZeRO).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axes
+
+
+def _axsize(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_leaf_spec(shape: Tuple[int, ...], mesh: Mesh,
+                    weight_axes: Tuple[str, ...],
+                    skip_leading: int = 0) -> P:
+    """Shard the largest dim (after ``skip_leading``) divisible by the
+    weight-axis product; fall back to any dim divisible by 'model' alone;
+    else replicate."""
+    want = _axsize(mesh, weight_axes)
+    dims = list(range(skip_leading, len(shape)))
+    # largest first
+    for d in sorted(dims, key=lambda i: -shape[i]):
+        if shape[d] % want == 0 and shape[d] >= want:
+            spec = [None] * len(shape)
+            spec[d] = weight_axes if len(weight_axes) > 1 else weight_axes[0]
+            return P(*spec)
+    if "model" in mesh.axis_names:
+        m = mesh.shape["model"]
+        for d in sorted(dims, key=lambda i: -shape[i]):
+            if shape[d] % m == 0 and shape[d] >= m:
+                spec = [None] * len(shape)
+                spec[d] = "model"
+                return P(*spec)
+    return P()
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh,
+                mode: str = "fsdp") -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (a pytree of
+    ShapeDtypeStruct or arrays).
+
+    mode='fsdp'      — weights over ('data','model') (training / big archs)
+    mode='replicated'— weights replicated (per-replica serving after the
+                       PipeBoost strategy switch)
+    mode='model'     — weights over 'model' only (serving TP-ish storage)
+    """
+    if mode == "replicated":
+        return jax.tree.map(lambda a: P(), params_shape)
+
+    if mode == "2dtp":
+        # serving 2-D tensor parallelism: every block weight shards its
+        # input dim over 'data' and output dim over 'model'; batch is
+        # replicated.  Weight-resident decode: only activation-sized psums
+        # cross the wire (EXPERIMENTS.md §Perf decode hillclimb).
+        d_ax, m_ax = "data", "model"
+
+        def rule2d(path, leaf):
+            shape = leaf.shape
+            names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            skip = 1 if "blocks" in names else 0
+            if "embed" in names and leaf.ndim == 2:
+                spec: list = [None, None]
+                if shape[0] % mesh.shape[m_ax] == 0:
+                    spec[0] = m_ax          # vocab over model
+                if shape[1] % mesh.shape[d_ax] == 0:
+                    spec[1] = d_ax          # d_model over data
+                return P(*spec)
+            if "lm_head" in names and leaf.ndim == 2:
+                spec = [None, None]
+                if shape[0] % mesh.shape[d_ax] == 0:
+                    spec[0] = d_ax
+                if shape[1] % mesh.shape[m_ax] == 0:
+                    spec[1] = m_ax
+                return P(*spec)
+            if leaf.ndim < 2 + skip:
+                return P()
+            spec = [None] * leaf.ndim
+            if shape[-2] % mesh.shape[d_ax] == 0:
+                spec[-2] = d_ax
+            if shape[-1] % mesh.shape[m_ax] == 0:
+                spec[-1] = m_ax
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(rule2d, params_shape)
+
+    waxes: Tuple[str, ...] = ("data", "model") if mode == "fsdp" else ("model",)
+    waxes = tuple(a for a in waxes if a in mesh.axis_names)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        is_blocks = "blocks" in names
+        skip = 1 if is_blocks else 0       # stacked layer dim never sharded
+        if "embed" in names or "lm_head" in names:
+            # shard the vocab dim (padded to %256) — biggest win for tied LMs
+            vdim = 0 if "embed" in names else 1
+            if shape[vdim] % _axsize(mesh, waxes) == 0:
+                spec = [None] * len(shape)
+                spec[vdim] = waxes if len(waxes) > 1 else waxes[0]
+                return P(*spec)
+        if leaf.ndim <= 1 + skip:          # norms / biases / scalars
+            return P()
+        return shard_leaf_spec(shape, mesh, waxes, skip_leading=skip)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ArchConfig, batch_shape, mesh: Mesh,
+                shard_seq: bool = True, dp="__auto__") -> Any:
+    """tokens/labels (B, S) -> P(dp, 'model'); embeds (B, S, D);
+    positions (B, S[, 3])."""
+    if dp == "__auto__":
+        dpa = data_axes(mesh)
+        dp = dpa if len(dpa) > 1 else (dpa[0] if dpa else None)
+    seq = "model" if (shard_seq and "model" in mesh.axis_names) else None
+
+    def rule(leaf):
+        nd = leaf.ndim
+        if nd == 1:
+            return P(dp)
+        if nd == 2:
+            return P(dp, seq)
+        return P(dp, seq, *([None] * (nd - 2)))
+
+    return jax.tree.map(rule, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, mesh: Mesh,
+                dp="__auto__") -> Any:
+    """KV/state cache specs: (L, B, C, kv, hd) -> batch over dp, C over
+    'model'; ssm/rec states shard heads/width over 'model'."""
+    if dp == "__auto__":
+        dpa = data_axes(mesh)
+        dp = dpa if len(dpa) > 1 else (dpa[0] if dpa else None)
+    m = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape["model"] if m else 1
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if "pos" in names:
+            return P()
+        shape = leaf.shape
+        if "attn" in names:        # (L, B, C, kv, hd)
+            cspec = m if (m and shape[2] % msize == 0) else None
+            return P(None, dp, cspec, None, None)
+        if "conv" in names:        # (L, B, K-1, ch)
+            cspec = m if (m and shape[3] % msize == 0) else None
+            return P(None, dp, None, cspec)
+        if "state" in names:       # (L, B, H, P, N) ssm state
+            hspec = m if (m and shape[2] % msize == 0) else None
+            return P(None, dp, hspec, None, None)
+        if "h" in names:           # (L, B, W) rglru state
+            wspec = m if (m and shape[2] % msize == 0) else None
+            return P(None, dp, wspec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs(param_spec_tree) -> Any:
+    """Optimizer m/v shard like their parameters (ZeRO)."""
+    return param_spec_tree

@@ -1,0 +1,106 @@
+"""Flash-decode attention — Pallas TPU kernel.
+
+One new query token against a long KV cache (the ``decode_32k`` /
+``long_500k`` hot loop).  Split-K over the cache: grid (B, Hq, nk) with the
+cache-block dimension innermost/sequential; online-logsumexp partials merge
+in VMEM scratch.  Per-batch ``lens`` (valid cache entries — continuous
+batching gives every slot its own length) is prefetched as a scalar so the
+mask needs no extra HBM traffic.
+
+Layouts: q (B, Hq, d); k/v (B, Hkv, C, d); lens (B,) int32 -> out (B, Hq, d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, block_k: int,
+                   n_k: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, d) row
+    k = k_ref[0, 0].astype(jnp.float32)                  # (Bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, Bk)
+    valid = lens_ref[b]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = k_pos < valid
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lens: jnp.ndarray, *, scale: Optional[float] = None,
+                     block_k: int = 512,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d)."""
+    B, Hq, d = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_k = min(block_k, C)
+    pad = (-C) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_k = (C + pad) // block_k
+    q4 = q[:, :, None, :]                                 # (B, Hq, 1, d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, n_k=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ki, lens: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ki, lens: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, ki, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, d), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), q4, k, v)
+    return out

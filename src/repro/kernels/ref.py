@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each reference is the naive O(everything-in-memory) math — no tiling, no
+online softmax — so a kernel bug cannot be hidden by shared structure.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                        scale=None):
+    """q: (B, Hq, Sq, d); k/v: (B, Hkv, Sk, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lens, *, scale=None):
+    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d)."""
+    B, Hq, d = q.shape
+    _, Hkv, C, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhcd->bhc", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    mask = jnp.arange(C)[None, :] < lens[:, None]          # (B, C)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    return jnp.einsum("bhc,bhcd->bhd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential recurrent oracle.  x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    Bm/Cm: (B,S,N) -> (y (B,S,H,P), state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, t):
+        xt = x[:, t].astype(f32)                   # (B,H,P)
+        dtt = dt[:, t].astype(f32)                 # (B,H)
+        bt = Bm[:, t].astype(f32)                  # (B,N)
+        ct = Cm[:, t].astype(f32)
+        dA = jnp.exp(dtt * A)                      # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((Bsz, H, P, N), f32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)     # (B,S,H,P)
+    return y, state
+
+
+def rglru_scan_ref(log_a, bx, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle. log_a/bx: (B,S,W) -> (h_seq (B,S,W), h_T (B,W))."""
+    B, S, W = log_a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        h = jnp.exp(log_a[:, t].astype(jnp.float32)) * h \
+            + bx[:, t].astype(jnp.float32)
+        return h, h
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(log_a.dtype), h
+
+
+def lora_merge_ref(W, A, B, scale):
+    delta = jnp.einsum("ldr,lro->ldo", A.astype(jnp.float32),
+                       B.astype(jnp.float32))
+    return (W.astype(jnp.float32) + scale * delta).astype(W.dtype)

@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init.  Everything else follows.
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                                cell_is_applicable, get_arch)
+from repro.distributed.context import ShardingPolicy, use_policy
+from repro.core import analytic
+from repro.distributed import shardings as shd
+from repro.launch import rooflines as rf
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import transformer
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import init_train_state, make_train_step
+
+"""Multi-pod dry-run driver (deliverable (e)).
+
+For every (arch x shape x mesh) cell:
+  1. build ShapeDtypeStruct inputs (no allocation) + NamedShardings,
+  2. ``jit(step).lower(...).compile()`` against the production mesh,
+  3. record memory_analysis / cost_analysis / collective schedule,
+  4. derive the three roofline terms (depth-extrapolated; see rooflines.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                batch_override: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    f = jnp.bfloat16
+    if shape.kind == "train":
+        if cfg.family in ("audio", "vlm"):
+            specs = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.mrope:
+                specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family in ("audio", "vlm"):
+            specs = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f)}
+            if cfg.mrope:
+                specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    if cfg.family == "vlm":
+        specs = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), f),
+                 "positions": jax.ShapeDtypeStruct((B, 1, 3), jnp.int32)}
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def _struct(tree):
+    return jax.eval_shape(lambda: tree) if not callable(tree) else jax.eval_shape(tree)
+
+
+def cell_policy(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                params_mode: str = "fsdp") -> ShardingPolicy:
+    B = shape.global_batch
+    dp = data_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    dp_eff = dp if (dp_total and B % dp_total == 0) else ()
+    if params_mode == "2dtp":
+        dp_eff = ()   # 2-D TP: batch replicated, 'data' is a weight axis
+    seq = "model" if shape.kind != "decode" else None
+    vocab = "model" if shape.kind == "decode" else None
+    ff = "model" if shape.kind == "decode" else None
+    return ShardingPolicy(mesh, dp_axes=dp_eff, seq_axis=seq,
+                          vocab_axis=vocab, ff_axis=ff)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               unroll: int = 1, params_mode: str = "fsdp",
+               batch_override: Optional[int] = None) -> Tuple[Any, tuple, Any]:
+    """Returns (jitted_fn, arg_structs, out_shardings_info)."""
+    B = batch_override or shape.global_batch
+    pol = cell_policy(cfg, shape, mesh, params_mode)
+    batch_struct = input_specs(cfg, shape, batch_override=batch_override)
+    batch_spec = shd.batch_specs(cfg, batch_struct, mesh,
+                                 shard_seq=(shape.kind != "decode"),
+                                 dp=pol.dp)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+        pspec = shd.param_specs(cfg, state_struct.params, mesh, mode="fsdp")
+        ospec = type(state_struct.opt)(P(), pspec, pspec)
+        sspec = type(state_struct)(pspec, ospec)
+        step = make_train_step(cfg, opt_cfg, remat=True, unroll=unroll,
+                               grad_compression=os.environ.get(
+                                   "REPRO_GRAD_COMPRESSION", "none"))
+        fn = jax.jit(
+            step,
+            in_shardings=(shd.named(mesh, sspec), shd.named(mesh, batch_spec)),
+            out_shardings=(shd.named(mesh, sspec), None),
+            donate_argnums=(0,),
+        )
+        return fn, (state_struct, batch_struct), sspec
+
+    params_struct = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0),
+                                        jnp.bfloat16))
+    pspec = shd.param_specs(cfg, params_struct, mesh, mode=params_mode)
+
+    if shape.kind == "prefill":
+        def fn_(params, batch):
+            return transformer.forward(cfg, params, batch, mode="prefill",
+                                       max_len=shape.seq_len, unroll=unroll)
+        with use_policy(pol):
+            logits_cache_struct = jax.eval_shape(fn_, params_struct,
+                                                 batch_struct)
+        cspec = shd.cache_specs(cfg, logits_cache_struct[1], mesh, dp=pol.dp)
+        out_sh = (NamedSharding(mesh, P(pol.dp, None)),
+                  shd.named(mesh, cspec))
+        fn = jax.jit(fn_,
+                     in_shardings=(shd.named(mesh, pspec),
+                                   shd.named(mesh, batch_spec)),
+                     out_shardings=out_sh)
+        return fn, (params_struct, batch_struct), pspec
+
+    # decode
+    cache_struct = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, shape.seq_len, jnp.bfloat16))
+    cache_struct = dict(cache_struct)
+    cache_struct["pos"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cspec = shd.cache_specs(cfg, cache_struct, mesh, dp=pol.dp)
+
+    def fn_(params, batch, cache):
+        return transformer.decode_step(cfg, params, batch, cache,
+                                       unroll=unroll)
+
+    vshard = "model" if cfg.padded_vocab % mesh.shape["model"] == 0 else None
+    logits_sh = NamedSharding(mesh, P(pol.dp, vshard))
+    fn = jax.jit(fn_,
+                 in_shardings=(shd.named(mesh, pspec),
+                               shd.named(mesh, batch_spec),
+                               shd.named(mesh, cspec)),
+                 out_shardings=(logits_sh, shd.named(mesh, cspec)),
+                 donate_argnums=(2,))
+    return fn, (params_struct, batch_struct, cache_struct), pspec
+
+
+def _reduced_depth_cfg(cfg: ArchConfig, mult: int) -> Tuple[ArchConfig, int]:
+    """Depth-reduced config for cost extrapolation; depth = mult x period."""
+    period = len(cfg.block_pattern) or 1
+    L = mult * period
+    return dataclasses.replace(cfg, n_layers=L), L
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             skip_cost: bool = False, pipeline_mode: bool = False,
+             params_mode: str = "fsdp",
+             arch_cfg: Optional[ArchConfig] = None) -> Dict:
+    cfg = arch_cfg or get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    if pipeline_mode:
+        from repro.distributed.pipeline import build_pipeline_cell
+        fn, structs = build_pipeline_cell(
+            cfg, shape, total_chips=n_chips,
+            seq_chunk=bool(os.environ.get("REPRO_PIPE_SEQCHUNK")))
+        lowered = fn.lower(*structs)
+    else:
+        fn, structs, _ = build_cell(cfg, shape, mesh, params_mode=params_mode)
+        with use_policy(cell_policy(cfg, shape, mesh, params_mode)):
+            lowered = fn.lower(*structs)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names),
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+    }
+
+    if pipeline_mode and not skip_cost:
+        # tick-loop body is counted once by cost analysis; scale by ticks.
+        from repro.launch.mesh import pipeline_stages_for
+        n_stages = pipeline_stages_for(cfg.n_layers)
+        seqchunk = bool(os.environ.get("REPRO_PIPE_SEQCHUNK"))
+        n_micro = (max(n_stages, 8) if seqchunk
+                   else max(2, min(8, shape.global_batch
+                                   // max(1, n_chips // n_stages))))
+        n_ticks = n_micro + n_stages - 1
+        coll_once = rf.total_collective_bytes(compiled.as_text())
+        ca = compiled.cost_analysis() or {}
+        # per-tick collective = parsed / (ticks appear once in HLO)
+        coll = float(coll_once) * n_ticks
+        flops_tick = float(ca.get("flops", 0.0)) * n_ticks             * (cfg.n_layers // n_stages)
+        util = n_micro / n_ticks
+        mf = analytic.model_flops(cfg, shape.global_batch, shape.seq_len,
+                                  shape.kind)
+        # analytic per-device compute: useful work / chips / utilization
+        comp_s = (mf / n_chips / rf.PEAK_FLOPS) / util
+        terms = rf.make_terms(comp_s * rf.PEAK_FLOPS,
+                              float(ca.get("bytes accessed", 0.0)) * n_ticks,
+                              coll)
+        result["cost"] = {
+            "pipeline": {"n_stages": n_stages, "n_micro": n_micro,
+                         "n_ticks": n_ticks, "utilization": util,
+                         "seq_chunk": seqchunk},
+            "coll_bytes_per_device": coll,
+            "roofline": terms.to_dict(),
+            "model_flops_total": mf,
+            "model_flops_per_device": mf / n_chips,
+        }
+    if not skip_cost and not pipeline_mode:
+        # depth-extrapolated cost: two unrolled shallow lowerings
+        mults = (2, 4) if (len(cfg.block_pattern) or 1) == 1 else (2, 4)
+        costs = []
+        for mult in mults:
+            c_red, L = _reduced_depth_cfg(cfg, mult)
+            fn_r, structs_r, _ = build_cell(c_red, shape, mesh, unroll=L,
+                                            params_mode=params_mode)
+            with use_policy(cell_policy(c_red, shape, mesh, params_mode)):
+                low_r = fn_r.lower(*structs_r)
+            comp_r = low_r.compile()
+            ca = comp_r.cost_analysis() or {}
+            coll = rf.total_collective_bytes(comp_r.as_text())
+            costs.append({"L": L, "flops": float(ca.get("flops", 0.0)),
+                          "bytes": float(ca.get("bytes accessed", 0.0)),
+                          "coll": float(coll)})
+        L1, L2, Lf = costs[0]["L"], costs[1]["L"], cfg.n_layers
+        flops = rf.extrapolate(costs[0]["flops"], costs[1]["flops"], L1, L2, Lf)
+        bbytes = rf.extrapolate(costs[0]["bytes"], costs[1]["bytes"], L1, L2, Lf)
+        coll = rf.extrapolate(costs[0]["coll"], costs[1]["coll"], L1, L2, Lf)
+        terms = rf.make_terms(flops, bbytes, coll)
+        mf = analytic.model_flops(cfg, shape.global_batch,
+                                  shape.seq_len if shape.kind != "decode" else 1,
+                                  shape.kind)
+        result["cost"] = {
+            "per_layer_points": costs,
+            "hlo_flops_per_device": flops,
+            "hlo_bytes_per_device": bbytes,
+            "coll_bytes_per_device": coll,
+            "roofline": terms.to_dict(),
+            "model_flops_total": mf,
+            "model_flops_per_device": mf / n_chips,
+            "useful_flops_ratio": (mf / n_chips) / flops if flops else 0.0,
+        }
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="lower the PipeBoost pipeline-parallel serve step")
+    ap.add_argument("--params-mode", default="fsdp",
+                    choices=["fsdp", "model", "replicated", "2dtp"],
+                    help="weight sharding strategy (serving TP = 'model')")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        from repro.configs.base import cells as cell_list
+        cells = [(a, s) for a, s, ok, _ in cell_list() if ok]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multipod' if mp else 'singlepod'}" + \
+                ("__pipeline" if args.pipeline else "") + \
+                ("_seqchunk" if (args.pipeline and
+                                 os.environ.get("REPRO_PIPE_SEQCHUNK"))
+                 else "") + \
+                (f"__{args.params_mode}" if args.params_mode != "fsdp" else "")
+            try:
+                res = run_cell(arch, shape, multi_pod=mp,
+                               skip_cost=args.skip_cost,
+                               pipeline_mode=args.pipeline,
+                               params_mode=args.params_mode)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+                if "skipped" in res:
+                    print(f"[SKIP] {tag}: {res['skipped']}")
+                    continue
+                peak = res["memory"]["peak_per_device"] / 2**30
+                line = f"[OK]   {tag}: compile={res['compile_s']}s peak/dev={peak:.2f}GiB"
+                if "cost" in res:
+                    r = res["cost"]["roofline"]
+                    line += (f" dom={r['dominant']}"
+                             f" c={r['compute_s']*1e3:.2f}ms"
+                             f" m={r['memory_s']*1e3:.2f}ms"
+                             f" n={r['collective_s']*1e3:.2f}ms")
+                print(line, flush=True)
+            except Exception as e:  # record failures, keep sweeping
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                with open(os.path.join(args.out, tag + ".err"), "w") as f:
+                    f.write(traceback.format_exc())
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

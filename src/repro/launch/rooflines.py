@@ -1,0 +1,119 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (EXPERIMENTS.md §Roofline), per device (SPMD programs are per-device):
+    compute    = HLO_FLOPs / peak_FLOPs            [s]
+    memory     = HLO_bytes / HBM_bw                [s]
+    collective = collective_bytes / link_bw        [s]
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-provided).
+
+XLA's ``cost_analysis`` counts a while-loop (lax.scan) body ONCE, so raw
+numbers from a scanned-layer-stack lowering undercount by ~n_layers.  The
+dry-run therefore lowers two depth-reduced *unrolled* variants (L1, L2) and
+linearly extrapolates:  m(L) = m(L1) + (m(L2)-m(L1)) / (L2-L1) * (L-L1).
+Exact for uniform stacks; ≤3% bias for the 26-layer hybrid (documented).
+Collective bytes are parsed from the post-SPMD optimized HLO the same way.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) in an HLO module.
+
+    all-reduce is charged 2x (ring RS+AG equivalent bytes on the wire).
+    ``*-start`` async forms are counted once (the matching ``*-done`` carries
+    no shape of its own in post-opt HLO).
+    """
+    out: Dict[str, int] = {"all-gather": 0, "all-reduce": 0,
+                           "reduce-scatter": 0, "all-to-all": 0,
+                           "collective-permute": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] += b
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())
+
+
+@dataclass
+class RooflineTerms:
+    flops: float               # per device
+    bytes_accessed: float      # per device (HBM proxy)
+    coll_bytes: float          # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        # optimistic perfectly-overlapped lower bound = max term
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {"flops": self.flops, "bytes": self.bytes_accessed,
+                "coll_bytes": self.coll_bytes, "compute_s": self.compute_s,
+                "memory_s": self.memory_s, "collective_s": self.collective_s,
+                "dominant": self.dominant}
+
+
+def make_terms(flops: float, bytes_accessed: float,
+               coll_bytes: float) -> RooflineTerms:
+    return RooflineTerms(
+        flops=flops, bytes_accessed=bytes_accessed, coll_bytes=coll_bytes,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+    )
+
+
+def extrapolate(m1: float, m2: float, l1: int, l2: int, l_full: int) -> float:
+    """Linear-in-depth extrapolation of a cost metric."""
+    per_layer = (m2 - m1) / max(l2 - l1, 1)
+    return max(0.0, m1 + per_layer * (l_full - l1))

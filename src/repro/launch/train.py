@@ -1,0 +1,122 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        [--steps N] [--reduced] [--ckpt-dir DIR] [--resume] \
+        [--accum K] [--grad-compression bf16]
+
+On a real TPU slice this initializes jax.distributed (one process per host),
+builds the production mesh over the global device set, and shards per
+repro/distributed/shardings.py.  On CPU (this container) it runs the same
+code over the local device(s) with a degenerate mesh — the point is that
+the program text is identical at every scale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.distributed import shardings as shd
+from repro.distributed.context import ShardingPolicy, use_policy
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer
+from repro.training.checkpoint import Checkpointer
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config (default on cpu backend)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16"])
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires >=256 devices)")
+    ap.add_argument("--distributed-init", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args(argv)
+
+    if args.distributed_init:
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    on_cpu = jax.default_backend() == "cpu"
+    if args.reduced or on_cpu:
+        cfg = cfg.reduced()
+    dtype = jnp.float32 if on_cpu else jnp.bfloat16
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    policy = ShardingPolicy(mesh, dp_axes=("data",), seq_axis="model")
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} "
+          f"({cfg.param_count()/1e6:.1f}M params)  backend: "
+          f"{jax.default_backend()}")
+
+    opt = AdamWConfig(lr=1e-3, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    state = init_train_state(cfg, jax.random.PRNGKey(0), dtype)
+    pspec = shd.param_specs(cfg, state.params, mesh, mode="fsdp")
+    from jax.sharding import PartitionSpec as P
+    sspec = type(state)(pspec, type(state.opt)(P(), pspec, pspec))
+    state = jax.device_put(state, shd.named(mesh, sspec))
+
+    step_fn = jax.jit(
+        make_train_step(cfg, opt, remat=not on_cpu, accum=args.accum,
+                        grad_compression=args.grad_compression),
+        donate_argnums=(0,))
+
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                     batch_size=args.batch, seed=0,
+                     rank=jax.process_index(), world=jax.process_count())
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ck and args.resume and ck.latest_step() is not None:
+        state, extra = ck.restore(state, shardings=shd.named(mesh, sspec))
+        ds.restore(extra["data"])
+        start = extra["step"]
+        print(f"resumed from step {start}")
+
+    bspec = None
+    t0 = time.time()
+    with use_policy(policy):
+        for step in range(start, args.steps):
+            b = ds.next_batch()
+            if bspec is None:
+                bspec = shd.named(mesh, shd.batch_specs(cfg, b, mesh))
+            b = jax.device_put({k: jnp.asarray(v) for k, v in b.items()},
+                               bspec)
+            state, m = step_fn(state, b)
+            if (step + 1) % 10 == 0 or step + 1 == args.steps:
+                dt = (time.time() - t0) / (step + 1 - start)
+                print(f"step {step+1:5d} loss {float(m['loss']):.4f} "
+                      f"lr {float(m['lr']):.2e} "
+                      f"gnorm {float(m['grad_norm']):.2f} "
+                      f"({dt:.2f}s/step)")
+            if ck and (step + 1) % args.ckpt_every == 0:
+                ck.save(step + 1, state,
+                        extra={"data": ds.state(), "step": step + 1},
+                        async_=True)
+    if ck:
+        ck.save(args.steps, state,
+                extra={"data": ds.state(), "step": args.steps})
+        ck.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.lora.adapters import (LoRAAdapter, init_lora, lora_bytes,
+                                 merge_lora, unmerge_lora)
+
+__all__ = ["LoRAAdapter", "init_lora", "merge_lora", "unmerge_lora",
+           "lora_bytes"]

@@ -1,0 +1,119 @@
+"""LoRA adapters over the stacked-parameter model zoo.
+
+Adapters target the attention projections (wq, wk, wv, wo) of every
+attention-bearing layer, matching the paper's merged-LoRA serving path
+(§4.3.2): ``W' = W + (alpha/r) * A @ B``.  Merging/unmerging are exact
+inverses (up to fp accumulation), enabling the engine's epoch-based adapter
+switching.  The Pallas kernel ``repro.kernels.lora_merge`` performs the same
+update as a fused VMEM-tiled pass on TPU; this module is the jnp path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+TARGETS = ("wq", "wk", "wv", "wo")
+
+
+@dataclass
+class LoRAAdapter:
+    name: str
+    rank: int
+    alpha: float
+    # blocks[kind][target] = {"A": (L, d_in, r), "B": (L, r, d_out)}
+    blocks: Dict[str, Dict[str, Dict[str, jnp.ndarray]]]
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+def _attn_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
+    D, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": (D, cfg.n_heads * hd),
+        "wk": (D, cfg.n_kv_heads * hd),
+        "wv": (D, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, D),
+    }
+
+
+def init_lora(key, cfg: ArchConfig, rank: int, *, alpha: float = None,
+              name: str = "adapter", dtype=jnp.float32) -> LoRAAdapter:
+    alpha = alpha if alpha is not None else 2.0 * rank
+    dims = _attn_dims(cfg)
+    kinds = {}
+    counts: Dict[str, int] = {}
+    for k in cfg.layer_kinds():
+        counts[k] = counts.get(k, 0) + 1
+    blocks: Dict[str, Any] = {}
+    for kind in ("attn", "moe"):
+        if kind not in counts:
+            continue
+        L = counts[kind]
+        tgt = {}
+        for t, (din, dout) in dims.items():
+            ka, kb = jax.random.split(jax.random.fold_in(key, hash((kind, t)) % 2**31))
+            tgt[t] = {
+                # A ~ N(0, 1/din), B = 0 (standard LoRA init)
+                "A": jax.vmap(lambda k_: dense_init(k_, (din, rank), dtype))(
+                    jax.random.split(ka, L)),
+                "B": jnp.zeros((L, rank, dout), dtype),
+            }
+        blocks[kind] = tgt
+    return LoRAAdapter(name, rank, alpha, blocks)
+
+
+def randomize_lora(key, adapter: LoRAAdapter) -> LoRAAdapter:
+    """Give B non-zero values (tests / distinct-adapter simulations)."""
+    new_blocks = {}
+    for kind, tgts in adapter.blocks.items():
+        new_blocks[kind] = {}
+        for t, ab in tgts.items():
+            kb = jax.random.fold_in(key, hash((kind, t, "B")) % 2**31)
+            new_blocks[kind][t] = {
+                "A": ab["A"],
+                "B": jax.random.normal(kb, ab["B"].shape, ab["B"].dtype) * 0.02,
+            }
+    return LoRAAdapter(adapter.name, adapter.rank, adapter.alpha, new_blocks)
+
+
+def _apply(params, adapter: LoRAAdapter, sign: float, use_kernel: bool):
+    new = jax.tree.map(lambda a: a, params)  # shallow-ish copy of structure
+    for kind, tgts in adapter.blocks.items():
+        blk = dict(new["blocks"][kind])
+        for t, ab in tgts.items():
+            if use_kernel:
+                from repro.kernels import ops as kops
+                blk[t] = kops.lora_merge(blk[t], ab["A"], ab["B"],
+                                         sign * adapter.scale)
+            else:
+                delta = jnp.einsum("ldr,lro->ldo", ab["A"], ab["B"])
+                blk[t] = (blk[t].astype(jnp.float32)
+                          + sign * adapter.scale * delta.astype(jnp.float32)
+                          ).astype(blk[t].dtype)
+        new["blocks"] = dict(new["blocks"])
+        new["blocks"][kind] = blk
+    return new
+
+
+def merge_lora(params, adapter: LoRAAdapter, use_kernel: bool = False):
+    """W' = W + scale * A@B on every target projection."""
+    return _apply(params, adapter, +1.0, use_kernel)
+
+
+def unmerge_lora(params, adapter: LoRAAdapter, use_kernel: bool = False):
+    return _apply(params, adapter, -1.0, use_kernel)
+
+
+def lora_bytes(cfg: ArchConfig, rank: int, dtype_bytes: int = 2) -> int:
+    dims = _attn_dims(cfg)
+    n_attn = sum(1 for k in cfg.layer_kinds() if k in ("attn", "moe"))
+    n = sum(rank * (din + dout) for din, dout in dims.values())
+    return n * n_attn * dtype_bytes

@@ -1,0 +1,150 @@
+"""Core pure-JAX layers: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+All parameters are plain pytrees (nested dicts of jnp arrays); every layer is
+a pure function ``f(params, x, ...)``.  Initializers take an explicit key.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (what most public LMs ship with)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Standard RoPE. x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): the rotary half-dims are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions: (B, S, 3) int32 — per-token (t, h, w) ids
+    produced by the (stubbed) vision frontend; text tokens carry t=h=w.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)                     # (hd/2,)
+    # section id for every rotary frequency slot
+    sec_id = jnp.concatenate([jnp.full((s,), i, dtype=jnp.int32)
+                              for i, s in enumerate(sections)])
+    pos = positions.astype(jnp.float32)             # (B, S, 3)
+    # gather the per-slot position stream: (B, S, hd/2)
+    pos_per_slot = jnp.take(pos, sec_id, axis=-1)
+    ang = pos_per_slot * inv                        # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x, act: str = "silu"):
+    """Gated (SwiGLU-family) MLP: down( act(x@gate) * (x@up) )."""
+    a = _ACTS[act]
+    h = a(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (mamba2 / RG-LRU front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(w, x, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along time.
+
+    w: (K, C); x: (B, S, C); state: (B, K-1, C) carry of previous inputs.
+    Returns (y, new_state) with y: (B, S, C), new_state: (B, K-1, C).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)        # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, x.shape[1]:, :] if K > 1 else state
+    return y, new_state
+
+
+def causal_conv1d_step(w, x_t, state):
+    """Single decode step. x_t: (B, C); state: (B, K-1, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:, :]

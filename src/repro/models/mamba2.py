@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) block — pure JAX [arXiv:2405.21060].
+
+Chunked dual form: within a chunk the token-mixing is a (masked) quadratic
+form in VMEM-friendly tiles; across chunks a tiny (H, P, N) state is carried
+by an associative scan.  This is the TPU-native shape of the algorithm (the
+Pallas kernel ``repro.kernels.ssd_scan`` implements the same math with
+explicit VMEM tiling; this module is the XLA-lowered path and the oracle).
+
+Decode is the O(1)-per-token recurrent form — the reason mamba2 runs the
+``long_500k`` cell with a constant-size cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import causal_conv1d, causal_conv1d_step, dense_init, rms_norm
+
+
+def init_ssm_block(key, cfg, dtype) -> Dict:
+    D = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * N
+    return {
+        "norm": jnp.ones((D,), dtype),
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (K, conv_ch), dtype, scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, D), dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + N]
+    C = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, x, B, C, dt
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD.
+
+    x: (Bt, S, H, P); dt: (Bt, S, H) (already softplus'ed, >0);
+    A: (H,) negative; B, C: (Bt, S, N) [single group broadcast to heads].
+    Returns (y: (Bt, S, H, P), final_state: (Bt, H, P, N)).
+    """
+    Bt, S0, H, P = x.shape
+    N = B.shape[-1]
+    # pad to a chunk multiple: padded steps get dt=0 => decay exp(0)=1 and
+    # zero state contribution, so they are exact no-ops on the recurrence.
+    pad = (-S0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(Bt, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bt, nc, chunk, H).astype(f32)
+    Bc = B.reshape(Bt, nc, chunk, N).astype(f32)
+    Cc = C.reshape(Bt, nc, chunk, N).astype(f32)
+
+    dA = dtc * A.astype(f32)                       # (Bt,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative
+    # --- intra-chunk (quadratic within chunk) ---
+    # L[q, k] = exp(cum_q - cum_k) for q >= k
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (Bt,nc,Q,Q,H)
+    q_idx = jnp.arange(chunk)
+    causal = (q_idx[:, None] >= q_idx[None, :])
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)         # (Bt,nc,Q,Q)
+    G = scores[..., None] * L * dtc[:, :, None, :, :]      # (Bt,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", G, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (Bt,nc,Q,H)
+    S_chunk = jnp.einsum("bckh,bckn,bckhp->bchnp",
+                         decay_to_end * dtc, Bc, xc)       # (Bt,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (Bt,nc,H)
+
+    # --- inter-chunk recurrence: s_c = d_c * s_{c-1} + S_c (associative) ---
+    if initial_state is not None:
+        # fold the initial state in as a virtual chunk 0
+        s0 = jnp.swapaxes(initial_state.astype(f32), -1, -2)[:, None]  # (Bt,1,H,N,P)
+        S_chunk = jnp.concatenate([s0, S_chunk], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((Bt, 1, H), f32), chunk_decay], axis=1)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sa * db[..., None, None] + sb
+
+    d_sc, s_sc = jax.lax.associative_scan(
+        combine, (chunk_decay, S_chunk), axis=1)
+    # state entering chunk c = scanned state of chunk c-1
+    if initial_state is not None:
+        states_in = s_sc[:, :-1] if nc > 0 else s_sc[:, :0]
+        states_in = states_in[:, -nc:] if nc > 0 else states_in
+        final_state = s_sc[:, -1]
+    else:
+        zero = jnp.zeros_like(S_chunk[:, :1])
+        states_in = jnp.concatenate([zero, s_sc[:, :-1]], axis=1)
+        final_state = s_sc[:, -1]
+
+    # --- inter-chunk output: y += (C_q . state_in) * exp(cum_q) ---
+    decay_from_start = jnp.exp(cum)                        # (Bt,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc, states_in)
+    y_inter = y_inter * decay_from_start[..., None]
+    y = (y_intra + y_inter).reshape(Bt, S, H, P)[:, :S0]
+    return y.astype(x.dtype), jnp.swapaxes(final_state, -1, -2)  # (Bt,H,P,N)
+
+
+def ssm_block_fwd(cfg, p, x, *, conv_state=None, ssm_state=None):
+    """Full-sequence forward. x: (B, S, D). Returns (y, (conv_state, ssm_state))."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = constrain(h @ p["in_proj"], "ffh")
+    z, xs, B, C, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, new_conv_state = causal_conv1d(p["conv_w"], conv_in, conv_state)
+    conv_out = constrain(jax.nn.silu(conv_out), "ffh")
+    xs = conv_out[..., :di].reshape(*x.shape[:2], H, P)
+    B = conv_out[..., di:di + N]
+    C = conv_out[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm_state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk,
+                                   initial_state=ssm_state)
+    y = y + p["D_skip"].astype(y.dtype)[:, None] * xs
+    y = y.reshape(*x.shape[:2], di)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return constrain(x + out, "act"), (new_conv_state, new_ssm_state)
+
+
+def ssm_block_step(cfg, p, x_t, conv_state, ssm_state):
+    """Single-token decode. x_t: (B, D); states from prefill."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(p["norm"], x_t, cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xs, B, C, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, new_conv_state = causal_conv1d_step(p["conv_w"], conv_in, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :di].reshape(-1, H, P)
+    B = conv_out[..., di:di + N].astype(jnp.float32)
+    C = conv_out[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    # h_new = dA * h + dt * B (outer) x
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B, xs.astype(jnp.float32))
+    new_state = ssm_state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C, new_state).astype(x_t.dtype)
+    y = y + p["D_skip"].astype(y.dtype)[:, None] * xs
+    y = y.reshape(-1, di)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x_t + y @ p["out_proj"], (new_conv_state, new_state)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN — shared + routed top-k, capacity-based dense
+dispatch (GShard-style), pure JAX.
+
+TPU adaptation (DESIGN.md §2): dispatch/combine are dense einsums over a
+capacity-bounded (T, E, C) tensor — MXU-friendly, no data-dependent shapes —
+instead of a GPU-style scatter/grouped-GEMM.  Expert weights are stacked
+(E, ...) so they shard like any other tensor; expert-parallel all-to-all is
+an optional optimization lever (see EXPERIMENTS.md §Perf), not a
+correctness requirement.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import dense_init
+
+
+def init_moe_mlp(key, cfg, dtype) -> Dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if cfg.n_shared_experts:
+        S = cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (S, D, F), dtype),
+            "w_up": dense_init(ks[5], (S, D, F), dtype),
+            "w_down": dense_init(ks[6], (S, F, D), dtype),
+            "gate": dense_init(ks[7], (D, 1), dtype, scale=0.02),
+        }
+    return p
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    cap = int(math.ceil(cfg.capacity_factor * n_tokens * cfg.top_k
+                        / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to VPU-friendly multiple
+
+
+def _token_groups(T: int) -> int:
+    """Token groups = dp x seq shards (from the active sharding policy), so
+    routing, capacity and dispatch stay device-local at scale.  1 (global
+    routing) when undistributed."""
+    from repro.distributed.context import get_policy
+    pol = get_policy()
+    if pol is None:
+        return 1
+    g = pol.token_groups
+    return g if (g > 1 and T % g == 0) else 1
+
+
+def moe_mlp(cfg, p, x, act, *, dropless: bool = False,
+            capacity_factor: float = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar).
+
+    Routing: softmax -> top-k -> renormalize (Qwen/Mixtral convention).
+    Tokens are routed within per-device groups (GShard per-group capacity);
+    tokens over an expert's local capacity are dropped (their routed
+    contribution is zero; shared experts and the residual still serve them).
+
+    ``dropless=True`` (decode path): every expert runs on every token and
+    the top-k mask selects — exact, and nearly free at decode because the
+    step is bound by reading the expert weights regardless.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    if dropless:
+        return _moe_dropless(cfg, p, x, act)
+    G = _token_groups(T)
+    Tg = T // G
+    import dataclasses as _dc
+    cfg_cap = cfg if capacity_factor is None else         _dc.replace(cfg, capacity_factor=capacity_factor)
+    C = moe_capacity(Tg, cfg_cap)
+    xt = constrain(x.reshape(T, D), "tok")
+    xg = xt.reshape(G, Tg, D)                                # dim0 sharded
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (G, Tg, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- per-group capacity assignment: position of each (token, choice)
+    # within its expert's local queue, in token order ----------------------
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)     # (G, Tg, K, E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (G, Tg*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, Tg, K)
+    keep = (pos < C)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    # dispatch: (G, Tg, K, E, C) -> reduce K -> (G, Tg, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)       # (G, Tg, K, C)
+    disp = jnp.einsum("gtke,gtkc->gtec",
+                      onehot * keep[..., None], pos_oh)
+    comb = jnp.einsum("gtke,gtkc->gtec",
+                      onehot * (top_p * keep)[..., None], pos_oh)
+
+    xin = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), xg)
+    h = act(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    eout = jnp.einsum("gecf,efd->gecd", h, p["w_down"])      # (G, E, C, D)
+    y = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), eout)
+    y = constrain(y.reshape(T, D), "tok")
+
+    # --- shared experts (always-on) ---------------------------------------
+    if "shared" in p:
+        sp = p["shared"]
+        hs = act(jnp.einsum("td,sdf->tsf", xt, sp["w_gate"])) * \
+             jnp.einsum("td,sdf->tsf", xt, sp["w_up"])
+        ys = jnp.einsum("tsf,sfd->td", hs, sp["w_down"])
+        sg = jax.nn.sigmoid((xt @ sp["gate"]).astype(jnp.float32))
+        y = y + ys * sg.astype(y.dtype)
+
+    # --- load-balance aux loss (Switch-style) ------------------------------
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))       # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))                # (E,)
+    aux = E * jnp.sum(frac_tokens * frac_probs) / K
+    return y.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def _moe_dropless(cfg, p, x, act) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k MoE: all experts on all tokens, masked combine."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    w = jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32)
+                * top_p[..., None], axis=1)               # (T, E)
+    h = act(jnp.einsum("td,edf->tef", xt, p["w_gate"])) *         jnp.einsum("td,edf->tef", xt, p["w_up"])
+    eout = jnp.einsum("tef,efd->ted", h, p["w_down"])     # (T, E, D)
+    y = jnp.einsum("te,ted->td", w.astype(x.dtype), eout)
+    if "shared" in p:
+        sp = p["shared"]
+        hs = act(jnp.einsum("td,sdf->tsf", xt, sp["w_gate"])) *              jnp.einsum("td,sdf->tsf", xt, sp["w_up"])
+        ys = jnp.einsum("tsf,sfd->td", hs, sp["w_down"])
+        sg = jax.nn.sigmoid((xt @ sp["gate"]).astype(jnp.float32))
+        y = y + ys * sg.astype(y.dtype)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=0)) / K
+    return y.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) — pure JAX
+[arXiv:2402.19427].
+
+Recurrence:  a_t = exp(-c * softplus(Lambda) * r_t),
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with r_t, i_t sigmoid gates.  Full-sequence form uses a log-space
+associative scan (TPU-native: log-depth, no serial loop); decode is O(1).
+
+The surrounding residual block is Griffin's: conv1d front, gated output
+branch, then a GeGLU MLP (built in transformer.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.layers import causal_conv1d, causal_conv1d_step, dense_init
+
+C_CONST = 8.0
+
+
+def init_rec_block(key, cfg, dtype) -> Dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_branch": dense_init(ks[0], (D, W), dtype),
+        "w_x_branch": dense_init(ks[1], (D, W), dtype),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, W), dtype, scale=0.5),
+        "w_rec_gate": dense_init(ks[3], (W, W), dtype),
+        "w_in_gate": dense_init(ks[4], (W, W), dtype),
+        # Lambda init so that a ~ Uniform(0.9, 0.999) at r=1 (Griffin A.2)
+        "Lambda": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, W)) / C_CONST)).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (W, D), dtype),
+    }
+
+
+def _gates(p, x):
+    """log(a_t) and gated input. x: (..., W) conv output (f32)."""
+    r = jax.nn.sigmoid(x @ p["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x @ p["w_in_gate"].astype(jnp.float32))
+    log_a = -C_CONST * jax.nn.softplus(p["Lambda"]) * r       # (..., W) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x)
+    return log_a, gated_x
+
+
+def rglru_scan(log_a, bx, h0: Optional[jnp.ndarray] = None):
+    """h_t = exp(log_a_t) * h_{t-1} + bx_t via associative scan over axis 1.
+
+    log_a, bx: (B, S, W) float32. h0: (B, W) or None.
+    Returns (h_seq: (B, S, W), h_last: (B, W)).
+    """
+    if h0 is not None:
+        # fold h0 in as a virtual step with a=1
+        log_a = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+        bx = jnp.concatenate([h0[:, None, :], bx], axis=1)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rec_block_fwd(cfg, p, x, *, conv_state=None, h0=None):
+    """Temporal-mixing branch of a Griffin recurrent block.
+
+    x: (B, S, D) (already layer-normed by the caller).
+    Returns (y: (B, S, D), (conv_state, h_last)).
+    """
+    gate = constrain(jax.nn.gelu(x @ p["w_gate_branch"]), "ffh")
+    u = constrain(x @ p["w_x_branch"], "ffh")
+    u, new_conv_state = causal_conv1d(p["conv_w"], u, conv_state)
+    uf = u.astype(jnp.float32)
+    log_a, bx = _gates(p, uf)
+    h, h_last = rglru_scan(log_a, bx, h0)
+    h = constrain(h, "ffh")
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, (new_conv_state, h_last)
+
+
+def rec_block_step(cfg, p, x_t, conv_state, h):
+    """Single-token decode. x_t: (B, D); h: (B, W) f32."""
+    gate = jax.nn.gelu(x_t @ p["w_gate_branch"])
+    u = x_t @ p["w_x_branch"]
+    u, new_conv_state = causal_conv1d_step(p["conv_w"], u, conv_state)
+    uf = u.astype(jnp.float32)
+    log_a, bx = _gates(p, uf)
+    h_new = jnp.exp(log_a) * h + bx
+    y = (h_new.astype(x_t.dtype) * gate) @ p["w_out"]
+    return y, (new_conv_state, h_new)

@@ -1,0 +1,193 @@
+"""Serving engine: request lifecycle + continuous batching (Orca-style,
+which the paper adopts) over slot-indexed KV caches, with epoch-based
+LoRA adapter scheduling and PipeBoost cold-start/recovery integration.
+
+Slots: the engine owns one batched cache of ``n_slots``; a new request's
+prefill is computed and written into a free slot while other slots keep
+decoding — requests join/leave the batch at token granularity (continuous
+batching).  Per-slot positions ride in ``cache["pos"]`` (B,).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.adapter_scheduler import EpochSchedulerPolicy
+from repro.models import transformer
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    tokens: np.ndarray                   # prompt (S,)
+    max_new_tokens: int
+    adapter: Optional[str] = None
+    arrival: float = 0.0
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    eos_id: Optional[int] = None
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over the stacked-cache models."""
+
+    def __init__(self, cfg: ArchConfig, params, n_slots: int, max_len: int,
+                 sampler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = transformer.init_cache(cfg, n_slots, max_len,
+                                            jnp.dtype(cfg.dtype))
+        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.active: Dict[int, ServeRequest] = {}     # slot -> request
+        self.free: List[int] = list(range(n_slots))
+        self.sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
+        self._decode = jax.jit(
+            lambda p, t, c: transformer.decode_step(cfg, p, {"tokens": t}, c))
+
+    # ------------------------------------------------------------------
+    def admit(self, req: ServeRequest) -> bool:
+        """Prefill ``req`` into a free slot; False if the batch is full."""
+        if not self.free:
+            return False
+        slot = self.free.pop()
+        req.slot = slot
+        prompt = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        logits, c1 = transformer.forward(self.cfg, self.params,
+                                         {"tokens": prompt}, mode="prefill",
+                                         max_len=self.max_len)
+        self._write_slot(slot, c1)
+        tok = int(np.asarray(self.sampler(logits))[0])
+        req.generated.append(tok)
+        self.active[slot] = req
+        return True
+
+    def _write_slot(self, slot: int, c1: Dict):
+        def write(stack_key: str):
+            if stack_key in c1:
+                for leaf in c1[stack_key]:
+                    self.cache[stack_key][leaf] = \
+                        self.cache[stack_key][leaf].at[:, slot].set(
+                            c1[stack_key][leaf][:, 0])
+        for k in ("attn", "ssm", "rec"):
+            write(k)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(int(c1["pos"][0]))
+
+    def step(self) -> List[ServeRequest]:
+        """One decode step for all active slots; returns finished requests."""
+        if not self.active:
+            return []
+        toks = np.zeros((self.n_slots,), np.int32)
+        for slot, req in self.active.items():
+            toks[slot] = req.generated[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(toks), self.cache)
+        nxt = np.asarray(self.sampler(logits))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            at_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or at_eos:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.free.append(slot)
+        return finished
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+
+class ServingEngine:
+    """Request dispatcher + continuous batcher + adapter epochs.
+
+    ``set_params`` supports the PipeBoost adapter switch (merged weights
+    swapped between epochs) and the post-recovery parameter refresh.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256,
+                 policy: Optional[EpochSchedulerPolicy] = None,
+                 adapter_params: Optional[Dict[str, Any]] = None):
+        self.cfg = cfg
+        self.batcher = ContinuousBatcher(cfg, params, n_slots, max_len)
+        self.policy = policy or EpochSchedulerPolicy()
+        self.policy_state = self.policy.make_state()
+        self.adapter_params = adapter_params or {}
+        self.base_params = params
+        self.active_adapter: Optional[str] = None
+        self.clock = 0.0
+        self.completed: List[ServeRequest] = []
+        self.n_adapter_switches = 0
+
+    def submit(self, req: ServeRequest):
+        from repro.core.adapter_scheduler import Request as PolicyReq
+        req.arrival = self.clock
+        self.policy.enqueue(self.policy_state, _PolicyItem(req))
+
+    def _switch_adapter(self, name: Optional[str]):
+        if name == self.active_adapter:
+            return
+        params = self.base_params if name is None \
+            else self.adapter_params[name]
+        self.batcher.params = params
+        self.batcher._decode = jax.jit(
+            lambda p, t, c: transformer.decode_step(self.cfg, p,
+                                                    {"tokens": t}, c))
+        self.active_adapter = name
+        self.n_adapter_switches += 1
+
+    def run(self, max_steps: int = 10_000) -> List[ServeRequest]:
+        """Drain all queues: admit per the adapter policy, decode until done.
+
+        Epoch barrier: merged-LoRA means a switch swaps the weights for
+        EVERY active slot, so a different adapter is only admitted once the
+        batch has drained (the paper's epoch semantics, Fig. 5).
+        """
+        for _ in range(max_steps):
+            while self.batcher.free:
+                nxt = self.policy.peek_adapter(self.policy_state)
+                if nxt is None:
+                    break
+                nxt_name = None if nxt == "__base__" else nxt
+                if self.batcher.active and nxt_name != self.active_adapter:
+                    break  # drain before switching (epoch barrier)
+                adapter, batch = self.policy.next_batch(self.policy_state)
+                if adapter is None:
+                    break
+                self._switch_adapter(adapter if adapter != "__base__" else None)
+                for item in batch:
+                    ok = self.batcher.admit(item.req)
+                    assert ok
+            if not self.batcher.active:
+                if self.policy.peek_adapter(self.policy_state) is None:
+                    break
+                continue
+            done = self.batcher.step()
+            self.clock += 1.0  # logical step clock
+            for r in done:
+                r.finished_at = self.clock
+                self.completed.append(r)
+        return self.completed
+
+
+class _PolicyItem:
+    """Adapter-scheduler item wrapping a ServeRequest."""
+
+    def __init__(self, req: ServeRequest):
+        self.req = req
+        self.adapter = req.adapter or "__base__"
+        self.arrival = req.arrival
+        self.service = 0.0

@@ -1,0 +1,118 @@
+"""Training substrate: loss, train_step factory (with remat + gradient
+accumulation + optional gradient compression), TrainState.
+
+``make_train_step`` returns a pure jit-able function; distribution is pure
+sharding metadata (repro/distributed), never baked in here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain
+from repro.models import transformer
+from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
+                                      init_opt_state)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=None) -> TrainState:
+    params = transformer.init_params(cfg, key, dtype)
+    return TrainState(params, init_opt_state(params))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ignore_id: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over non-ignored tokens. logits (B,S,V) f32, labels (B,S)."""
+    logits = constrain(logits, "logits")
+    mask = (labels != ignore_id)
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll) / denom, denom.astype(jnp.float32)
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat: bool = True, unroll: int = 1):
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = transformer.forward(cfg, params, batch, mode="train",
+                                          remat=remat, unroll=unroll)
+        ce, n_tok = cross_entropy(logits, batch["labels"])
+        loss = ce + cfg.router_aux_coef * aux
+        return loss, {"ce": ce, "aux": aux, "tokens": n_tok}
+    return loss_fn
+
+
+def compress_grads(grads, method: str):
+    """Gradient compression for the DP all-reduce (DESIGN.md §4: fewer bytes
+    on the wire).  'bf16' casts before the (automatic) all-reduce — with
+    error-feedback left to the caller if used iteratively."""
+    if method == "none":
+        return grads
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    raise ValueError(method)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, accum: int = 1,
+                    grad_compression: str = "none", unroll: int = 1
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    accum > 1 splits the batch into microbatches scanned sequentially
+    (gradient accumulation), bounding activation memory.
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat, unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def micro(carry, mb):
+                (l, ms), g = grad_fn(state.params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 carry[0], g)
+                return (g, carry[1] + l), ms
+
+            B = batch["tokens"].shape[0] if "tokens" in batch else \
+                batch["embeds"].shape[0]
+            assert B % accum == 0, (B, accum)
+            mbs = jax.tree.map(
+                lambda a: a.reshape(accum, B // accum, *a.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (grads, loss_sum), ms = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+            metrics["ce"] = loss  # accumulated mean
+        grads = compress_grads(grads, grad_compression)
+        new_params, new_opt, om = adamw_update(opt_cfg, state.params, grads,
+                                               state.opt)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    loss_fn = make_loss_fn(cfg, remat=False)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

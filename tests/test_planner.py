@@ -1,0 +1,132 @@
+"""Planner unit + property tests (paper §4.2/§4.4 invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import (critical_path_bytes, make_plan,
+                                make_segments, reassign, rotated_load_order,
+                                viable_chain)
+
+
+def test_rotated_order_paper_example():
+    order = rotated_load_order(4)
+    assert order == {0: [0, 1, 2, 3], 1: [1, 2, 3, 0],
+                     2: [2, 3, 0, 1], 3: [3, 0, 1, 2]}
+
+
+def test_first_loads_cover_model():
+    for n in (2, 3, 4, 8, 16):
+        order = rotated_load_order(n)
+        firsts = {order[d][0] for d in range(n)}
+        assert firsts == set(range(n))
+
+
+def test_make_segments_partition():
+    lb = [10, 20, 30, 40, 50, 60, 70, 80]
+    segs = make_segments(lb, 4)
+    assert segs[0].layer_start == 0 and segs[-1].layer_end == len(lb)
+    for a, b in zip(segs, segs[1:]):
+        assert a.layer_end == b.layer_start
+    assert sum(s.bytes for s in segs) == sum(lb)
+
+
+def test_reassign_paper_fig7a():
+    """4 GPUs, GPUs 1&2 crash during loading (paper Fig. 7a)."""
+    plan = make_plan([100] * 8, 4)
+    newp = reassign(plan, {0: [0], 3: [3]}, [0, 3])
+    assert newp.serve_assignment == {0: [0, 1], 3: [2, 3]}
+    # device 0 continues 1,...; device 3 loads 2 next (it already has 3)
+    assert newp.order[0][0] == 1
+    assert newp.order[3][0] == 2
+
+
+def test_viable_chain_prefers_contiguity():
+    plan = make_plan([100] * 4, 4)
+    loaded = {0: [0, 1, 2, 3], 1: [1]}
+    chain = viable_chain(plan, loaded, [0, 1])
+    assert chain == [(0, 0), (0, 1), (0, 2), (0, 3)]  # no hops needed
+
+
+def test_viable_chain_none_when_missing():
+    plan = make_plan([100] * 4, 4)
+    assert viable_chain(plan, {0: [0, 1], 1: [3]}, [0, 1]) is None
+
+
+def test_critical_path_is_1_over_n():
+    lb = [100] * 16
+    plan = make_plan(lb, 4)
+    cp = critical_path_bytes(plan)
+    assert all(v == sum(lb) // 4 for v in cp.values())
+
+
+# ---------------------------------------------------------------------------
+# Properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_layers=st.integers(8, 64),
+    n_devices=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_reassign_completes(n_layers, n_devices, seed):
+    """For ANY loading progress and ANY non-empty survivor set, the re-plan
+    covers every segment, spans are contiguous and balanced, and finishing
+    the new orders yields a viable chain."""
+    import random
+    rng = random.Random(seed)
+    lb = [rng.randint(1, 1000) for _ in range(n_layers)]
+    plan = make_plan(lb, n_devices)
+    n_seg = len(plan.segments)
+    # random progress along each device's rotated order
+    loaded = {d: plan.order[d][:rng.randint(0, n_seg)]
+              for d in range(n_devices)}
+    survivors = sorted(rng.sample(range(n_devices),
+                                  rng.randint(1, n_devices)))
+    newp = reassign(plan, loaded, survivors)
+
+    # spans partition 0..n_seg-1 contiguously
+    all_segs = [s for d in survivors for s in newp.serve_assignment[d]]
+    assert sorted(all_segs) == list(range(n_seg))
+    sizes = [len(newp.serve_assignment[d]) for d in survivors]
+    assert max(sizes) - min(sizes) <= 1          # Load Balance
+    for d in survivors:
+        span = newp.serve_assignment[d]
+        assert span == list(range(span[0], span[-1] + 1))  # Layer Contiguity
+
+    # each survivor's order contains exactly its missing segments
+    for d in survivors:
+        have = set(loaded.get(d, ()))
+        assert sorted(newp.order[d] + sorted(have)) == list(range(n_seg))
+
+    # simulate finishing the span loads -> chain must exist
+    done = {d: set(loaded.get(d, ())) for d in survivors}
+    for d in survivors:
+        for s in newp.serve_assignment[d]:
+            done[d].add(s)
+    chain = viable_chain(newp, {d: sorted(v) for d, v in done.items()},
+                         survivors)
+    assert chain is not None
+    assert [s for _, s in chain] == list(range(n_seg))
+    for dev, seg in chain:
+        assert seg in done[dev]
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n_layers=st.integers(4, 80),
+    n_segments=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_segments_balanced(n_layers, n_segments, seed):
+    import random
+    if n_layers < n_segments:
+        return
+    rng = random.Random(seed)
+    lb = [rng.randint(1, 1000) for _ in range(n_layers)]
+    segs = make_segments(lb, n_segments)
+    assert len(segs) == n_segments
+    assert all(s.n_layers >= 1 for s in segs)
+    assert sum(s.bytes for s in segs) == sum(lb)
+    # balance: every segment within (total/n) +/- max single layer
+    target = sum(lb) / n_segments
+    assert max(s.bytes for s in segs) <= target + max(lb)

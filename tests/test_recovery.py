@@ -1,0 +1,95 @@
+"""KV / state reconstruction invariants (paper §4.4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.core.kv_reconstruct import reconstruct_cache
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(21)
+
+
+def _prefill(cfg, params, batch, max_len):
+    return T.forward(cfg, params, batch, mode="prefill", max_len=max_len)
+
+
+def _assert_cache_close(a, b, atol=2e-3):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("arch,layers", [
+    ("qwen3-1.7b", 6), ("mamba2-780m", 6), ("recurrentgemma-2b", 6),
+])
+def test_reconstruction_equals_fresh_prefill(arch, layers):
+    cfg = get_arch(arch).reduced(n_layers=layers)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 20), 0, cfg.vocab_size)}
+    _, fresh = _prefill(cfg, params, batch, 48)
+
+    # wipe a subset of layers' state, reconstruct, compare
+    for missing in ([2], [0, 3], list(range(layers))):
+        has = [i not in missing for i in range(layers)]
+        damaged = jax.tree.map(jnp.copy, fresh)
+        rebuilt, stats = reconstruct_cache(cfg, params, batch, damaged, has,
+                                           max_len=48)
+        _assert_cache_close(rebuilt, fresh)
+        assert stats["full_prefill"] >= len(missing)
+
+
+def test_reconstruction_reuses_kv(dense_cfg=None):
+    """Layers with surviving KV must be recomputed via the Q-only path."""
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=6)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)}
+    _, fresh = _prefill(cfg, params, batch, 32)
+    has = [True, True, False, True, True, True]
+    rebuilt, stats = reconstruct_cache(cfg, params, batch, fresh, has,
+                                       max_len=32)
+    assert stats["kv_reused"] == 2          # layers 0,1 (above stops at 2)
+    assert stats["full_prefill"] == 1       # layer 2
+    assert stats["layers_skipped"] >= 1     # layers 3.. untouched
+    _assert_cache_close(rebuilt, fresh)
+
+
+def test_decode_continues_after_reconstruction():
+    """Decode tokens after reconstruction == decode without any crash."""
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)}
+    lg, cache = _prefill(cfg, params, batch, 32)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    toks = batch["tokens"]
+    # two clean decode steps
+    for _ in range(2):
+        toks = jnp.concatenate([toks, tok[:, None]], 1)
+        lg, cache = T.decode_step(cfg, params, {"tokens": tok}, cache)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    # crash: rebuild everything from the merged sequence (paper Fig. 7b)
+    rebuilt, _ = reconstruct_cache(cfg, params, {"tokens": toks},
+                                   cache, [False] * 4, max_len=32)
+    lg2, _ = T.decode_step(cfg, params, {"tokens": tok}, rebuilt)
+    lg_ref, _ = T.decode_step(cfg, params, {"tokens": tok}, cache)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg_ref),
+                               atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(mask=st.lists(st.booleans(), min_size=4, max_size=4),
+       seed=st.integers(0, 50))
+def test_property_any_mask_reconstructs(mask, seed):
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed), (1, 10),
+                                          0, cfg.vocab_size)}
+    _, fresh = _prefill(cfg, params, batch, 16)
+    rebuilt, _ = reconstruct_cache(cfg, params, batch,
+                                   jax.tree.map(jnp.copy, fresh),
+                                   list(mask), max_len=16)
+    _assert_cache_close(rebuilt, fresh)

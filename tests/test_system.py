@@ -1,0 +1,158 @@
+"""End-to-end behaviour of the PipeBoost system (paper §4 semantics).
+
+These are the paper's claims as executable invariants:
+  * inference can start after each device loads ~1/N of the model;
+  * serving during background loading equals serving fully loaded;
+  * crash + pipeline-parallel recovery is exact (same tokens);
+  * strategy switching is seamless (same tokens before/after);
+  * LoRA: merged adapters serve correctly, epoch switching preserved output.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.engine import EngineError, PipeBoostEngine, generate
+from repro.lora.adapters import init_lora, merge_lora, randomize_lora, unmerge_lora
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=8)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    return cfg, params, batch
+
+
+def test_ready_after_one_round(dense_setup):
+    cfg, params, _ = dense_setup
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    assert not eng.ready
+    eng.load_round()           # each device loads its FIRST segment only
+    assert eng.ready           # 1/N per device suffices (the paper's point)
+    assert not eng.fully_loaded
+
+
+def test_cannot_serve_before_ready(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    with pytest.raises(EngineError):
+        eng.prefill(batch)
+
+
+def test_serving_during_loading_equals_full(dense_setup):
+    cfg, params, batch = dense_setup
+    e1 = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    e1.load_round()
+    early = generate(e1, batch, 8)
+
+    e2 = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    while e2.load_round():
+        pass
+    assert e2.fully_loaded
+    full = generate(e2, batch, 8)
+    np.testing.assert_array_equal(np.asarray(early), np.asarray(full))
+
+
+@pytest.mark.parametrize("arch,layers", [
+    ("qwen3-1.7b", 8), ("mamba2-780m", 8), ("recurrentgemma-2b", 6),
+    ("qwen2-moe-a2.7b", 4),
+])
+def test_crash_recovery_exact(arch, layers):
+    cfg = get_arch(arch).reduced(n_layers=layers)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    e1 = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    e1.load_round()
+    ref = generate(e1, batch, 8)
+    e2 = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    e2.load_round()
+    out = generate(e2, batch, 8, crash_at=4, crash_devices=[1, 2])
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    kinds = [ev for ev, _ in e2.events]
+    assert "crash" in kinds and "recover" in kinds
+
+
+def test_crash_during_loading_reassigns(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    eng.load_next_segment(0)   # only device 0 made progress
+    eng.crash([1, 2])
+    eng.recover()              # re-plan + finish loading on survivors
+    assert eng.ready
+    out = generate(eng, batch, 4)
+    assert out.shape == (2, 4)
+
+
+def test_all_dead_raises(dense_setup):
+    cfg, params, _ = dense_setup
+    eng = PipeBoostEngine(cfg, params, n_devices=2, max_len=64)
+    eng.crash([0, 1])
+    with pytest.raises(EngineError):
+        eng.recover()
+
+
+def test_strategy_switch_is_seamless(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    eng.load_round()
+    logits = eng.prefill(batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [tok]
+    for i in range(6):
+        if i == 3:
+            while eng.load_round():
+                pass
+            assert eng.maybe_switch_strategy(request_rate=100.0)
+            assert eng.strategy == "single"
+        logits = eng.decode(tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+    got = jnp.stack(outs, 1)
+
+    e2 = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    e2.load_round()
+    ref = generate(e2, batch, 7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_lora_merge_serving(dense_setup):
+    cfg, params, batch = dense_setup
+    lora = randomize_lora(jax.random.fold_in(KEY, 5),
+                          init_lora(KEY, cfg, rank=4))
+    eng = PipeBoostEngine(cfg, params, n_devices=2, max_len=64,
+                          adapters={"a": lora})
+    eng.load_round()
+    eng.switch_adapter("a")
+    out_a = generate(eng, batch, 6)
+    # reference: explicit merge
+    merged = merge_lora(params, lora)
+    e2 = PipeBoostEngine(cfg, merged, n_devices=2, max_len=64)
+    e2.load_round()
+    ref = generate(e2, batch, 6)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(ref))
+    # switch back to base == original weights
+    eng2 = PipeBoostEngine(cfg, params, n_devices=2, max_len=64,
+                           adapters={"a": lora})
+    eng2.load_round()
+    eng2.switch_adapter("a")
+    eng2.switch_adapter(None)
+    base = generate(eng2, batch, 6)
+    e3 = PipeBoostEngine(cfg, params, n_devices=2, max_len=64)
+    e3.load_round()
+    np.testing.assert_array_equal(np.asarray(base),
+                                  np.asarray(generate(e3, batch, 6)))
+
+
+def test_merge_unmerge_inverse(dense_setup):
+    cfg, params, _ = dense_setup
+    lora = randomize_lora(jax.random.fold_in(KEY, 6),
+                          init_lora(KEY, cfg, rank=8))
+    back = unmerge_lora(merge_lora(params, lora), lora)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
