@@ -1,0 +1,81 @@
+"""Cluster bench entry: bursty trace -> autoscaled PipeBoost fleet -> JSON.
+
+    PYTHONPATH=src python benchmarks/cluster_bench.py \
+        [--trace wave|poisson|gamma] [--requests 24] [--servers 2] \
+        [--crash-at 4] [--out cluster_metrics.json]
+
+Runs the functional cluster (real reduced models on CPU; the same router
+drives real slices) and writes the full ``ClusterMetrics`` JSON —
+per-request TTFT/TBT, queue-depth timeline, scale/crash events,
+GPU-seconds — so the trajectory is trackable across PRs.  A compact
+CSV summary also goes to stdout in the harness' ``name,us_per_call,derived``
+contract.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                           ClusterRouter, burst_wave_trace, gamma_trace,
+                           poisson_trace)
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+
+
+def make_trace(kind: str, n: int, seed: int):
+    if kind == "wave":
+        return burst_wave_trace(n, base_rate=2.0, wave_rate=16.0,
+                                wave_at=0.5, wave_len=1.0, seed=seed)
+    if kind == "poisson":
+        return poisson_trace(rate=4.0, horizon=n / 4.0, seed=seed)
+    if kind == "gamma":
+        return gamma_trace(rate=4.0, horizon=n / 4.0, burstiness=6.0,
+                           seed=seed)
+    raise SystemExit(f"unknown trace kind {kind!r}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", choices=("wave", "poisson", "gamma"),
+                    default="wave")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="exact count for --trace wave; for poisson/gamma "
+                         "it sets the horizon (count is rate-approximate)")
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument("--max-servers", type=int, default=6)
+    ap.add_argument("--devices", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--crash-at", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="cluster_metrics.json")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2 * args.devices)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(args.trace, args.requests, args.seed)
+    router = ClusterRouter(
+        cfg, params, n_servers=args.servers,
+        ccfg=ClusterConfig(n_devices=args.devices, n_slots=args.slots),
+        autoscaler=Autoscaler(AutoscalerConfig(
+            target_queue_per_server=args.slots,
+            max_servers=args.max_servers)))
+    crash = args.crash_at if args.crash_at >= 0 else None
+    router.run(trace, crash_after_completions=crash,
+               crash_server_id=min(1, args.servers - 1),
+               rejoin_after_ticks=20 if crash is not None else None)
+    s = router.metrics.summary()
+    print("name,us_per_call,derived")
+    for key in ("ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99"):
+        print(f"cluster_{args.trace}_{key},{s[key] * 1e6:.1f},")
+    print(f"cluster_{args.trace}_completed,{s['n_completed']:.0f},"
+          f"of={s['n_requests']:.0f} rerouted={s['n_rerouted']:.0f}")
+    print(f"cluster_{args.trace}_gpu_seconds,{s['gpu_seconds'] * 1e6:.1f},"
+          f"servers_max={s['servers_max']:.0f}")
+    router.metrics.to_json(args.out)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

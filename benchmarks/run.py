@@ -17,6 +17,8 @@ Map (paper artifact -> bench):
   Fig. 15/16         -> bench_recovery_loading
   Fig. 17            -> bench_recovery_inference
   (engine, CPU)      -> bench_engine_functional, bench_kernels
+  (cluster, CPU)     -> bench_cluster_burst (see also cluster_bench.py for
+                        the JSON-emitting trajectory entry)
 """
 from __future__ import annotations
 
@@ -237,6 +239,37 @@ def bench_engine_functional():
          f"full_prefill={stats['reconstruct']['full_prefill']}")
 
 
+def bench_cluster_burst():
+    """Serverless cluster (functional): burst wave over 2 servers with a
+    mid-burst whole-server crash + re-route; TTFT/TBT percentiles."""
+    from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                               ClusterRouter, burst_wave_trace)
+    from repro.models import transformer as T
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    trace = burst_wave_trace(16, base_rate=2.0, wave_rate=16.0, wave_at=0.5,
+                             wave_len=1.0, seed=0)
+    router = ClusterRouter(
+        cfg, params, n_servers=2,
+        ccfg=ClusterConfig(n_devices=2, n_slots=4),
+        autoscaler=Autoscaler(AutoscalerConfig(target_queue_per_server=4,
+                                               max_servers=4)))
+    t0 = time.perf_counter()
+    router.run(trace, crash_after_completions=4, crash_server_id=1,
+               rejoin_after_ticks=20)
+    wall = time.perf_counter() - t0
+    s = router.metrics.summary()
+    emit("cluster_burst_ttft_p50", s["ttft_p50"] * 1e6)
+    emit("cluster_burst_ttft_p99", s["ttft_p99"] * 1e6,
+         f"completed={s['n_completed']:.0f}/{s['n_requests']:.0f} "
+         f"rerouted={s['n_rerouted']:.0f}")
+    emit("cluster_burst_tbt_p50", s["tbt_p50"] * 1e6)
+    emit("cluster_burst_tbt_p99", s["tbt_p99"] * 1e6,
+         f"gpu_seconds={s['gpu_seconds']:.1f}")
+    emit("cluster_burst_wall", wall * 1e6,
+         f"servers_max={s['servers_max']:.0f}")
+
+
 def bench_kernels():
     from repro.kernels import ops
     key = jax.random.PRNGKey(0)
@@ -267,7 +300,8 @@ BENCHES = [
     bench_ttft, bench_ttft_lora, bench_cold_start_breakdown,
     bench_breakdown_lora, bench_strategy_crossover, bench_scaling_shapes,
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
-    bench_recovery_inference, bench_engine_functional, bench_kernels,
+    bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
+    bench_kernels,
 ]
 
 

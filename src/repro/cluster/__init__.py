@@ -1,0 +1,21 @@
+"""Serverless cluster layer (paper §4.1–§4.4 at fleet scale).
+
+Composes the single-server pieces — PipeBoostEngine cold start/recovery
+(core/engine.py) and continuous-batched serving (serving/engine.py) — into
+the paper's end-to-end serverless scenario: bursty arrival traces routed
+across N server replicas, an autoscaler that cold-starts servers mid-burst
+and admits traffic the moment a viable pipeline chain exists, cross-server
+re-routing of in-flight requests on a crash, and a JSON metrics layer
+(TTFT/TBT percentiles, queue depth, GPU-seconds).
+"""
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.metrics import ClusterMetrics, percentile
+from repro.cluster.router import ClusterConfig, ClusterRouter, ClusterServer
+from repro.cluster.traces import (Arrival, burst_wave_trace, gamma_trace,
+                                  load_trace, poisson_trace, save_trace)
+
+__all__ = [
+    "Arrival", "Autoscaler", "AutoscalerConfig", "ClusterConfig",
+    "ClusterMetrics", "ClusterRouter", "ClusterServer", "burst_wave_trace",
+    "gamma_trace", "load_trace", "percentile", "poisson_trace", "save_trace",
+]

@@ -1,0 +1,81 @@
+"""SLO-driven autoscaler for PipeBoost server fleets (paper §2.1, §4.1).
+
+The point of PipeBoost's fast cold start is that scaling out on a burst is
+*cheap*: a fresh multi-GPU server admits traffic after each device loads
+only ~1/N of the model.  The autoscaler exploits exactly that — it watches
+queue pressure and head-of-line wait (a TTFT SLO proxy) and cold-starts a
+new server the moment either degrades, instead of over-provisioning.
+
+Pure policy, no JAX: ``decide`` maps observed cluster state to actions; the
+router executes them (spawn => ``ClusterServer`` cold start, retire =>
+drain + shutdown of an idle replica).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+
+@dataclass
+class AutoscalerConfig:
+    target_queue_per_server: float = 4.0   # pending reqs per admitting server
+    ttft_slo_s: float = 1.0                # head-of-line wait budget
+    max_servers: int = 8
+    min_servers: int = 1
+    scale_up_cooldown_ticks: int = 5       # between consecutive spawns
+    idle_ticks_before_retire: int = 200
+    max_warming: int = 1                   # concurrent cold starts
+
+
+@dataclass
+class ScaleDecision:
+    spawn: int = 0
+    retire: List[int] = None               # server ids to retire
+
+    def __post_init__(self):
+        if self.retire is None:
+            self.retire = []
+
+
+class Autoscaler:
+    def __init__(self, cfg: AutoscalerConfig = None):
+        self.cfg = cfg or AutoscalerConfig()
+        self._cooldown = 0
+        self.n_scale_ups = 0
+        self.n_retires = 0
+
+    def decide(self, now: float, pending: int, oldest_wait: float,
+               servers: Sequence) -> ScaleDecision:
+        """One decision per router tick.
+
+        ``pending``: router queue + per-server queued/in-flight requests.
+        ``oldest_wait``: age of the oldest not-yet-first-token request.
+        ``servers``: ClusterServer-likes exposing .state/.admitting/
+        .idle_ticks/.sid.
+        """
+        cfg = self.cfg
+        out = ScaleDecision()
+        self._cooldown = max(0, self._cooldown - 1)
+        admitting = [s for s in servers if s.admitting]
+        warming = [s for s in servers if s.state == "loading"]
+        # downed servers count against the cap — they may rejoin, and the
+        # cap bounds the provisioned fleet, not just the healthy slice
+        live = [s for s in servers if s.state != "retired"]
+
+        per_server = pending / max(1, len(admitting))
+        pressured = (per_server > cfg.target_queue_per_server
+                     or oldest_wait > cfg.ttft_slo_s)
+        if (pressured and self._cooldown == 0
+                and len(warming) < cfg.max_warming
+                and len(live) < cfg.max_servers):
+            out.spawn = 1
+            self._cooldown = cfg.scale_up_cooldown_ticks
+            self.n_scale_ups += 1
+
+        if pending == 0:
+            for s in admitting:
+                if (s.idle_ticks >= cfg.idle_ticks_before_retire
+                        and len(live) - len(out.retire) > cfg.min_servers):
+                    out.retire.append(s.sid)
+                    self.n_retires += 1
+        return out

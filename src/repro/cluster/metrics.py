@@ -1,0 +1,124 @@
+"""Cluster metrics: TTFT/TBT percentiles, queue depth, GPU-seconds.
+
+One ``ClusterMetrics`` instance per router run accumulates per-request
+records and per-tick gauges, then summarizes to a flat dict / JSON blob so
+``benchmarks/`` can track the trajectory across PRs.  Times are in router
+clock seconds (logical ticks × tick_s on CPU; wall seconds on real slices).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0,100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    arrival: float
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    n_tokens: int = 0
+    reroutes: int = 0            # times the request moved servers (crashes)
+    server: int = -1             # server that completed it
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.first_token is None \
+            else self.first_token - self.arrival
+
+    @property
+    def tbt(self) -> Optional[float]:
+        """Mean time-between-tokens after the first."""
+        if self.finished is None or self.first_token is None \
+                or self.n_tokens < 2:
+            return None
+        return (self.finished - self.first_token) / (self.n_tokens - 1)
+
+
+@dataclass
+class ClusterMetrics:
+    records: Dict[int, RequestRecord] = field(default_factory=dict)
+    queue_depth: List[Tuple[float, int]] = field(default_factory=list)
+    n_servers: List[Tuple[float, int]] = field(default_factory=list)
+    gpu_seconds: float = 0.0
+    events: List[Tuple[float, str, str]] = field(default_factory=list)
+
+    # ---- recording --------------------------------------------------------
+    def on_submit(self, rid: int, arrival: float) -> None:
+        self.records[rid] = RequestRecord(rid, arrival)
+
+    def on_first_token(self, rid: int, t: float) -> None:
+        r = self.records[rid]
+        if r.first_token is None:
+            r.first_token = t
+
+    def on_finish(self, rid: int, t: float, n_tokens: int,
+                  server: int) -> None:
+        r = self.records[rid]
+        r.finished = t
+        r.n_tokens = n_tokens
+        r.server = server
+
+    def on_reroute(self, rid: int) -> None:
+        self.records[rid].reroutes += 1
+
+    def on_tick(self, t: float, queue_depth: int, n_servers: int,
+                gpu_busy: int, tick_s: float) -> None:
+        self.queue_depth.append((t, queue_depth))
+        self.n_servers.append((t, n_servers))
+        self.gpu_seconds += gpu_busy * tick_s
+
+    def on_event(self, t: float, kind: str, detail: str = "") -> None:
+        self.events.append((t, kind, detail))
+
+    # ---- summary ----------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.records.values() if r.finished is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tbts = [r.tbt for r in done if r.tbt is not None]
+        horizon = max((r.finished for r in done), default=0.0)
+        out = {
+            "n_requests": float(len(self.records)),
+            "n_completed": float(len(done)),
+            "n_rerouted": float(sum(1 for r in done if r.reroutes)),
+            "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p99": percentile(ttfts, 99),
+            "tbt_mean": sum(tbts) / len(tbts) if tbts else 0.0,
+            "tbt_p50": percentile(tbts, 50),
+            "tbt_p99": percentile(tbts, 99),
+            "queue_depth_max": float(max((d for _, d in self.queue_depth),
+                                         default=0)),
+            "servers_max": float(max((n for _, n in self.n_servers),
+                                     default=0)),
+            "gpu_seconds": self.gpu_seconds,
+            "tokens_total": float(sum(r.n_tokens for r in done)),
+            "throughput_tok_s": (sum(r.n_tokens for r in done) / horizon
+                                 if horizon > 0 else 0.0),
+        }
+        return out
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        doc = {
+            "summary": self.summary(),
+            "requests": [asdict(r) for r in
+                         sorted(self.records.values(), key=lambda r: r.rid)],
+            "queue_depth": self.queue_depth,
+            "n_servers": self.n_servers,
+            "events": self.events,
+        }
+        blob = json.dumps(doc, indent=1)
+        if path:
+            with open(path, "w") as f:
+                f.write(blob)
+        return blob

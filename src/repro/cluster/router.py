@@ -1,0 +1,304 @@
+"""Cluster router: bursty traffic over autoscaled PipeBoost servers.
+
+Each ``ClusterServer`` composes the two single-server pieces the repo
+already proves correct: a ``PipeBoostEngine`` (pipelined cold start, crash,
+recovery, strategy switch — core/engine.py) gating a continuous-batched
+``ServingEngine`` (serving/engine.py).  The ``ClusterRouter`` owns a shared
+logical clock, replays an arrival trace, dispatches to the least-loaded
+admitting server, drives the autoscaler, and re-routes in-flight requests
+off crashed servers — their generated prefix re-prefills on a survivor, so
+greedy outputs are EXACTLY the tokens of a crash-free run (the cluster-level
+analogue of the engine's KV-reconstruction exactness).
+
+Server lifecycle::
+
+    spawn -> loading --ready--> serving --crash(partial)--> recovering
+    serving --crash(total)--> down --rejoin--> loading
+    serving --idle + autoscaler--> retired
+
+Time: one router tick = ``tick_s`` logical seconds; per tick a loading
+server advances ``load_rounds_per_tick`` rounds and a serving server runs
+one continuous-batching decode step.  On a real slice the same router runs
+off the wall clock.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.traces import Arrival, prompt_tokens
+from repro.configs.base import ArchConfig
+from repro.core.adapter_scheduler import EpochSchedulerPolicy
+from repro.core.engine import PipeBoostEngine
+from repro.serving.engine import (ServeRequest, ServingEngine,
+                                  quantized_greedy)
+
+
+@dataclass
+class ClusterConfig:
+    n_devices: int = 2             # logical devices per server
+    n_slots: int = 4               # continuous-batching slots per server
+    max_len: int = 96
+    tick_s: float = 0.05           # logical seconds per router tick
+    load_rounds_per_tick: int = 1  # cold-start progress per tick
+    recovery_ticks: int = 2        # service pause: crash -> rejoined chain
+    epoch_budget: int = 4          # adapter epoch budget per server
+
+
+class ClusterServer:
+    """One autoscaled GPU-server replica."""
+
+    def __init__(self, sid: int, cfg: ArchConfig, params, ccfg: ClusterConfig,
+                 adapter_params: Optional[Dict[str, Any]] = None):
+        self.sid = sid
+        self.ccfg = ccfg
+        self.engine = PipeBoostEngine(cfg, params, n_devices=ccfg.n_devices,
+                                      max_len=ccfg.max_len)
+        self.srv = ServingEngine(
+            cfg, params, n_slots=ccfg.n_slots, max_len=ccfg.max_len,
+            policy=EpochSchedulerPolicy(epoch_budget=ccfg.epoch_budget,
+                                        max_batch=ccfg.n_slots),
+            adapter_params=adapter_params or {})
+        self.srv.batcher.sampler = quantized_greedy
+        self.state = "loading"
+        self.idle_ticks = 0
+        self.served_while_loading = False   # admitted before fully loaded
+        self._recover_left = 0
+
+    # ---- scheduling surface ----------------------------------------------
+    @property
+    def admitting(self) -> bool:
+        return self.state == "serving"
+
+    @property
+    def load(self) -> int:
+        return self.srv.n_pending
+
+    @property
+    def oldest_queued_arrival(self) -> Optional[float]:
+        """Earliest arrival among requests queued here without a first
+        token yet (feeds the autoscaler's TTFT-SLO signal)."""
+        waiting = [r.arrival for r in self.srv.queued_requests()
+                   if r.first_token_at is None]
+        return min(waiting) if waiting else None
+
+    def submit(self, req: ServeRequest) -> None:
+        self.srv.submit(req)
+
+    # ---- lifecycle --------------------------------------------------------
+    def tick(self, now: float) -> List[ServeRequest]:
+        """Advance one router tick; returns requests finished this tick."""
+        if self.state == "loading":
+            for _ in range(self.ccfg.load_rounds_per_tick):
+                self.engine.load_round()
+            if self.engine.ready:       # viable chain => admit immediately
+                self.state = "serving"
+            return []
+        if self.state == "recovering":
+            self._recover_left -= 1
+            if self._recover_left <= 0:
+                self.engine.recover()   # re-plan + reload to a viable chain
+                self.state = "serving"
+            return []
+        if self.state in ("down", "retired"):
+            return []
+        # serving: background fill until full, then the §4.3.3 switch
+        if not self.engine.fully_loaded:
+            self.engine.load_round()
+            if self.srv.n_pending:
+                self.served_while_loading = True
+        elif self.engine.strategy == "pipeline":
+            # crossover policy: switch to per-device serving as soon as the
+            # full model is resident (rate-based crossover is a future knob)
+            self.engine.maybe_switch_strategy(request_rate=0.0)
+        done = self.srv.step(now=now)
+        self.idle_ticks = 0 if self.srv.n_pending else self.idle_ticks + 1
+        return done
+
+    def crash(self, device_ids: Optional[Sequence[int]] = None
+              ) -> List[ServeRequest]:
+        """Kill devices (all of them by default) and hand back every
+        in-flight + queued request for cross-server re-routing."""
+        drained = self.srv.drain_inflight()
+        ids = (list(device_ids) if device_ids is not None
+               else [d.idx for d in self.engine.devices])
+        self.engine.crash(ids)
+        if any(d.alive for d in self.engine.devices):
+            self.state = "recovering"
+            self._recover_left = self.ccfg.recovery_ticks
+        else:
+            self.state = "down"
+        return drained
+
+    def rejoin(self) -> None:
+        """Reboot a fully-down server back into the fleet (fresh cold
+        start through the pipelined loader)."""
+        self.engine.restart()
+        self.state = "loading"
+
+    def retire(self) -> List[ServeRequest]:
+        leftovers = self.srv.drain_inflight()
+        self.state = "retired"
+        return leftovers
+
+
+class ClusterRouter:
+    """Trace replay + dispatch + autoscaling + crash handling."""
+
+    def __init__(self, cfg: ArchConfig, params, *, n_servers: int = 2,
+                 ccfg: Optional[ClusterConfig] = None,
+                 autoscaler: Optional[Autoscaler] = None,
+                 adapter_params: Optional[Dict[str, Any]] = None,
+                 metrics: Optional[ClusterMetrics] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ccfg = ccfg or ClusterConfig()
+        self.autoscaler = autoscaler
+        self.adapter_params = adapter_params
+        self.metrics = metrics or ClusterMetrics()
+        self.clock = 0.0
+        self.servers: List[ClusterServer] = []
+        self.queue: Deque[ServeRequest] = deque()
+        self._arrival_time: Dict[int, float] = {}
+        self._rid = itertools.count()
+        for _ in range(n_servers):
+            self.spawn_server()
+
+    # ---- fleet ops --------------------------------------------------------
+    def spawn_server(self) -> ClusterServer:
+        s = ClusterServer(len(self.servers), self.cfg, self.params,
+                          self.ccfg, self.adapter_params)
+        self.servers.append(s)
+        self.metrics.on_event(self.clock, "spawn", f"server{s.sid}")
+        return s
+
+    def crash_server(self, sid: int,
+                     device_ids: Optional[Sequence[int]] = None) -> None:
+        """Crash a server; its requests re-route to the head of the queue."""
+        drained = self.servers[sid].crash(device_ids)
+        inflight = sum(1 for r in drained if r.generated)
+        self.metrics.on_event(self.clock, "crash",
+                              f"server{sid} rerouted={inflight} "
+                              f"requeued={len(drained) - inflight}")
+        for req in reversed(drained):
+            if req.generated:      # mid-decode: exercises exact resumption
+                self.metrics.on_reroute(req.rid)
+            self.queue.appendleft(req)
+
+    def rejoin_server(self, sid: int) -> None:
+        self.servers[sid].rejoin()
+        self.metrics.on_event(self.clock, "rejoin", f"server{sid}")
+
+    # ---- request path -----------------------------------------------------
+    def submit(self, arrival: Arrival) -> int:
+        if arrival.adapter and arrival.adapter not in (
+                self.adapter_params or {}):
+            raise ValueError(
+                f"trace names adapter {arrival.adapter!r} but the router "
+                f"has adapter_params for {sorted(self.adapter_params or {})}")
+        rid = next(self._rid)
+        req = ServeRequest(rid, prompt_tokens(arrival, self.cfg.vocab_size),
+                           max_new_tokens=arrival.max_new_tokens,
+                           adapter=arrival.adapter, arrival=arrival.time)
+        self._arrival_time[rid] = arrival.time
+        self.metrics.on_submit(rid, arrival.time)
+        self.queue.append(req)
+        return rid
+
+    def _dispatch(self) -> None:
+        # capacity-bounded: hand a server at most n_slots outstanding
+        # requests; the backlog stays in the router queue so a server that
+        # cold-starts mid-burst absorbs it (and the queue's wait keeps
+        # feeding the autoscaler's SLO signal)
+        while self.queue:
+            cands = [s for s in self.servers
+                     if s.admitting and s.load < self.ccfg.n_slots]
+            if not cands:
+                return
+            target = min(cands, key=lambda s: (s.load, s.sid))
+            # sync the server clock so dispatch-time stamps are router time
+            target.srv.clock = max(target.srv.clock, self.clock)
+            target.submit(self.queue.popleft())
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(s.load for s in self.servers)
+
+    # ---- main loop --------------------------------------------------------
+    def tick(self) -> List[ServeRequest]:
+        """One cluster tick: autoscale, dispatch, advance every server."""
+        now = self.clock
+        if self.autoscaler is not None:
+            # head-of-line wait spans the router queue AND requests still
+            # queued inside servers (dispatch drains the router queue every
+            # tick, so server-side waiters carry the TTFT-SLO signal)
+            waits = [self._arrival_time[r.rid] for r in self.queue]
+            waits += [a for s in self.servers
+                      if s.state not in ("down", "retired")
+                      and (a := s.oldest_queued_arrival) is not None]
+            oldest = now - min(waits) if waits else 0.0
+            d = self.autoscaler.decide(now, self.pending, oldest,
+                                       self.servers)
+            for _ in range(d.spawn):
+                self.metrics.on_event(now, "scale_up", "")
+                self.spawn_server()
+            for sid in d.retire:
+                self.metrics.on_event(now, "retire", f"server{sid}")
+                self.queue.extend(self.servers[sid].retire())
+        self._dispatch()
+        finished: List[ServeRequest] = []
+        for s in self.servers:
+            for r in s.tick(now):
+                self.metrics.on_first_token(r.rid, r.first_token_at)
+                self.metrics.on_finish(r.rid, r.finished_at,
+                                       len(r.generated), s.sid)
+                finished.append(r)
+        busy = sum(self.ccfg.n_devices for s in self.servers
+                   if s.state not in ("down", "retired"))
+        self.metrics.on_tick(now, self.pending, len(
+            [s for s in self.servers if s.state not in ("down", "retired")]),
+            busy, self.ccfg.tick_s)
+        self.clock = now + self.ccfg.tick_s
+        return finished
+
+    def run(self, trace: Sequence[Arrival], *, max_ticks: int = 200_000,
+            crash_after_completions: Optional[int] = None,
+            crash_server_id: int = 1,
+            crash_devices: Optional[Sequence[int]] = None,
+            rejoin_after_ticks: Optional[int] = None
+            ) -> List[ServeRequest]:
+        """Replay ``trace`` to completion; returns finished requests.
+
+        ``crash_after_completions``: once that many requests completed,
+        crash ``crash_server_id`` (all its devices unless ``crash_devices``
+        narrows it) and re-route its work; with ``rejoin_after_ticks`` the
+        downed server reboots into the fleet that many ticks later.
+        """
+        arrivals = sorted(trace, key=lambda a: a.time)
+        i = 0
+        completed: List[ServeRequest] = []
+        crashed_at_tick: Optional[int] = None
+        for t in range(max_ticks):
+            while i < len(arrivals) and arrivals[i].time <= self.clock:
+                self.submit(arrivals[i])
+                i += 1
+            completed.extend(self.tick())
+            if (crash_after_completions is not None
+                    and crashed_at_tick is None
+                    and len(completed) >= crash_after_completions
+                    and crash_server_id < len(self.servers)):
+                self.crash_server(crash_server_id, crash_devices)
+                crashed_at_tick = t
+            if (crashed_at_tick is not None and rejoin_after_ticks is not None
+                    and t == crashed_at_tick + rejoin_after_ticks
+                    and self.servers[crash_server_id].state == "down"):
+                self.rejoin_server(crash_server_id)
+            if i >= len(arrivals) and self.pending == 0:
+                break
+        return completed

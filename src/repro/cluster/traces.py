@@ -1,0 +1,132 @@
+"""Bursty arrival traces for the serverless cluster (paper §2.1, Fig. 3).
+
+Serverless LLM workloads are bursty: long quiet stretches punctuated by
+request waves that force fleet-wide cold starts (the scenario HydraServe /
+λScale benchmark against).  Three generators cover the space:
+
+* ``poisson_trace``    — memoryless baseline (CV = 1).
+* ``gamma_trace``      — Gamma-renewal arrivals; ``burstiness`` (= CV²) > 1
+                         clusters arrivals into bursts with long gaps.
+* ``burst_wave_trace`` — square-wave modulated Poisson: quiet base rate with
+                         sudden waves, the canonical scale-out trigger.
+
+Traces are plain ``Arrival`` records, replayable and JSON round-trippable
+(``save_trace`` / ``load_trace``) so benchmark runs are reproducible and
+real traces (e.g. Azure Functions) can be dropped in the same format.
+All generators are deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One request arrival: when it lands and what it asks for."""
+    time: float
+    prompt_len: int = 8
+    max_new_tokens: int = 6
+    adapter: Optional[str] = None
+    seed: int = 0               # per-request prompt-content seed
+
+
+def _materialize(times: Sequence[float], rng: np.random.Generator, *,
+                 prompt_len: int, max_new_tokens: int,
+                 adapters: Sequence[str] = ()) -> List[Arrival]:
+    out = []
+    for i, t in enumerate(times):
+        adapter = None
+        if adapters and rng.random() < 0.5:
+            adapter = adapters[int(rng.integers(len(adapters)))]
+        out.append(Arrival(float(t), prompt_len, max_new_tokens, adapter,
+                           seed=int(rng.integers(2**31 - 1))))
+    return out
+
+
+def poisson_trace(rate: float, horizon: float, *, seed: int = 0,
+                  prompt_len: int = 8, max_new_tokens: int = 6,
+                  adapters: Sequence[str] = ()) -> List[Arrival]:
+    """Homogeneous Poisson arrivals at ``rate`` req/s over ``horizon`` s."""
+    rng = np.random.default_rng(seed)
+    times, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        if t >= horizon:
+            break
+        times.append(t)
+    return _materialize(times, rng, prompt_len=prompt_len,
+                       max_new_tokens=max_new_tokens, adapters=adapters)
+
+
+def gamma_trace(rate: float, horizon: float, *, burstiness: float = 4.0,
+                seed: int = 0, prompt_len: int = 8, max_new_tokens: int = 6,
+                adapters: Sequence[str] = ()) -> List[Arrival]:
+    """Gamma-renewal arrivals with mean rate ``rate`` and CV² = burstiness.
+
+    shape k = 1/burstiness < 1 makes inter-arrivals heavy at zero (bursts)
+    with occasional long gaps; burstiness = 1 degenerates to Poisson.
+    """
+    shape = 1.0 / max(burstiness, 1e-6)
+    scale = 1.0 / (max(rate, 1e-9) * shape)   # mean = shape*scale = 1/rate
+    rng = np.random.default_rng(seed)
+    times, t = [], 0.0
+    while True:
+        t += rng.gamma(shape, scale)
+        if t >= horizon:
+            break
+        times.append(t)
+    return _materialize(times, rng, prompt_len=prompt_len,
+                       max_new_tokens=max_new_tokens, adapters=adapters)
+
+
+def burst_wave_trace(n_requests: int, *, base_rate: float = 0.5,
+                     wave_rate: float = 20.0, wave_at: float = 2.0,
+                     wave_len: float = 2.0, seed: int = 0,
+                     prompt_len: int = 8, max_new_tokens: int = 6,
+                     adapters: Sequence[str] = ()) -> List[Arrival]:
+    """Quiet Poisson base load with one sudden wave of ``wave_rate`` starting
+    at ``wave_at`` — the fleet-cold-start scenario (stops after
+    ``n_requests`` total)."""
+    rng = np.random.default_rng(seed)
+    times, t = [], 0.0
+    while len(times) < n_requests:
+        in_wave = wave_at <= t < wave_at + wave_len
+        r = wave_rate if in_wave else base_rate
+        dt = rng.exponential(1.0 / max(r, 1e-9))
+        # don't let a quiet-phase gap jump the wave start
+        if not in_wave and t < wave_at < t + dt:
+            t = wave_at
+            continue
+        t += dt
+        times.append(t)
+    return _materialize(times, rng, prompt_len=prompt_len,
+                       max_new_tokens=max_new_tokens, adapters=adapters)
+
+
+# ---------------------------------------------------------------------------
+# Replayable trace format
+# ---------------------------------------------------------------------------
+
+def save_trace(path: str, trace: Sequence[Arrival]) -> None:
+    with open(path, "w") as f:
+        json.dump({"version": 1, "arrivals": [asdict(a) for a in trace]},
+                  f, indent=1)
+
+
+def load_trace(path: str) -> List[Arrival]:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != 1:
+        raise ValueError(f"unknown trace version {doc.get('version')!r}")
+    return [Arrival(**a) for a in doc["arrivals"]]
+
+
+def prompt_tokens(arrival: Arrival, vocab_size: int) -> np.ndarray:
+    """Deterministic prompt content for an arrival (seed-addressed)."""
+    rng = np.random.default_rng(arrival.seed)
+    return rng.integers(0, min(vocab_size, 250),
+                        size=arrival.prompt_len).astype(np.int64)

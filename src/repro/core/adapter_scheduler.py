@@ -88,6 +88,14 @@ class EpochSchedulerPolicy:
         state["served_in_epoch"] += len(batch)
         return active, batch
 
+    def requeue_front(self, state, items):
+        """Return unadmitted items to the head of their queues (the serving
+        engine ran out of free slots mid-batch)."""
+        for it in reversed(items):
+            state["queues"].setdefault(it.adapter, deque()).appendleft(it)
+        state["served_in_epoch"] = max(
+            0, state["served_in_epoch"] - len(items))
+
 
 @dataclass
 class EagerPolicy:
@@ -115,6 +123,10 @@ class EagerPolicy:
         while fifo and fifo[0].adapter == adapter and len(batch) < self.max_batch:
             batch.append(fifo.popleft())
         return adapter, batch
+
+    def requeue_front(self, state, items):
+        for it in reversed(items):
+            state["fifo"].appendleft(it)
 
 
 def simulate_adapter_serving(policy, *, rps: float, horizon: float,

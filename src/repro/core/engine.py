@@ -62,6 +62,7 @@ class PipeBoostEngine:
         self.cfg = cfg
         self._full_params = params          # "checkpoint in DRAM"
         self.n_devices = n_devices
+        self.n_segments = n_segments
         lb = analytic.layer_bytes_list(cfg)
         self.plan: LoadPlan = make_plan(lb, n_devices, n_segments)
         self.devices = [DeviceState(i) for i in range(n_devices)]
@@ -197,6 +198,36 @@ class PipeBoostEngine:
         for i in device_ids:
             self.devices[i].alive = False
         self.events.append(("crash", list(device_ids)))
+
+    def restart(self, n_devices: Optional[int] = None):
+        """Full server reboot (cluster rejoin path): every device comes back
+        alive and empty with a fresh rotated load plan; serving state is
+        dropped (in-flight requests were re-routed before the restart)."""
+        if n_devices is not None:
+            self.n_devices = n_devices
+            self.n_segments = None   # segment override was per-device-count
+        lb = analytic.layer_bytes_list(self.cfg)
+        self.plan = make_plan(lb, self.n_devices, self.n_segments)
+        self.devices = [DeviceState(i) for i in range(self.n_devices)]
+        self.strategy = "pipeline"
+        self._cache = None
+        self._tokens_seen = None
+        self.events.append(("restart", self.n_devices))
+
+    def revive(self, device_ids: Sequence[int]):
+        """Bring crashed devices back online with empty HBM and re-plan the
+        segment ring over the enlarged alive set; the revived devices pick
+        up their missing spans on subsequent ``load_round`` calls."""
+        for i in device_ids:
+            d = self.devices[i]
+            if d.alive:
+                continue
+            d.alive = True
+            d.loaded = set()
+            d.kv_segments = set()
+        alive = [d.idx for d in self.devices if d.alive]
+        self.plan = reassign(self.plan, self.loaded_map(), alive)
+        self.events.append(("revive", list(device_ids)))
 
     def recover(self) -> Dict[str, Any]:
         """Pipeline-parallel recovery: layer reassignment + (if mid-decode)

@@ -1,11 +1,22 @@
 """Serving launcher: PipeBoost cold start -> continuous-batched serving ->
 strategy switch, with optional crash injection.
 
+Single server (the seed path):
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         [--devices 4] [--requests 8] [--crash-at 3] [--adapters 2]
 
-CPU runs use reduced configs (functional path); the same engine drives
-device_put-sharded weights on a real slice.
+Serverless cluster (router + autoscaler + cross-server crash re-routing):
+
+    PYTHONPATH=src python -m repro.launch.serve --cluster \
+        --servers 2 --requests 16 --crash-at 3
+
+``--cluster`` replays a bursty arrival trace across N PipeBoost-backed
+server replicas, optionally crashes one server after ``--crash-at``
+completions (its in-flight requests re-route to survivors and it rejoins
+via a fresh pipelined cold start), and prints TTFT/TBT percentiles, queue
+depth, and GPU-seconds.  CPU runs use reduced configs (functional path);
+the same engines drive device_put-sharded weights on a real slice.
 """
 from __future__ import annotations
 
@@ -24,6 +35,55 @@ from repro.models import transformer as T
 from repro.serving.engine import ServeRequest, ServingEngine
 
 
+def run_cluster(cfg, params, args):
+    """Bursty trace -> router -> autoscaled PipeBoost servers; prints the
+    TTFT/TBT percentile metrics the paper's cluster claims live on."""
+    from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                               ClusterRouter, burst_wave_trace)
+    key = jax.random.PRNGKey(0)
+    adapter_params = {}
+    for i in range(args.adapters):
+        lora = randomize_lora(jax.random.fold_in(key, i),
+                              init_lora(key, cfg, rank=4, name=f"lora{i}"))
+        adapter_params[f"lora{i}"] = merge_lora(params, lora)
+    trace = burst_wave_trace(args.requests, base_rate=2.0,
+                             wave_rate=8.0 * max(args.servers, 1),
+                             wave_at=0.5, wave_len=1.0, seed=args.seed,
+                             max_new_tokens=args.new_tokens,
+                             adapters=tuple(adapter_params))
+    ccfg = ClusterConfig(n_devices=args.devices, n_slots=args.slots)
+    scaler = Autoscaler(AutoscalerConfig(target_queue_per_server=args.slots,
+                                         max_servers=args.max_servers,
+                                         ttft_slo_s=1.0))
+    router = ClusterRouter(cfg, params, n_servers=args.servers, ccfg=ccfg,
+                           autoscaler=scaler, adapter_params=adapter_params)
+    t0 = time.perf_counter()
+    crash = args.crash_at if args.crash_at >= 0 else None
+    done = router.run(trace, crash_after_completions=crash,
+                      crash_server_id=min(1, args.servers - 1),
+                      rejoin_after_ticks=20 if crash is not None else None)
+    wall = time.perf_counter() - t0
+    s = router.metrics.summary()
+    print(f"cluster: {int(s['n_completed'])}/{len(trace)} requests completed "
+          f"({wall:.1f}s wall, {int(s['servers_max'])} servers peak, "
+          f"{scaler.n_scale_ups} scale-ups, "
+          f"{int(s['n_rerouted'])} crash-rerouted)")
+    print(f"  TTFT  p50={s['ttft_p50']:.3f}s  p99={s['ttft_p99']:.3f}s  "
+          f"mean={s['ttft_mean']:.3f}s")
+    print(f"  TBT   p50={s['tbt_p50']:.3f}s  p99={s['tbt_p99']:.3f}s  "
+          f"mean={s['tbt_mean']:.3f}s")
+    print(f"  queue_depth_max={int(s['queue_depth_max'])}  "
+          f"gpu_seconds={s['gpu_seconds']:.1f}  "
+          f"throughput={s['throughput_tok_s']:.1f}tok/s")
+    for t, kind, detail in router.metrics.events:
+        print(f"  [t={t:6.2f}] {kind:9s} {detail}")
+    if args.metrics_json:
+        router.metrics.to_json(args.metrics_json)
+        print(f"  metrics written to {args.metrics_json}")
+    if int(s["n_completed"]) != len(trace):
+        raise SystemExit("cluster run did not complete all requests")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
@@ -32,19 +92,39 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--crash-at", type=int, default=-1,
-                    help="crash device 1 after this many completions")
+                    help="single server: crash device 1 after this many "
+                         "completions; --cluster: crash server 1 after this "
+                         "many completions (re-route + rejoin)")
     ap.add_argument("--adapters", type=int, default=0)
+    ap.add_argument("--cluster", action="store_true",
+                    help="serverless cluster mode: bursty trace across "
+                         "--servers autoscaled PipeBoost servers")
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument("--max-servers", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default="",
+                    help="--cluster: also dump ClusterMetrics JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if jax.default_backend() == "cpu":
+        n_dev = args.devices if not args.cluster else min(args.devices, 2)
+        if args.cluster and n_dev != args.devices:
+            print(f"[cpu] clamping --devices {args.devices} -> {n_dev} "
+                  f"per server (reduced functional configs)")
         period = max(1, len(cfg.block_pattern) or 1)
-        depth = ((2 * args.devices + period - 1) // period) * period
+        depth = ((2 * n_dev + period - 1) // period) * period
         cfg = cfg.reduced(n_layers=depth)  # >= 1 segment per device
+        if args.cluster:
+            args.devices = n_dev
     if not cfg.has_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no serve loop")
     key = jax.random.PRNGKey(0)
     params = T.init_params(cfg, key)
+
+    if args.cluster:
+        run_cluster(cfg, params, args)
+        return
 
     # cold start through the PipeBoost engine
     eng = PipeBoostEngine(cfg, params, n_devices=args.devices, max_len=96)

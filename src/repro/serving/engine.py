@@ -22,13 +22,21 @@ from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.models import transformer
 
 
+def quantized_greedy(logits):
+    """Quantize-then-argmax greedy sampler: sub-1e-3 fp differences between
+    batched and solo kernels land in the same bin, so the pick only flips in
+    the (vanishingly rare) case where near-tied logits straddle a bin edge.
+    The cluster layer uses this for exact replay after crash re-routing."""
+    return jnp.argmax(jnp.round(logits.astype(jnp.float32) * 1e3), axis=-1)
+
+
 @dataclass
 class ServeRequest:
     rid: int
     tokens: np.ndarray                   # prompt (S,)
     max_new_tokens: int
     adapter: Optional[str] = None
-    arrival: float = 0.0
+    arrival: Optional[float] = None      # stamped at submit if unset
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
@@ -57,18 +65,32 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def admit(self, req: ServeRequest) -> bool:
-        """Prefill ``req`` into a free slot; False if the batch is full."""
+        """Prefill ``req`` into a free slot; False if the batch is full.
+
+        Re-submission: a request that already carries ``generated`` tokens
+        (drained from a crashed server) is prefilled over prompt + generated,
+        so greedy decoding continues exactly where it left off.
+        """
         if not self.free:
             return False
         slot = self.free.pop()
         req.slot = slot
-        prompt = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        toks = np.asarray(req.tokens, np.int64)
+        if req.generated:
+            toks = np.concatenate([toks, np.asarray(req.generated, np.int64)])
+        prompt = jnp.asarray(toks, jnp.int32)[None, :]
         logits, c1 = transformer.forward(self.cfg, self.params,
                                          {"tokens": prompt}, mode="prefill",
                                          max_len=self.max_len)
         self._write_slot(slot, c1)
         tok = int(np.asarray(self.sampler(logits))[0])
         req.generated.append(tok)
+        at_eos = req.eos_id is not None and tok == req.eos_id
+        if len(req.generated) >= req.max_new_tokens or at_eos:
+            req.done = True           # satisfied at admission (re-submit tail)
+            self.free.append(slot)
+            req.slot = -1
+            return True
         self.active[slot] = req
         return True
 
@@ -105,6 +127,18 @@ class ContinuousBatcher:
                 self.free.append(slot)
         return finished
 
+    def drain(self) -> List[ServeRequest]:
+        """Pull every in-flight request out of the batch (server crash /
+        re-route path): slots are freed, requests keep their generated
+        prefix so ``admit`` elsewhere resumes them exactly."""
+        drained = []
+        for slot, req in sorted(self.active.items()):
+            req.slot = -1
+            self.free.append(slot)
+            drained.append(req)
+        self.active.clear()
+        return drained
+
     @property
     def n_active(self) -> int:
         return len(self.active)
@@ -133,8 +167,10 @@ class ServingEngine:
         self.n_adapter_switches = 0
 
     def submit(self, req: ServeRequest):
-        from repro.core.adapter_scheduler import Request as PolicyReq
-        req.arrival = self.clock
+        # stamp fresh requests that carry no arrival of their own; requests
+        # with a trace arrival or a generated prefix (re-submits) keep theirs
+        if req.arrival is None:
+            req.arrival = self.clock
         self.policy.enqueue(self.policy_state, _PolicyItem(req))
 
     def _switch_adapter(self, name: Optional[str]):
@@ -149,37 +185,94 @@ class ServingEngine:
         self.active_adapter = name
         self.n_adapter_switches += 1
 
-    def run(self, max_steps: int = 10_000) -> List[ServeRequest]:
-        """Drain all queues: admit per the adapter policy, decode until done.
+    def _admit_pending(self) -> List[ServeRequest]:
+        """Admit queued requests per the adapter policy into free slots.
 
         Epoch barrier: merged-LoRA means a switch swaps the weights for
         EVERY active slot, so a different adapter is only admitted once the
-        batch has drained (the paper's epoch semantics, Fig. 5).
+        batch has drained (the paper's epoch semantics, Fig. 5).  Returns
+        requests already satisfied at admission (re-submitted tails).
         """
-        for _ in range(max_steps):
-            while self.batcher.free:
-                nxt = self.policy.peek_adapter(self.policy_state)
-                if nxt is None:
+        satisfied: List[ServeRequest] = []
+        while self.batcher.free:
+            nxt = self.policy.peek_adapter(self.policy_state)
+            if nxt is None:
+                break
+            nxt_name = None if nxt == "__base__" else nxt
+            if self.batcher.active and nxt_name != self.active_adapter:
+                break  # drain before switching (epoch barrier)
+            adapter, batch = self.policy.next_batch(self.policy_state)
+            if adapter is None:
+                break
+            self._switch_adapter(adapter if adapter != "__base__" else None)
+            for pos, item in enumerate(batch):
+                if not self.batcher.free:
+                    # policy batch can exceed free slots under staggered
+                    # occupancy — hand the tail back for the next tick
+                    self.policy.requeue_front(self.policy_state, batch[pos:])
                     break
-                nxt_name = None if nxt == "__base__" else nxt
-                if self.batcher.active and nxt_name != self.active_adapter:
-                    break  # drain before switching (epoch barrier)
-                adapter, batch = self.policy.next_batch(self.policy_state)
-                if adapter is None:
-                    break
-                self._switch_adapter(adapter if adapter != "__base__" else None)
-                for item in batch:
-                    ok = self.batcher.admit(item.req)
-                    assert ok
-            if not self.batcher.active:
-                if self.policy.peek_adapter(self.policy_state) is None:
-                    break
-                continue
-            done = self.batcher.step()
+                ok = self.batcher.admit(item.req)
+                assert ok
+                if item.req.first_token_at is None:
+                    item.req.first_token_at = self.clock
+                if item.req.done:
+                    item.req.finished_at = self.clock
+                    self.completed.append(item.req)
+                    satisfied.append(item.req)
+        return satisfied
+
+    def step(self, now: Optional[float] = None) -> List[ServeRequest]:
+        """One scheduling + decode tick; returns requests finished this tick.
+
+        With ``now`` the caller owns the clock (the cluster router drives
+        many servers off one shared clock); without it the engine advances
+        its own logical step clock by 1 per decode.
+        """
+        if now is not None:
+            self.clock = now
+        finished = self._admit_pending()
+        if not self.batcher.active:
+            return finished
+        done = self.batcher.step()
+        if now is None:
             self.clock += 1.0  # logical step clock
-            for r in done:
-                r.finished_at = self.clock
-                self.completed.append(r)
+        for r in done:
+            r.finished_at = self.clock
+            self.completed.append(r)
+        return finished + done
+
+    def drain_inflight(self) -> List[ServeRequest]:
+        """Remove every in-flight AND queued request (crash re-route path);
+        in-flight requests keep their generated prefix for exact resumption
+        on another server."""
+        out = self.batcher.drain()
+        while True:
+            adapter, batch = self.policy.next_batch(self.policy_state)
+            if adapter is None:
+                break
+            out.extend(item.req for item in batch)
+        return out
+
+    def queued_requests(self) -> List[ServeRequest]:
+        """Requests enqueued but not yet admitted (no first token yet)."""
+        out: List[ServeRequest] = []
+        for q in self.policy_state.get("queues", {}).values():
+            out.extend(it.req for it in q)
+        out.extend(it.req for it in self.policy_state.get("fifo", ()))
+        return out
+
+    @property
+    def n_pending(self) -> int:
+        """Queued (not yet admitted) + in-flight requests."""
+        return len(self.queued_requests()) + self.batcher.n_active
+
+    def run(self, max_steps: int = 10_000) -> List[ServeRequest]:
+        """Drain all queues: admit per the adapter policy, decode until done."""
+        for _ in range(max_steps):
+            self.step()
+            if not self.batcher.active \
+                    and self.policy.peek_adapter(self.policy_state) is None:
+                break
         return self.completed
 
 

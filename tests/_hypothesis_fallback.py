@@ -1,0 +1,121 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+CI installs real hypothesis (see pyproject / .github/workflows/ci.yml) and
+gets full shrinking property testing; this fallback keeps the suite
+collectable and meaningfully exercised in minimal environments (e.g. the
+bare container) by replaying a seeded random sample of each strategy space.
+
+Only the API surface the tests use is implemented:
+  given, settings, strategies.{integers, floats, booleans, sampled_from,
+  lists}.  No shrinking, no database, no assume().
+
+``install()`` registers the shim as ``hypothesis`` / ``hypothesis.strategies``
+in ``sys.modules`` — tests/conftest.py calls it only when the real import
+fails, so an installed hypothesis always wins.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+#: examples per property in fallback mode (real hypothesis honours the
+#: test's own max_examples).  Overridable for quick smoke runs.
+FALLBACK_MAX_EXAMPLES = int(os.environ.get("REPRO_FALLBACK_EXAMPLES", "12"))
+
+
+class _Strategy:
+    def __init__(self, sample, describe):
+        self.sample = sample            # rng -> value
+        self.describe = describe
+
+    def __repr__(self):
+        return self.describe
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     f"integers({min_value}, {max_value})")
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     f"floats({min_value}, {max_value})")
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[rng.randrange(len(elems))],
+                     f"sampled_from({elems!r})")
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(sample, f"lists({elements!r}, {min_size}, {max_size})")
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    """Record max_examples on the decorated test (fallback caps it)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kw):
+    """Run the test over a seeded deterministic sample of the strategies.
+
+    The seed derives from the test's qualified name, so every run (and every
+    machine) replays the same examples; a failure reports the drawn values.
+    """
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            cap = getattr(wrapper, "_fallback_max_examples", 100)
+            n = max(1, min(cap, FALLBACK_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategy_kw.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback draw {i}): {drawn!r}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples",
+                                                 100)
+        # hide the strategy params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategy_kw]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this shim as the ``hypothesis`` package in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return hyp

@@ -1,0 +1,25 @@
+"""Shared pytest config: marker registration + hypothesis gating.
+
+The ``slow`` marker gates long-running tests (CI's fast lane runs
+``-m "not slow"``; the full lane on main runs everything).
+
+``hypothesis`` is a real dependency (pyproject ``[test]`` extra) but the
+suite must stay collectable in minimal environments without it, so when the
+import fails we install the deterministic fallback from
+``tests/_hypothesis_fallback.py`` before test modules are imported.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ImportError:
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (skipped in CI's fast lane)")
