@@ -19,6 +19,8 @@ Map (paper artifact -> bench):
   (engine, CPU)      -> bench_engine_functional, bench_kernels
   (cluster, CPU)     -> bench_cluster_burst (see also cluster_bench.py for
                         the JSON-emitting trajectory entry)
+  (hot path, CPU)    -> bench_decode_hotpath (appends steps/sec + compile
+                        counts to BENCH_decode_hotpath.json)
 """
 from __future__ import annotations
 
@@ -270,6 +272,125 @@ def bench_cluster_burst():
          f"servers_max={s['servers_max']:.0f}")
 
 
+def bench_decode_hotpath():
+    """Zero-copy decode hot path vs the pre-PR batcher (functional, CPU).
+
+    Steady-state decode steps/sec: the donated fused decode+sample step
+    (in-place cache update, one host transfer) against a faithful replica
+    of the legacy loop (non-donated decode jit returning a fresh cache,
+    eager host-side sampler, tokens rebuilt on host every step).  Also
+    runs a mixed-length burst of 16 prompts through the bucketed prefill
+    and reports compile counts.  Results append to the
+    ``BENCH_decode_hotpath.json`` trajectory.
+    """
+    import json
+    import os
+
+    from repro.serving.engine import (ContinuousBatcher, ServeRequest,
+                                      ServingEngine, bucket_sizes,
+                                      quantized_greedy)
+    from repro.models import transformer as T
+
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2, head_dim=64)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    n_slots, max_len, steps = 8, 2048, 30
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 250, size=8 + i) for i in range(n_slots)]
+
+    # -- legacy replica: the pre-PR ContinuousBatcher hot loop -------------
+    class _LegacyBatcher:
+        def __init__(self):
+            self.cache = T.init_cache(cfg, n_slots, max_len,
+                                      jnp.dtype(cfg.dtype))
+            self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+            self._decode = jax.jit(
+                lambda p, t, c: T.decode_step(cfg, p, {"tokens": t}, c))
+
+        def admit(self, slot, prompt):
+            logits, c1 = T.forward(cfg, params,
+                                   {"tokens": jnp.asarray(prompt)[None]},
+                                   mode="prefill", max_len=max_len)
+            for k in ("attn", "ssm", "rec"):          # per-leaf host loop
+                if k in c1:
+                    for leaf in c1[k]:
+                        self.cache[k][leaf] = \
+                            self.cache[k][leaf].at[:, slot].set(
+                                c1[k][leaf][:, 0])
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                int(c1["pos"][0]))
+            return int(np.asarray(quantized_greedy(logits))[0])
+
+        def step(self, toks):
+            logits, self.cache = self._decode(params, jnp.asarray(toks),
+                                              self.cache)
+            return np.asarray(quantized_greedy(logits))
+
+    legacy = _LegacyBatcher()
+    toks = np.zeros((n_slots,), np.int32)
+    for s, p in enumerate(prompts):
+        toks[s] = legacy.admit(s, p)
+    legacy.step(toks)                                  # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        toks = legacy.step(toks)
+    legacy_sps = steps / (time.perf_counter() - t0)
+    emit("hotpath_legacy_steps_per_s", 1e6 / legacy_sps,
+         f"{legacy_sps:.1f}steps/s")
+
+    # -- fused donated path ------------------------------------------------
+    cb = ContinuousBatcher(cfg, params, n_slots=n_slots, max_len=max_len,
+                           sampler=quantized_greedy)
+    for i, p in enumerate(prompts):
+        cb.admit(ServeRequest(i, p, max_new_tokens=steps + 64))
+    cb.step()                                          # compile
+    cb.n_decode_steps, cb.decode_time_s = 0, 0.0
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        cb.step()
+    fused_sps = steps / (time.perf_counter() - t0)
+    speedup = fused_sps / legacy_sps
+    emit("hotpath_fused_steps_per_s", 1e6 / fused_sps,
+         f"{fused_sps:.1f}steps/s speedup={speedup:.2f}x "
+         f"tokens_per_s={fused_sps * n_slots:.1f}")
+
+    # -- bucketed prefill compile counts on a mixed-length burst -----------
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=128)
+    eng.batcher.sampler = quantized_greedy
+    burst_lens = rng.permutation(np.arange(5, 121))[:16]
+    for i, L in enumerate(burst_lens):
+        eng.submit(ServeRequest(100 + i, rng.integers(0, 250, size=int(L)),
+                                max_new_tokens=3))
+    eng.run()
+    cs = eng.batcher.compile_stats()
+    n_buckets = len(bucket_sizes(128))
+    emit("hotpath_prefill_compiles", float(cs["prefill_compiles"]),
+         f"buckets={n_buckets} lengths=16 "
+         f"decode_compiles={cs['decode_compiles']}")
+
+    # -- JSON trajectory ---------------------------------------------------
+    path = "BENCH_decode_hotpath.json"
+    doc = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except Exception:
+            pass
+    doc["entries"].append({
+        "ts": time.time(),
+        "fused_steps_per_s": fused_sps,
+        "legacy_steps_per_s": legacy_sps,
+        "speedup": speedup,
+        "tokens_per_s": fused_sps * n_slots,
+        "prefill_compiles": cs["prefill_compiles"],
+        "decode_compiles": cs["decode_compiles"],
+        "n_buckets": n_buckets,
+    })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {path} ({len(doc['entries'])} entries)")
+
+
 def bench_kernels():
     from repro.kernels import ops
     key = jax.random.PRNGKey(0)
@@ -301,7 +422,7 @@ BENCHES = [
     bench_breakdown_lora, bench_strategy_crossover, bench_scaling_shapes,
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
-    bench_kernels,
+    bench_decode_hotpath, bench_kernels,
 ]
 
 

@@ -52,6 +52,7 @@ class ClusterMetrics:
     n_servers: List[Tuple[float, int]] = field(default_factory=list)
     gpu_seconds: float = 0.0
     events: List[Tuple[float, str, str]] = field(default_factory=list)
+    hotpath: Dict[str, float] = field(default_factory=dict)
 
     # ---- recording --------------------------------------------------------
     def on_submit(self, rid: int, arrival: float) -> None:
@@ -81,6 +82,15 @@ class ClusterMetrics:
     def on_event(self, t: float, kind: str, detail: str = "") -> None:
         self.events.append((t, kind, detail))
 
+    def record_hotpath(self, stats: Dict[str, float]) -> None:
+        """Accumulate one server's decode hot-path stats (see
+        ``serving.engine.ContinuousBatcher.hotpath_stats``): counters sum
+        across servers; compile counts sum too (each server jits its own
+        functions), so per-server regressions stay visible in the total."""
+        for k in ("n_decode_steps", "decode_time_s", "n_prefill_calls",
+                  "n_prefill_reqs", "decode_compiles", "prefill_compiles"):
+            self.hotpath[k] = self.hotpath.get(k, 0.0) + stats.get(k, 0.0)
+
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         done = [r for r in self.records.values() if r.finished is not None]
@@ -106,6 +116,11 @@ class ClusterMetrics:
             "throughput_tok_s": (sum(r.n_tokens for r in done) / horizon
                                  if horizon > 0 else 0.0),
         }
+        for k, v in self.hotpath.items():
+            out[f"hotpath_{k}"] = v
+        if self.hotpath.get("decode_time_s", 0.0) > 0:
+            out["hotpath_decode_steps_per_s"] = \
+                self.hotpath["n_decode_steps"] / self.hotpath["decode_time_s"]
         return out
 
     def to_json(self, path: Optional[str] = None) -> str:

@@ -301,4 +301,6 @@ class ClusterRouter:
                 self.rejoin_server(crash_server_id)
             if i >= len(arrivals) and self.pending == 0:
                 break
+        for s in self.servers:
+            self.metrics.record_hotpath(s.srv.hotpath_stats())
         return completed

@@ -7,7 +7,14 @@ in VMEM scratch.  Per-batch ``lens`` (valid cache entries — continuous
 batching gives every slot its own length) is prefetched as a scalar so the
 mask needs no extra HBM traffic.
 
-Layouts: q (B, Hq, d); k/v (B, Hkv, C, d); lens (B,) int32 -> out (B, Hq, d).
+Zero-copy serving mode: pass ``k_new``/``v_new`` (the current token's K/V,
+not yet written to the cache) and the kernel folds them into the final
+split-K block's online-softmax state — the cache is only *read*, so the
+serving engine can defer the single-row cache write to one donated
+post-scan scatter instead of rewriting cache-sized buffers every layer.
+
+Layouts: q (B, Hq, d); k/v (B, Hkv, C, d); lens (B,) int32;
+k/v_new (B, Hkv, 1, d) -> out (B, Hq, d).
 """
 from __future__ import annotations
 
@@ -22,9 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, scale: float, block_k: int,
-                   n_k: int):
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+                   block_k: int, n_k: int, merge_new: bool):
+    if merge_new:
+        knew_ref, vnew_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     ki = pl.program_id(2)
 
@@ -56,19 +66,37 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ki == n_k - 1)
     def _fin():
+        m = m_ref[...]
         l = l_ref[...]
+        acc = acc_ref[...]
+        if merge_new:
+            # fold the current (not-yet-cached) token into the softmax state
+            kn = knew_ref[0, 0].astype(jnp.float32)          # (1, d)
+            vn = vnew_ref[0, 0].astype(jnp.float32)
+            s_new = jax.lax.dot_general(q, kn, (((1,), (1,)), ((), ())))
+            m2 = jnp.maximum(m, s_new)
+            c = jnp.exp(m - m2)
+            p_new = jnp.exp(s_new - m2)
+            l = l * c + p_new
+            acc = acc * c + p_new * vn
         l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0, :] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+        o_ref[0, 0, :] = (acc / l)[0].astype(o_ref.dtype)
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                     lens: jnp.ndarray, *, scale: Optional[float] = None,
+                     lens: jnp.ndarray, *, k_new: Optional[jnp.ndarray] = None,
+                     v_new: Optional[jnp.ndarray] = None,
+                     scale: Optional[float] = None,
                      block_k: int = 512,
                      interpret: bool = True) -> jnp.ndarray:
-    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d)."""
+    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d).
+
+    With ``k_new``/``v_new`` (B, Hkv, 1, d) the current token is attended
+    as if written at position ``lens`` (zero-copy serving mode)."""
     B, Hq, d = q.shape
     _, Hkv, C, _ = k.shape
     G = Hq // Hkv
+    merge_new = k_new is not None
     scale = scale if scale is not None else d ** -0.5
     block_k = min(block_k, C)
     pad = (-C) % block_k
@@ -79,17 +107,25 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     q4 = q[:, :, None, :]                                 # (B, Hq, 1, d)
 
     kernel = functools.partial(_decode_kernel, scale=scale,
-                               block_k=block_k, n_k=n_k)
+                               block_k=block_k, n_k=n_k, merge_new=merge_new)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, ki, lens: (b, h // G, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, ki, lens: (b, h // G, ki, 0)),
+    ]
+    inputs = [q4, k, v]
+    if merge_new:
+        in_specs += [
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h // G, 0, 0)),
+        ]
+        inputs += [k_new, v_new]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, ki, lens: (b, h // G, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, ki, lens: (b, h // G, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, d), lambda b, h, ki, lens: (b, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, d), jnp.float32),
@@ -102,5 +138,5 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, d), q.dtype),
         interpret=interpret,
-    )(lens.astype(jnp.int32), q4, k, v)
+    )(lens.astype(jnp.int32), *inputs)
     return out

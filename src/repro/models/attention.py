@@ -229,6 +229,39 @@ def attention_reference(q, k, v, *, causal=True, window=0, q_offset=0,
     return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
 
 
+# Decode-attention backend: "auto" routes to the Pallas flash-decode kernel
+# (kernels/decode_attention.py, split-K over the cache with per-slot lens
+# prefetched as scalars) on TPU and to the XLA online-softmax path
+# elsewhere; kernels/ref.py is the shared oracle for both.  The choice is
+# made at trace time, so tests forcing an impl must trace inside the
+# context manager (plain eager calls do).
+DECODE_ATTN_IMPL = ["auto"]      # "auto" | "pallas" | "xla"
+
+
+class decode_attn_impl:
+    """Context manager pinning the decode-attention backend (tests/bench)."""
+
+    def __init__(self, impl: str):
+        assert impl in ("auto", "pallas", "xla"), impl
+        self.impl = impl
+
+    def __enter__(self):
+        self.prev = DECODE_ATTN_IMPL[0]
+        DECODE_ATTN_IMPL[0] = self.impl
+
+    def __exit__(self, *exc):
+        DECODE_ATTN_IMPL[0] = self.prev
+
+
+def _use_pallas_decode() -> bool:
+    impl = DECODE_ATTN_IMPL[0]
+    if impl == "pallas":
+        return True
+    if impl == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
                      scale: Optional[float] = None) -> jnp.ndarray:
     """One-token attention against a (possibly ring-buffered) KV cache.
@@ -238,7 +271,40 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
     of capacity C == window (positions are irrelevant: softmax is
     permutation-invariant and RoPE was applied before caching).
     """
+    if scale is None and _use_pallas_decode():
+        from repro.kernels import ops
+        B = q.shape[0]
+        lens = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+        return ops.decode_attention(q, k_cache, v_cache, lens)
     p = attention_partial(q, k_cache, v_cache, causal=False, window=0,
                           kv_valid_len=cache_len, block_k=k_cache.shape[1],
                           scale=scale)
     return finalize_partial(p, q.dtype)
+
+
+def decode_attention_merged(q, k_cache, v_cache, cache_len, k_new, v_new, *,
+                            scale: Optional[float] = None) -> jnp.ndarray:
+    """Zero-copy decode attention: the current token's K/V are merged as an
+    online-softmax partial instead of being written into the cache first.
+
+    q: (B, 1, Hq, hd); k/v_cache: (B, C, Hkv, hd) — *without* the current
+    token; cache_len: () or (B,) valid old entries; k/v_new: (B, 1, Hkv, hd)
+    the current token.  Equivalent to writing k/v_new at position
+    ``cache_len`` and attending over ``cache_len + 1`` entries, but the
+    cache is only read — the single-row write happens once, outside the
+    layer scan, on the donated cache (see transformer.decode_step).
+    """
+    if scale is None and _use_pallas_decode():
+        from repro.kernels import ops
+        B = q.shape[0]
+        lens = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+        return ops.decode_attention(q, k_cache, v_cache, lens,
+                                    k_new=k_new, v_new=v_new)
+    p_old = attention_partial(q, k_cache, v_cache, causal=False, window=0,
+                              kv_valid_len=cache_len,
+                              block_k=k_cache.shape[1], scale=scale)
+    p_new = attention_partial(q, k_new, v_new, causal=False, window=0,
+                              block_k=1, scale=scale)
+    return finalize_partial(merge_partials(p_old, p_new), q.dtype)

@@ -243,21 +243,41 @@ def attn_layer_fwd(cfg, p, x, positions, *, kv_write: Optional[int] = None):
     return x, kv, aux
 
 
-def attn_layer_step(cfg, p, x, position, k_cache, v_cache, cache_len):
+def attn_layer_step(cfg, p, x, position, k_cache, v_cache, cache_len, *,
+                    zero_copy: bool = False):
     """Single-token step. x: (B, 1, D); caches (B, C, kv, hd);
-    cache_len: (B,) per-slot valid lengths (continuous batching)."""
+    cache_len: (B,) per-slot valid lengths (continuous batching).
+
+    ``zero_copy=False`` (ring-buffer / windowed path): the current token's
+    K/V are written into the cache here and the updated cache-sized arrays
+    are returned — the classic copy-per-layer loop.
+
+    ``zero_copy=True`` (full-length caches): the cache is only *read*; the
+    current token is merged into the softmax as an online partial
+    (``decode_attention_merged``) and only its (B, kv, hd) K/V row is
+    returned.  The caller performs one scatter of all layers' rows into
+    the donated cache after the layer scan — decode stops rewriting
+    cache-sized buffers every layer.
+    """
     h = _apply_norm(cfg, p["ln1"], x)
     q, k, v = _project_qkv(cfg, p, h)
     pos2d = position if position.ndim >= 2 else position[:, None]
     q = _rope(cfg, q, pos2d if not cfg.mrope else position)
     k = _rope(cfg, k, pos2d if not cfg.mrope else position)
     B, C = k_cache.shape[:2]
-    slot = jnp.mod(cache_len, C)          # == cache_len when C >= max_len
-    bidx = jnp.arange(B)
-    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
-    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
-    valid = jnp.minimum(cache_len + 1, C)
-    o = attn_lib.decode_attention(q, k_cache, v_cache, valid)
+    if zero_copy:
+        valid_old = jnp.minimum(cache_len, C)
+        o = attn_lib.decode_attention_merged(q, k_cache, v_cache, valid_old,
+                                             k, v)
+        kv_out = (k[:, 0], v[:, 0])
+    else:
+        slot = jnp.mod(cache_len, C)      # == cache_len when C >= max_len
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+        valid = jnp.minimum(cache_len + 1, C)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, valid)
+        kv_out = (k_cache, v_cache)
     o = o.reshape(x.shape[0], 1, -1) @ p["wo"]
     x = x + o
     h2 = _apply_norm(cfg, p["ln2"], x)
@@ -265,7 +285,7 @@ def attn_layer_step(cfg, p, x, position, k_cache, v_cache, cache_len):
         y, _ = moe.moe_mlp(cfg, p["mlp"], h2, _ACTS[cfg.act], dropless=True)
     else:
         y = _apply_mlp(cfg, p["mlp"], h2)
-    return x + y, k_cache, v_cache
+    return x + y, kv_out[0], kv_out[1]
 
 
 def rec_layer_fwd(cfg, p, x, *, conv_state=None, h0=None, want_state=False):
@@ -319,11 +339,20 @@ def unembed(cfg, params, x) -> jnp.ndarray:
 
 def forward(cfg: ArchConfig, params: Params, batch: Dict, *,
             mode: str = "train", max_len: Optional[int] = None,
-            remat: bool = False, unroll: int = 1) -> Tuple[jnp.ndarray, Any]:
+            remat: bool = False, unroll: int = 1,
+            last_index=None) -> Tuple[jnp.ndarray, Any]:
     """Full-sequence forward.
 
     mode="train":   returns (logits (B,S,V) f32, aux_loss scalar)
     mode="prefill": returns (last logits (B,V) f32, cache)
+
+    ``last_index`` (B,) int32, prefill only: per-row index of the true last
+    prompt token for right-padded (bucketed) prompts.  Logits are gathered
+    there and ``cache["pos"]`` is set to ``last_index + 1`` so decode
+    attention masks the pad K/V.  Only valid for models whose per-token
+    state is causal and batch-row-independent (pure attention with a
+    full-length cache); SSM/recurrent running states would integrate the
+    pad tokens — callers gate on that (see serving.engine).
     """
     assert mode in ("train", "prefill")
     x, positions = embed_tokens(cfg, params, batch)
@@ -390,8 +419,14 @@ def forward(cfg: ArchConfig, params: Params, batch: Dict, *,
     if mode == "train":
         return unembed(cfg, params, x), aux_total
 
-    logits = unembed(cfg, params, x[:, -1:, :])[:, 0, :]
-    cache: Cache = {"pos": jnp.full((B,), S, jnp.int32)}
+    if last_index is not None:
+        li = jnp.asarray(last_index, jnp.int32)
+        x_last = x[jnp.arange(B), li]                 # (B, D)
+        logits = unembed(cfg, params, x_last[:, None, :])[:, 0, :]
+        cache: Cache = {"pos": li + 1}
+    else:
+        logits = unembed(cfg, params, x[:, -1:, :])[:, 0, :]
+        cache = {"pos": jnp.full((B,), S, jnp.int32)}
     if kv_stack["k"]:
         cache["attn"] = {"k": jnp.concatenate(kv_stack["k"], axis=0),
                          "v": jnp.concatenate(kv_stack["v"], axis=0)}
@@ -459,14 +494,31 @@ def decode_step(cfg: ArchConfig, params: Params, batch: Dict,
             attnlike_cursor += count
             kc = cache["attn"]["k"][a0:a0 + count]
             vc = cache["attn"]["v"][a0:a0 + count]
+            # Zero-copy hot path (full-length caches): the scan only READS
+            # the cache and emits each layer's new (B, kv, hd) row; one
+            # scatter after the scan writes all rows — with a donated cache
+            # that's an in-place O(L*B)-row update instead of an
+            # O(cache-size) rewrite per layer.  Ring-buffer (windowed)
+            # models keep the in-scan write: eviction means the merged-
+            # partial trick can't express "replace the oldest entry".
+            zero_copy = cfg.attn_window == 0
 
             def body(x, per):
                 p_l, k_l, v_l = per
                 x, k_l, v_l = attn_layer_step(cfg, p_l, x, positions, k_l,
-                                              v_l, pos)
+                                              v_l, pos, zero_copy=zero_copy)
                 return x, (k_l, v_l)
 
-            x, (kc, vc) = jax.lax.scan(body, x, (stacked, kc, vc), unroll=unroll)
+            x, (kn, vn) = jax.lax.scan(body, x, (stacked, kc, vc),
+                                       unroll=unroll)
+            if zero_copy:
+                C = kc.shape[2]
+                slot = jnp.mod(pos, C)
+                bidx = jnp.arange(B)
+                kc = kc.at[:, bidx, slot].set(kn)    # (count, B, kv, hd) rows
+                vc = vc.at[:, bidx, slot].set(vn)
+            else:
+                kc, vc = kn, vn
             collected["attn_k"].append(kc)
             collected["attn_v"].append(vc)
         elif kind == "ssm":

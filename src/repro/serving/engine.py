@@ -6,10 +6,36 @@ Slots: the engine owns one batched cache of ``n_slots``; a new request's
 prefill is computed and written into a free slot while other slots keep
 decoding — requests join/leave the batch at token granularity (continuous
 batching).  Per-slot positions ride in ``cache["pos"]`` (B,).
+
+Hot-path design (the zero-copy decode loop)
+-------------------------------------------
+* **Donated fused decode+sample**: one jitted step runs
+  ``decode_step`` + the sampler with ``donate_argnums`` on the cache, so
+  every token updates the KV buffers in place instead of copying the
+  whole slot-stacked cache.  Exactly one small (B,) device->host transfer
+  happens per step (the sampled tokens); the token array itself stays on
+  device between steps.
+* **Bucketed prefill**: prompts are right-padded to power-of-two length
+  buckets (``bucket_sizes``) so XLA compiles once per bucket, not once
+  per prompt length.  Padding is masked in-kernel: causal attention means
+  trailing pads never contaminate real positions, the last-token logits
+  are gathered at the true prompt end (``forward(..., last_index=...)``),
+  and ``cache["pos"]`` records the true length so decode attention masks
+  the pad K/V.  Same-bucket requests prefill together in one batched
+  call, and the slot write happens in-jit on the donated cache (a
+  select/scatter over stacked leaves) instead of a per-leaf Python loop.
+* **One jit for the engine's lifetime**: params are a traced argument, so
+  an adapter epoch switch swaps ``params`` without retracing; free slots
+  are masked in-jit (their ``pos`` is frozen and their token is passed
+  through) so inactive lanes can't hit sampler edge cases.
+
+``compile_stats()`` / ``hotpath_stats()`` surface compile counts and
+decode throughput for benchmarks, the cluster metrics, and the CI
+compile-count regression guard.
 """
 from __future__ import annotations
 
-import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -21,6 +47,8 @@ from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.models import transformer
 
+BUCKET_MIN = 16
+
 
 def quantized_greedy(logits):
     """Quantize-then-argmax greedy sampler: sub-1e-3 fp differences between
@@ -28,6 +56,18 @@ def quantized_greedy(logits):
     the (vanishingly rare) case where near-tied logits straddle a bin edge.
     The cluster layer uses this for exact replay after crash re-routing."""
     return jnp.argmax(jnp.round(logits.astype(jnp.float32) * 1e3), axis=-1)
+
+
+def bucket_sizes(max_len: int, bmin: int = BUCKET_MIN) -> List[int]:
+    """The prefill length buckets for ``max_len``: powers of two from
+    ``bmin`` up, with ``max_len`` itself as the final bucket."""
+    out = []
+    b = bmin
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
 
 
 @dataclass
@@ -59,11 +99,109 @@ class ContinuousBatcher:
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self.active: Dict[int, ServeRequest] = {}     # slot -> request
         self.free: List[int] = list(range(n_slots))
-        self.sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
-        self._decode = jax.jit(
-            lambda p, t, c: transformer.decode_step(cfg, p, {"tokens": t}, c))
+        # Bucketed (padded) prefill is exact only when every layer is
+        # batch-row-independent AND per-token causal (pure attention with a
+        # full-length cache): SSM/recurrent states integrate pad tokens, MoE
+        # capacity couples rows, and a ring buffer would evict real K/V.
+        self._can_bucket = (
+            set(cfg.layer_kinds()) <= {"attn"}
+            and transformer.attn_cache_capacity(cfg, max_len) == max_len)
+        # device-resident step I/O (rebuilt only when slot membership
+        # changes; in steady state nothing crosses the host boundary except
+        # the sampled tokens)
+        self._dev_tokens = jnp.zeros((n_slots,), jnp.int32)
+        self._dev_active = jnp.zeros((n_slots,), bool)
+        self._io_dirty = True
+        # hot-path counters
+        self.n_decode_steps = 0
+        self.decode_time_s = 0.0
+        self.n_prefill_calls = 0
+        self.n_prefill_reqs = 0
+        self._sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
+        self._build_jits()
 
     # ------------------------------------------------------------------
+    # jitted hot-path functions (built once; params stay a traced argument
+    # so adapter switches never retrace)
+    # ------------------------------------------------------------------
+    @property
+    def sampler(self) -> Callable:
+        return self._sampler
+
+    @sampler.setter
+    def sampler(self, fn: Callable) -> None:
+        # the sampler is fused into the jitted step, so swapping it needs a
+        # fresh trace (done here, never on adapter switches)
+        self._sampler = fn
+        self._build_jits()
+
+    def _build_jits(self) -> None:
+        cfg, n_slots, max_len = self.cfg, self.n_slots, self.max_len
+
+        def fused_decode(p, toks, active_mask, cache):
+            old_pos = cache["pos"]
+            logits, cache = transformer.decode_step(cfg, p, {"tokens": toks},
+                                                    cache)
+            # freeze free slots: their position must not advance (a wrapped
+            # ring-buffer pos would corrupt a later admission) and their
+            # garbage logits must not reach EOS bookkeeping
+            cache["pos"] = jnp.where(active_mask, cache["pos"], old_pos)
+            nxt = self._sampler(logits).astype(jnp.int32)
+            nxt = jnp.where(active_mask, nxt, toks)
+            return nxt, cache
+
+        self._decode_fused = jax.jit(fused_decode, donate_argnums=(3,))
+
+        def fused_prefill(p, toks, last_idx, slots, valid, cache):
+            """Prefill padded prompts and write them into ``slots`` in-jit.
+
+            toks (P, bucket) int32 right-padded; last_idx (P,) true last
+            token index; slots (P,) target slot per row; valid (P,) row
+            mask (pad rows are ignored).  The cache is donated: the write
+            is a per-slot select over the stacked leaves, not a Python
+            ``.at[].set`` loop with one dispatch per leaf.
+            """
+            logits, c1 = transformer.forward(
+                cfg, p, {"tokens": toks}, mode="prefill", max_len=max_len,
+                last_index=last_idx)
+            # slot j takes row src[j] iff some valid row targets it
+            sel = (slots[None, :] == jnp.arange(n_slots)[:, None]) \
+                & valid[None, :]                       # (n_slots, P)
+            written = sel.any(axis=1)                  # (n_slots,)
+            src = jnp.argmax(sel.astype(jnp.int32), axis=1)
+            for key in ("attn", "ssm", "rec"):
+                if key in c1:
+                    for leaf in c1[key]:
+                        old = cache[key][leaf]
+                        new = jnp.take(c1[key][leaf], src, axis=1)
+                        w = written.reshape((1, -1) + (1,) * (old.ndim - 2))
+                        cache[key][leaf] = jnp.where(w, new, old)
+            new_pos = jnp.take(last_idx + 1, src)
+            cache["pos"] = jnp.where(written, new_pos, cache["pos"])
+            first = self._sampler(logits).astype(jnp.int32)
+            return first, cache
+
+        self._prefill_fused = jax.jit(fused_prefill, donate_argnums=(5,))
+
+    # ------------------------------------------------------------------
+    # prefill / admission
+    # ------------------------------------------------------------------
+    def _total_len(self, req: ServeRequest) -> int:
+        return len(req.tokens) + len(req.generated)
+
+    def bucket_for(self, req: ServeRequest) -> int:
+        """Padded prefill length for ``req`` (exact length when the model
+        can't be padded safely — see ``_can_bucket``)."""
+        L = self._total_len(req)
+        if not self._can_bucket:
+            return L
+        # derive from bucket_sizes so the ladder the engine pads with and
+        # the ladder the compile-count guards bound against can't drift
+        for b in bucket_sizes(self.max_len):
+            if b >= L:
+                return b
+        return L        # out-of-contract (L > max_len): exact length
+
     def admit(self, req: ServeRequest) -> bool:
         """Prefill ``req`` into a free slot; False if the batch is full.
 
@@ -73,51 +211,94 @@ class ContinuousBatcher:
         """
         if not self.free:
             return False
-        slot = self.free.pop()
-        req.slot = slot
-        toks = np.asarray(req.tokens, np.int64)
-        if req.generated:
-            toks = np.concatenate([toks, np.asarray(req.generated, np.int64)])
-        prompt = jnp.asarray(toks, jnp.int32)[None, :]
-        logits, c1 = transformer.forward(self.cfg, self.params,
-                                         {"tokens": prompt}, mode="prefill",
-                                         max_len=self.max_len)
-        self._write_slot(slot, c1)
-        tok = int(np.asarray(self.sampler(logits))[0])
-        req.generated.append(tok)
-        at_eos = req.eos_id is not None and tok == req.eos_id
-        if len(req.generated) >= req.max_new_tokens or at_eos:
-            req.done = True           # satisfied at admission (re-submit tail)
-            self.free.append(slot)
-            req.slot = -1
-            return True
-        self.active[slot] = req
+        self.admit_batch([req])
         return True
 
-    def _write_slot(self, slot: int, c1: Dict):
-        def write(stack_key: str):
-            if stack_key in c1:
-                for leaf in c1[stack_key]:
-                    self.cache[stack_key][leaf] = \
-                        self.cache[stack_key][leaf].at[:, slot].set(
-                            c1[stack_key][leaf][:, 0])
-        for k in ("attn", "ssm", "rec"):
-            write(k)
-        self.cache["pos"] = self.cache["pos"].at[slot].set(int(c1["pos"][0]))
+    def admit_batch(self, reqs: Sequence[ServeRequest]) -> None:
+        """Prefill several requests in one batched, bucketed call.
 
+        Caller guarantees ``len(reqs) <= len(self.free)``.  Requests are
+        padded to the largest bucket in the group (the scheduler groups by
+        bucket, so normally they share one).  Models that can't pad safely
+        are prefilled one by one at exact length.
+        """
+        assert len(reqs) <= len(self.free), (len(reqs), len(self.free))
+        if not self._can_bucket:
+            for r in reqs:
+                self._admit_rows([r])
+        else:
+            self._admit_rows(list(reqs))
+
+    def _admit_rows(self, reqs: List[ServeRequest]) -> None:
+        bucket = max(self.bucket_for(r) for r in reqs)
+        # Row count is pinned to n_slots on the bucketed path so prefill
+        # compile counts depend ONLY on the length bucket (the compile-cache
+        # contract the CI guard enforces).  Pad rows cost extra FLOPs when
+        # admitting fewer requests than slots, but the cost is bounded by
+        # n_slots x bucket and the batch dim is underutilized at these
+        # sizes anyway; variable row counts would multiply the compile
+        # bound by a row-bucket factor.
+        P = self.n_slots if self._can_bucket else len(reqs)
+        toks = np.zeros((P, bucket), np.int32)
+        last_idx = np.zeros((P,), np.int32)
+        slots = np.zeros((P,), np.int32)
+        valid = np.zeros((P,), bool)
+        assigned: List[Tuple[int, int, ServeRequest]] = []
+        for i, req in enumerate(reqs):
+            t = np.asarray(req.tokens, np.int64)
+            if req.generated:
+                t = np.concatenate([t, np.asarray(req.generated, np.int64)])
+            L = len(t)
+            toks[i, :L] = t
+            last_idx[i] = L - 1
+            slot = self.free.pop()
+            req.slot = slot
+            slots[i] = slot
+            valid[i] = True
+            assigned.append((i, slot, req))
+        first, self.cache = self._prefill_fused(
+            self.params, jnp.asarray(toks), jnp.asarray(last_idx),
+            jnp.asarray(slots), jnp.asarray(valid), self.cache)
+        first_host = np.asarray(first)
+        self.n_prefill_calls += 1
+        self.n_prefill_reqs += len(reqs)
+        for i, slot, req in assigned:
+            tok = int(first_host[i])
+            req.generated.append(tok)
+            at_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or at_eos:
+                req.done = True       # satisfied at admission (re-submit tail)
+                self.free.append(slot)
+                req.slot = -1
+            else:
+                self.active[slot] = req
+        self._io_dirty = True
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
         """One decode step for all active slots; returns finished requests."""
         if not self.active:
-            return []
-        toks = np.zeros((self.n_slots,), np.int32)
-        for slot, req in self.active.items():
-            toks[slot] = req.generated[-1]
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(toks), self.cache)
-        nxt = np.asarray(self.sampler(logits))
+            return []        # no sampler/decode work when nothing is active
+        t0 = time.perf_counter()
+        if self._io_dirty:
+            toks = np.zeros((self.n_slots,), np.int32)
+            act = np.zeros((self.n_slots,), bool)
+            for slot, req in self.active.items():
+                toks[slot] = req.generated[-1]
+                act[slot] = True
+            self._dev_tokens = jnp.asarray(toks)
+            self._dev_active = jnp.asarray(act)
+            self._io_dirty = False
+        nxt, self.cache = self._decode_fused(
+            self.params, self._dev_tokens, self._dev_active, self.cache)
+        self._dev_tokens = nxt
+        nxt_host = np.asarray(nxt)       # the one host transfer per step
+        self.n_decode_steps += 1
         finished = []
         for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
+            tok = int(nxt_host[slot])
             req.generated.append(tok)
             at_eos = req.eos_id is not None and tok == req.eos_id
             if len(req.generated) >= req.max_new_tokens or at_eos:
@@ -125,6 +306,9 @@ class ContinuousBatcher:
                 finished.append(req)
                 del self.active[slot]
                 self.free.append(slot)
+        if finished:
+            self._io_dirty = True        # active mask changed
+        self.decode_time_s += time.perf_counter() - t0
         return finished
 
     def drain(self) -> List[ServeRequest]:
@@ -137,11 +321,40 @@ class ContinuousBatcher:
             self.free.append(slot)
             drained.append(req)
         self.active.clear()
+        self._io_dirty = True
         return drained
 
     @property
     def n_active(self) -> int:
         return len(self.active)
+
+    # ------------------------------------------------------------------
+    # instrumentation
+    # ------------------------------------------------------------------
+    def compile_stats(self) -> Dict[str, int]:
+        """XLA compile counts of the two hot-path functions.  The decode
+        count must stay 1 for the engine's lifetime (adapter switches swap
+        params, never retrace); the prefill count is bounded by the number
+        of length buckets actually seen."""
+        def _n(fn):
+            try:
+                return int(fn._cache_size())
+            except Exception:       # private API moved — report -1, don't die
+                return -1
+        return {"decode_compiles": _n(self._decode_fused),
+                "prefill_compiles": _n(self._prefill_fused)}
+
+    def hotpath_stats(self) -> Dict[str, float]:
+        s: Dict[str, float] = {
+            "n_decode_steps": float(self.n_decode_steps),
+            "decode_time_s": self.decode_time_s,
+            "decode_steps_per_s": (self.n_decode_steps / self.decode_time_s
+                                   if self.decode_time_s > 0 else 0.0),
+            "n_prefill_calls": float(self.n_prefill_calls),
+            "n_prefill_reqs": float(self.n_prefill_reqs),
+        }
+        s.update({k: float(v) for k, v in self.compile_stats().items()})
+        return s
 
 
 class ServingEngine:
@@ -176,12 +389,10 @@ class ServingEngine:
     def _switch_adapter(self, name: Optional[str]):
         if name == self.active_adapter:
             return
-        params = self.base_params if name is None \
+        # params are a traced argument of the batcher's jitted hot path, so
+        # an epoch switch is a pointer swap — no retrace, no recompile
+        self.batcher.params = self.base_params if name is None \
             else self.adapter_params[name]
-        self.batcher.params = params
-        self.batcher._decode = jax.jit(
-            lambda p, t, c: transformer.decode_step(self.cfg, p,
-                                                    {"tokens": t}, c))
         self.active_adapter = name
         self.n_adapter_switches += 1
 
@@ -190,8 +401,9 @@ class ServingEngine:
 
         Epoch barrier: merged-LoRA means a switch swaps the weights for
         EVERY active slot, so a different adapter is only admitted once the
-        batch has drained (the paper's epoch semantics, Fig. 5).  Returns
-        requests already satisfied at admission (re-submitted tails).
+        batch has drained (the paper's epoch semantics, Fig. 5).  Same-bucket
+        requests within a policy batch prefill together in one padded call.
+        Returns requests already satisfied at admission (re-submitted tails).
         """
         satisfied: List[ServeRequest] = []
         while self.batcher.free:
@@ -205,20 +417,25 @@ class ServingEngine:
             if adapter is None:
                 break
             self._switch_adapter(adapter if adapter != "__base__" else None)
-            for pos, item in enumerate(batch):
-                if not self.batcher.free:
-                    # policy batch can exceed free slots under staggered
-                    # occupancy — hand the tail back for the next tick
-                    self.policy.requeue_front(self.policy_state, batch[pos:])
-                    break
-                ok = self.batcher.admit(item.req)
-                assert ok
-                if item.req.first_token_at is None:
-                    item.req.first_token_at = self.clock
-                if item.req.done:
-                    item.req.finished_at = self.clock
-                    self.completed.append(item.req)
-                    satisfied.append(item.req)
+            n_free = len(self.batcher.free)
+            if len(batch) > n_free:
+                # policy batch can exceed free slots under staggered
+                # occupancy — hand the tail back for the next tick
+                self.policy.requeue_front(self.policy_state, batch[n_free:])
+                batch = batch[:n_free]
+            groups: Dict[int, List[_PolicyItem]] = {}
+            for item in batch:
+                groups.setdefault(self.batcher.bucket_for(item.req),
+                                  []).append(item)
+            for _, items in sorted(groups.items()):
+                self.batcher.admit_batch([it.req for it in items])
+                for it in items:
+                    if it.req.first_token_at is None:
+                        it.req.first_token_at = self.clock
+                    if it.req.done:
+                        it.req.finished_at = self.clock
+                        self.completed.append(it.req)
+                        satisfied.append(it.req)
         return satisfied
 
     def step(self, now: Optional[float] = None) -> List[ServeRequest]:
@@ -265,6 +482,9 @@ class ServingEngine:
     def n_pending(self) -> int:
         """Queued (not yet admitted) + in-flight requests."""
         return len(self.queued_requests()) + self.batcher.n_active
+
+    def hotpath_stats(self) -> Dict[str, float]:
+        return self.batcher.hotpath_stats()
 
     def run(self, max_steps: int = 10_000) -> List[ServeRequest]:
         """Drain all queues: admit per the adapter policy, decode until done."""

@@ -61,6 +61,63 @@ def test_decode_attention_sweep(B, C, Hq, Hkv, d, block_k, dtype):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("B,C,Hq,Hkv,d", [
+    (3, 256, 8, 2, 64),
+    (2, 300, 4, 4, 32),              # pad path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_merged_new_token(B, C, Hq, Hkv, d, dtype):
+    """Zero-copy serving mode: the current token's K/V merged in-kernel
+    must equal writing it at position ``lens`` and attending over lens+1
+    entries — for ragged per-slot lens including the 0 and C-1 extremes."""
+    q = rnd((B, 1, Hq, d), dtype, 30)
+    k = rnd((B, C, Hkv, d), dtype, 31)
+    v = rnd((B, C, Hkv, d), dtype, 32)
+    kn = rnd((B, 1, Hkv, d), dtype, 33)
+    vn = rnd((B, 1, Hkv, d), dtype, 34)
+    lens = np.random.default_rng(1).integers(1, C - 1, size=B)
+    lens[0] = 0                       # slot fresh out of (empty) prefill
+    lens[-1] = C - 1                  # slot about to fill its cache
+    lens = jnp.asarray(lens, jnp.int32)
+    o = ops.decode_attention(q, k, v, lens, k_new=kn, v_new=vn, block_k=128)
+    # oracle: write the new token into the cache, then plain ragged decode
+    bidx = jnp.arange(B)
+    kw = k.at[bidx, lens].set(kn[:, 0])
+    vw = v.at[bidx, lens].set(vn[:, 0])
+    r = ref.decode_attention_ref(q[:, 0], jnp.moveaxis(kw, 1, 2),
+                                 jnp.moveaxis(vw, 1, 2), lens + 1)
+    np.testing.assert_allclose(np.asarray(o[:, 0], np.float32),
+                               np.asarray(r, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_decode_step_pallas_matches_xla():
+    """transformer.decode_step behind the backend dispatch: the Pallas
+    flash-decode path (interpret mode here, Mosaic on TPU) must match the
+    XLA online-softmax path on ragged per-slot cache lengths."""
+    from repro.configs.base import get_arch
+    from repro.models import attention as A
+    from repro.models import transformer as T
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2)
+    params = T.init_params(cfg, KEY)
+    prompt = jax.random.randint(jax.random.fold_in(KEY, 40), (2, 12), 0, 250)
+    lg, cache = T.forward(cfg, params, {"tokens": prompt}, mode="prefill",
+                          max_len=32)
+    cache["pos"] = jnp.asarray([12, 7], jnp.int32)    # ragged slot lens
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    with A.decode_attn_impl("xla"):
+        lx, cx = T.decode_step(cfg, params, {"tokens": tok}, cache)
+    with A.decode_attn_impl("pallas"):
+        lp, cp = T.decode_step(cfg, params, {"tokens": tok}, cache)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               atol=1e-4, rtol=1e-4)
+    for grp in ("attn",):
+        for leaf in cx[grp]:
+            np.testing.assert_allclose(np.asarray(cx[grp][leaf]),
+                                       np.asarray(cp[grp][leaf]),
+                                       atol=1e-5, rtol=1e-5)
+
+
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [
     (1, 64, 2, 16, 8, 16),
     (2, 130, 4, 32, 16, 32),     # pad path

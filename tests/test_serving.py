@@ -99,6 +99,85 @@ def test_serving_engine_adapter_epochs(setup):
         assert r.generated == _solo(cfg, p, r.tokens, 3), r.rid
 
 
+def test_bucketed_prefill_matches_solo(setup):
+    """Padded (bucketed) prefill — including a batched same-bucket admit —
+    is token-for-token identical to the unpadded solo path."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, n_slots=4, max_len=96,
+                           sampler=_qargmax)
+    assert cb._can_bucket
+    rng = np.random.default_rng(3)
+    # lengths straddling buckets: 5, 13 -> 16-pad; 23 -> 32-pad; 50 -> 64-pad
+    prompts = [rng.integers(0, 250, size=L) for L in (5, 13, 23, 50)]
+    reqs = [ServeRequest(i, p, max_new_tokens=5) for i, p in
+            enumerate(prompts)]
+    cb.admit_batch(reqs[:2])          # one padded batched prefill call
+    cb.step()
+    cb.admit(reqs[2])                 # staggered admissions mid-decode
+    cb.step()
+    cb.admit(reqs[3])
+    while cb.n_active:
+        cb.step()
+    for i, p in enumerate(prompts):
+        assert reqs[i].generated == _solo(cfg, params, p, 5), i
+    # 3 distinct buckets (16, 32, 64), batched call counts once
+    assert cb.n_prefill_calls == 3
+    cs = cb.compile_stats()
+    if cs["prefill_compiles"] >= 0:   # -1 = cache-size API gone, not a bug
+        assert 0 < cs["prefill_compiles"] <= 3
+        assert cs["decode_compiles"] == 1
+
+
+def test_free_slots_are_inert(setup):
+    """Inactive slots must not advance position or corrupt later
+    admissions: their pos is frozen in-jit and their token is passed
+    through (no EOS-dependent sampler edge cases on garbage logits)."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, n_slots=3, max_len=96,
+                           sampler=_qargmax)
+    rng = np.random.default_rng(4)
+    r0 = ServeRequest(0, rng.integers(0, 250, size=7), max_new_tokens=6)
+    cb.admit(r0)
+    for _ in range(4):
+        cb.step()
+    pos = np.asarray(cb.cache["pos"])
+    for slot in cb.free:
+        assert pos[slot] == 0, (slot, pos)
+    # a request admitted into a previously-idle slot decodes exactly
+    r1 = ServeRequest(1, rng.integers(0, 250, size=9), max_new_tokens=4)
+    cb.admit(r1)
+    while cb.n_active:
+        cb.step()
+    assert r0.generated == _solo(cfg, params, r0.tokens, 6)
+    assert r1.generated == _solo(cfg, params, r1.tokens, 4)
+
+
+def test_adapter_switch_does_not_recompile(setup):
+    """Params are a traced argument: epoch switches swap the pointer, the
+    fused decode step must never retrace (satellite of the hot-path PR)."""
+    cfg, params = setup
+    from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+    lora = randomize_lora(jax.random.fold_in(KEY, 9),
+                          init_lora(KEY, cfg, rank=4))
+    merged = merge_lora(params, lora)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64,
+                        policy=EpochSchedulerPolicy(epoch_budget=2,
+                                                    max_batch=2),
+                        adapter_params={"a": merged})
+    eng.batcher.sampler = _qargmax
+    rng = np.random.default_rng(5)
+    for i in range(6):
+        eng.submit(ServeRequest(i, rng.integers(0, 250, size=6),
+                                max_new_tokens=3,
+                                adapter="a" if i % 2 else None))
+    done = eng.run()
+    assert len(done) == 6
+    assert eng.n_adapter_switches >= 2
+    cs = eng.batcher.compile_stats()
+    if cs["decode_compiles"] >= 0:    # -1 = cache-size API gone, not a bug
+        assert cs["decode_compiles"] == 1, cs
+
+
 def test_epoch_scheduler_beats_eager_at_load():
     """Paper Fig. 14: epoch-based switching cuts mean latency and merges."""
     epoch = simulate_adapter_serving(
