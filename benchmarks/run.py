@@ -19,11 +19,23 @@ Map (paper artifact -> bench):
   (engine, CPU)      -> bench_engine_functional, bench_kernels
   (cluster, CPU)     -> bench_cluster_burst (see also cluster_bench.py for
                         the JSON-emitting trajectory entry)
-  (hot path, CPU)    -> bench_decode_hotpath (appends steps/sec + compile
-                        counts to BENCH_decode_hotpath.json)
+  (hot path, CPU)    -> bench_decode_hotpath (steps/sec + compile counts
+                        -> BENCH_decode_hotpath.json)
+  (recovery, CPU)    -> bench_recovery (post-crash TTFT: KV migration vs
+                        re-prefill -> BENCH_recovery.json)
+
+Run ``python benchmarks/run.py [bench_name ...] [--small]`` to run a
+subset (CI smoke uses ``bench_recovery --small``).  JSON trajectories are
+keyed by (commit, config): re-running a bench on the same commit replaces
+its entry in place instead of duplicating it.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
+import os
+import subprocess
 import time
 
 import jax
@@ -45,6 +57,46 @@ ROWS = []
 def emit(name: str, us: float, derived: str = ""):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def append_keyed_entry(path: str, entry: dict) -> int:
+    """Append ``entry`` to a ``{"entries": [...]}`` trajectory file,
+    replacing in place any existing entry with the same
+    (``commit``, ``config``) key — re-running a bench on the same commit
+    and configuration must update its row, not duplicate it.  Returns the
+    entry count."""
+    doc = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except Exception:
+            # never silently erase trajectory history: shelve the
+            # unreadable file and start a fresh one
+            corrupt = path + ".corrupt"
+            os.replace(path, corrupt)
+            print(f"# WARN: {path} was unreadable; moved to {corrupt}")
+    entries = doc.setdefault("entries", [])
+    for i, e in enumerate(entries):
+        if (e.get("commit"), e.get("config")) == (entry.get("commit"),
+                                                  entry.get("config")):
+            entries[i] = entry
+            break
+    else:
+        entries.append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return len(entries)
 
 
 # ---------------------------------------------------------------------------
@@ -283,9 +335,6 @@ def bench_decode_hotpath():
     and reports compile counts.  Results append to the
     ``BENCH_decode_hotpath.json`` trajectory.
     """
-    import json
-    import os
-
     from repro.serving.engine import (ContinuousBatcher, ServeRequest,
                                       ServingEngine, bucket_sizes,
                                       quantized_greedy)
@@ -367,16 +416,12 @@ def bench_decode_hotpath():
          f"buckets={n_buckets} lengths=16 "
          f"decode_compiles={cs['decode_compiles']}")
 
-    # -- JSON trajectory ---------------------------------------------------
+    # -- JSON trajectory (keyed: re-runs replace, never duplicate) ---------
     path = "BENCH_decode_hotpath.json"
-    doc = {"entries": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                doc = json.load(f)
-        except Exception:
-            pass
-    doc["entries"].append({
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"arch": cfg.name, "n_slots": n_slots, "max_len": max_len,
+                   "steps": steps},
         "ts": time.time(),
         "fused_steps_per_s": fused_sps,
         "legacy_steps_per_s": legacy_sps,
@@ -386,9 +431,188 @@ def bench_decode_hotpath():
         "decode_compiles": cs["decode_compiles"],
         "n_buckets": n_buckets,
     })
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
-    print(f"# wrote {path} ({len(doc['entries'])} entries)")
+    print(f"# wrote {path} ({n} entries)")
+
+
+def bench_recovery(small: bool = False):
+    """Crash recovery: KV-snapshot migration vs re-prefill (functional).
+
+    Drains mid-decode requests off a "crashed" serving engine (exporting
+    their KV snapshots) and hands them to two identical warmed survivors.
+    Post-crash TTFT = wall-clock from the hand-off until every displaced
+    request has produced its next token: the migrated survivor imports
+    snapshots (zero re-prefilled prompt tokens — asserted via its prefill
+    counters), the baseline re-submits and re-prefills prompt+prefix.
+    Asserts the migrated path is strictly faster AND that both finish
+    with identical greedy continuations (the equivalence oracle).  The
+    full lane also times a partial crash routed through
+    ``reconstruct_cache``.  Appends to ``BENCH_recovery.json`` keyed by
+    commit+config (the CI fast-lane smoke runs this with ``--small``).
+    """
+    from repro.cluster import ClusterConfig
+    from repro.models import transformer as T
+    from repro.serving.engine import (ServeRequest, ServingEngine,
+                                      quantized_greedy)
+
+    n_layers = 2 if small else 4
+    n_victims = 3
+    prompt_len, max_len = 72, 96
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=n_layers)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 250, size=prompt_len)
+               for _ in range(n_victims)]
+
+    def make_engine():
+        e = ServingEngine(cfg, params, n_slots=4, max_len=max_len)
+        e.batcher.sampler = quantized_greedy
+        return e
+
+    # "crashed" server: victims mid-decode, drained with their snapshots
+    crashed = make_engine()
+    victims = [ServeRequest(i, p, max_new_tokens=30)
+               for i, p in enumerate(prompts)]
+    for r in victims:
+        crashed.submit(r)
+    for _ in range(6):
+        crashed.step()
+    drained = crashed.drain_inflight()
+    assert len(drained) == n_victims \
+        and all(r.snapshot is not None for r in drained)
+
+    def clone(r):
+        c = ServeRequest(r.rid, r.tokens, r.max_new_tokens, r.adapter,
+                         r.arrival, generated=list(r.generated))
+        c.snapshot = r.snapshot       # numpy rows: shared read-only
+        return c
+
+    def make_survivor():
+        # warm every post-crash code path OUTSIDE the timed window: the
+        # prefill bucket the victims land in, the decode step, and the
+        # snapshot-import jit — so the window measures steady-state
+        # recovery work, not XLA compiles
+        b = make_engine()
+        b.submit(ServeRequest(999, prompts[0], max_new_tokens=2))
+        b.run()
+        b.batcher.warm_import()
+        return b
+
+    def time_to_next_token(survivor, reqs, *, migrate: bool) -> float:
+        """Post-crash TTFT: hand the displaced requests to the survivor
+        and run until each has produced its next token."""
+        before = {r.rid: len(r.generated) for r in reqs}
+        t0 = time.perf_counter()
+        for r in reqs:
+            if migrate:
+                assert survivor.admit_with_state(r), "import refused"
+            else:
+                survivor.submit(r)
+        while not all(len(r.generated) > before[r.rid] or r.done
+                      for r in reqs):
+            survivor.step()
+        return time.perf_counter() - t0
+
+    def median_window(survivor, *, migrate: bool, reps: int = 5):
+        """Median over repeated hand-off windows (the displaced requests
+        are re-cloned and the survivor re-drained between reps, so each
+        window measures the same steady-state recovery work)."""
+        ts = []
+        for _ in range(reps):
+            batch = [clone(r) for r in drained]
+            if not migrate:
+                for r in batch:
+                    r.snapshot = None     # the state died with the server
+            ts.append(time_to_next_token(survivor, batch, migrate=migrate))
+            survivor.drain_inflight(export_state=False)
+        # a final untimed admission rides to completion for the
+        # equivalence check below
+        final = [clone(r) for r in drained]
+        for r in final:
+            if migrate:
+                assert survivor.admit_with_state(r), "import refused"
+            else:
+                r.snapshot = None
+                survivor.submit(r)
+        return float(np.median(ts)), final
+
+    b_mig, b_rep = make_survivor(), make_survivor()
+
+    # tokens the baseline recomputes = prompt + generated prefix at
+    # re-submission; migration moves their state instead (pos = that - 1)
+    reprefill_tokens = sum(len(r.tokens) + len(r.generated) for r in drained)
+    migrated_tokens = sum(r.snapshot.pos for r in drained)
+
+    prefills_before = b_mig.batcher.n_prefill_reqs
+    t_mig, mig_reqs = median_window(b_mig, migrate=True)
+    t_rep, rep_reqs = median_window(b_rep, migrate=False)
+    assert b_mig.batcher.n_prefill_reqs == prefills_before, \
+        "migration re-prefilled — zero-re-prefill invariant broken"
+    assert b_mig.batcher.n_migrated_in > 0
+    assert t_mig < t_rep, (
+        f"post-crash TTFT regression: migrate {t_mig * 1e3:.1f}ms is not "
+        f"faster than re-prefill {t_rep * 1e3:.1f}ms")
+    # equivalence oracle: both recovery modes must finish with identical
+    # greedy continuations
+    b_mig.run()
+    b_rep.run()
+    for m, p in zip(mig_reqs, rep_reqs):
+        assert m.generated == p.generated, (m.rid, m.generated, p.generated)
+    emit("recovery_migrate_post_crash_ttft", t_mig * 1e6,
+         f"migrated={n_victims} migrated_tokens={migrated_tokens} "
+         f"reprefilled_tokens=0")
+    emit("recovery_reprefill_post_crash_ttft", t_rep * 1e6,
+         f"rerouted={n_victims} reprefilled_tokens={reprefill_tokens} "
+         f"speedup={t_rep / t_mig:.2f}x")
+
+    # partial crash: in-place per-layer reconstruction (full lane only)
+    recon = {}
+    if not small:
+        from repro.cluster import ClusterServer
+        ccfg = ClusterConfig(n_devices=4, n_slots=4)
+        server = ClusterServer(0, cfg, params, ccfg)
+        while server.state == "loading":
+            server.tick(0.0)
+        for i in range(3):
+            server.submit(ServeRequest(i, rng.integers(0, 250, size=32),
+                                       max_new_tokens=16))
+        # two serving ticks: requests decode while the chain still spans
+        # several devices (full load would collapse ownership onto one)
+        for _ in range(2):
+            server.tick(0.0)
+        # pick a device whose death loses SOME layers (partial, not total)
+        cands = [d for d in range(ccfg.n_devices)
+                 if 0 < sum(server.engine.lost_state_layers([d]))
+                 < cfg.n_layers]
+        assert cands, "no partial-loss device — chain collapsed early"
+        # fewest lost layers = most surviving KV for the Q-only reuse path
+        cands.sort(key=lambda d: sum(server.engine.lost_state_layers([d])))
+        t0 = time.perf_counter()
+        server.crash([cands[0]])
+        t_recon = time.perf_counter() - t0
+        recon = dict(server.last_recovery)
+        assert recon.get("reconstructed_reqs", 0) > 0
+        assert recon.get("layers_skipped", 0) + recon.get("kv_reused", 0) > 0
+        emit("recovery_partial_reconstruct", t_recon * 1e6,
+             f"kv_reused={recon.get('kv_reused', 0):.0f} "
+             f"full_prefill={recon.get('full_prefill', 0):.0f} "
+             f"layers_skipped={recon.get('layers_skipped', 0):.0f}")
+
+    path = "BENCH_recovery.json"
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"arch": cfg.name, "n_layers": n_layers,
+                   "n_victims": n_victims, "prompt_len": prompt_len,
+                   "small": small},
+        "ts": time.time(),
+        "migrate_post_crash_ttft_s": t_mig,
+        "reprefill_post_crash_ttft_s": t_rep,
+        "speedup": t_rep / t_mig,
+        "migrated_reqs": n_victims,
+        "migrated_tokens": migrated_tokens,
+        "reprefill_tokens_baseline": reprefill_tokens,
+        "partial_reconstruct": recon,
+    })
+    print(f"# wrote {path} ({n} entries)")
 
 
 def bench_kernels():
@@ -422,14 +646,32 @@ BENCHES = [
     bench_breakdown_lora, bench_strategy_crossover, bench_scaling_shapes,
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
-    bench_decode_hotpath, bench_kernels,
+    bench_decode_hotpath, bench_recovery, bench_kernels,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*",
+                    help="bench function names to run (default: all)")
+    ap.add_argument("--small", action="store_true",
+                    help="reduced sizes for benches that support it "
+                         "(CI fast-lane smoke)")
+    args = ap.parse_args(argv)
+    sel = BENCHES
+    if args.benches:
+        by_name = {b.__name__: b for b in BENCHES}
+        unknown = [n for n in args.benches if n not in by_name]
+        if unknown:
+            raise SystemExit(f"unknown benches {unknown}; "
+                             f"available: {sorted(by_name)}")
+        sel = [by_name[n] for n in args.benches]
     print("name,us_per_call,derived")
-    for b in BENCHES:
-        b()
+    for b in sel:
+        if "small" in inspect.signature(b).parameters:
+            b(small=args.small)
+        else:
+            b()
 
 
 if __name__ == "__main__":

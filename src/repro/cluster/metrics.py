@@ -8,16 +8,23 @@ clock seconds (logical ticks × tick_s on CPU; wall seconds on real slices).
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 
 def percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0,100]); 0.0 on empty input."""
+    """Nearest-rank percentile (q in [0,100]); 0.0 on empty input.
+
+    Nearest rank is the smallest 1-based rank k with k/n >= q/100, i.e.
+    ``k = ceil(q/100 * n)`` — NOT a rounded interpolation over the index
+    range (``round(q/100 * (n-1))`` biases high percentiles downward,
+    e.g. it reports p50 of 100 samples as the 51st value).
+    """
     if not xs:
         return 0.0
     s = sorted(xs)
-    k = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    k = min(len(s) - 1, max(0, math.ceil(q / 100.0 * len(s)) - 1))
     return s[k]
 
 
@@ -53,6 +60,11 @@ class ClusterMetrics:
     gpu_seconds: float = 0.0
     events: List[Tuple[float, str, str]] = field(default_factory=list)
     hotpath: Dict[str, float] = field(default_factory=dict)
+    # crash-recovery accounting: how each displaced in-flight request was
+    # resumed ("migrate" = KV snapshot imported on a survivor, "reprefill" =
+    # prompt+prefix recomputed, "reconstruct" = partial-crash in-place
+    # rebuild) and how many prompt/prefix tokens each path saved or re-spent
+    recovery: Dict[str, float] = field(default_factory=dict)
 
     # ---- recording --------------------------------------------------------
     def on_submit(self, rid: int, arrival: float) -> None:
@@ -81,6 +93,33 @@ class ClusterMetrics:
 
     def on_event(self, t: float, kind: str, detail: str = "") -> None:
         self.events.append((t, kind, detail))
+
+    def on_recovery(self, mode: str, rid: int, n_tokens: int) -> None:
+        """One in-flight request resumed after a crash via ``mode``.
+
+        ``n_tokens``: for "migrate", the prompt+prefix tokens whose state
+        moved instead of being recomputed; for "reprefill", the tokens that
+        had to be re-prefilled on the survivor.
+        """
+        assert mode in ("migrate", "reprefill"), mode
+        self.recovery[f"mode_{mode}"] = \
+            self.recovery.get(f"mode_{mode}", 0.0) + 1.0
+        key = "migrated_tokens" if mode == "migrate" else "reprefill_tokens"
+        self.recovery[key] = self.recovery.get(key, 0.0) + float(n_tokens)
+
+    def on_reconstruct(self, stats: Dict[str, float]) -> None:
+        """Accumulate one partial-crash ``reconstruct_cache`` stats dict
+        (per-layer work counts: kv_reused / full_prefill / window_recompute
+        / layers_skipped / layers_recomputed + token counts); the
+        reconstructed requests count toward ``mode_reconstruct``."""
+        for k, v in stats.items():
+            if k == "reconstructed_reqs":
+                continue              # surfaced as mode_reconstruct below
+            key = f"reconstruct_{k}"
+            self.recovery[key] = self.recovery.get(key, 0.0) + float(v)
+        self.recovery["mode_reconstruct"] = \
+            self.recovery.get("mode_reconstruct", 0.0) \
+            + float(stats.get("reconstructed_reqs", 0.0))
 
     def record_hotpath(self, stats: Dict[str, float]) -> None:
         """Accumulate one server's decode hot-path stats (see
@@ -118,6 +157,14 @@ class ClusterMetrics:
         }
         for k, v in self.hotpath.items():
             out[f"hotpath_{k}"] = v
+        # always-present recovery counters (zero when no crash happened) so
+        # trajectory diffs and the bench JSON have stable keys
+        rec = {"mode_migrate": 0.0, "mode_reprefill": 0.0,
+               "mode_reconstruct": 0.0, "migrated_tokens": 0.0,
+               "reprefill_tokens": 0.0}
+        rec.update(self.recovery)
+        for k, v in rec.items():
+            out[f"recovery_{k}"] = v
         if self.hotpath.get("decode_time_s", 0.0) > 0:
             out["hotpath_decode_steps_per_s"] = \
                 self.hotpath["n_decode_steps"] / self.hotpath["decode_time_s"]
@@ -131,6 +178,7 @@ class ClusterMetrics:
             "queue_depth": self.queue_depth,
             "n_servers": self.n_servers,
             "events": self.events,
+            "recovery": self.recovery,
         }
         blob = json.dumps(doc, indent=1)
         if path:

@@ -49,6 +49,8 @@ class ClusterConfig:
     load_rounds_per_tick: int = 1  # cold-start progress per tick
     recovery_ticks: int = 2        # service pause: crash -> rejoined chain
     epoch_budget: int = 4          # adapter epoch budget per server
+    migrate_on_crash: bool = True  # KV-snapshot migration to survivors
+    # (False = legacy re-prefill re-route; kept as the bench baseline)
 
 
 class ClusterServer:
@@ -70,6 +72,9 @@ class ClusterServer:
         self.idle_ticks = 0
         self.served_while_loading = False   # admitted before fully loaded
         self._recover_left = 0
+        self.last_recovery: Dict[str, float] = {}  # partial-crash rebuild
+        # stats (kv_reconstruct work counts); read by the router right
+        # after crash(), reset only at this server's next crash()
 
     # ---- scheduling surface ----------------------------------------------
     @property
@@ -123,18 +128,38 @@ class ClusterServer:
 
     def crash(self, device_ids: Optional[Sequence[int]] = None
               ) -> List[ServeRequest]:
-        """Kill devices (all of them by default) and hand back every
-        in-flight + queued request for cross-server re-routing."""
-        drained = self.srv.drain_inflight()
+        """Kill devices (all of them by default).
+
+        Whole-server crash: hands back every in-flight + queued request
+        for cross-server re-routing; in-flight requests carry their
+        ``KVSnapshot`` so survivors can resume them without re-prefill.
+
+        Partial crash (survivors remain): the server keeps its requests —
+        only the layers whose KV/state lived on the dead devices are
+        rebuilt in place via ``reconstruct_cache`` (Q-only recompute for
+        attention layers whose KV survived, §4.4.2); work stats land in
+        ``last_recovery`` for the router's metrics.  Returns [].
+        """
         ids = (list(device_ids) if device_ids is not None
                else [d.idx for d in self.engine.devices])
-        self.engine.crash(ids)
-        if any(d.alive for d in self.engine.devices):
-            self.state = "recovering"
-            self._recover_left = self.ccfg.recovery_ticks
-        else:
+        dead = set(ids)
+        survivors = [d.idx for d in self.engine.devices
+                     if d.alive and d.idx not in dead]
+        self.last_recovery = {}
+        if not survivors:
+            drained = self.srv.drain_inflight(
+                export_state=self.ccfg.migrate_on_crash)
+            self.engine.crash(ids)
             self.state = "down"
-        return drained
+            return drained
+        lost = self.engine.lost_state_layers(ids)   # before devices die
+        self.engine.crash(ids)
+        if any(lost):
+            self.last_recovery = self.srv.reconstruct_inflight(
+                [not l for l in lost])
+        self.state = "recovering"
+        self._recover_left = self.ccfg.recovery_ticks
+        return []
 
     def rejoin(self) -> None:
         """Reboot a fully-down server back into the fleet (fresh cold
@@ -143,7 +168,8 @@ class ClusterServer:
         self.state = "loading"
 
     def retire(self) -> List[ServeRequest]:
-        leftovers = self.srv.drain_inflight()
+        # scale-down is voluntary: leftovers re-queue through dispatch
+        leftovers = self.srv.drain_inflight(export_state=False)
         self.state = "retired"
         return leftovers
 
@@ -180,16 +206,65 @@ class ClusterRouter:
 
     def crash_server(self, sid: int,
                      device_ids: Optional[Sequence[int]] = None) -> None:
-        """Crash a server; its requests re-route to the head of the queue."""
-        drained = self.servers[sid].crash(device_ids)
-        inflight = sum(1 for r in drained if r.generated)
+        """Crash a server and recover its work, cheapest mode first.
+
+        Whole-server crash: each in-flight request's ``KVSnapshot``
+        migrates to a survivor with a free slot (``admit_with_state`` —
+        zero prompt tokens re-prefilled); requests no survivor can take
+        fall back to the queue and re-prefill on admission (the legacy
+        path, also the behaviour when ``migrate_on_crash`` is off).
+        Partial crash: the server rebuilds only its dead layers in place
+        (``reconstruct_cache``) and keeps serving; nothing re-routes.
+        Per-mode counts and token savings land in the metrics' recovery
+        counters.
+        """
+        server = self.servers[sid]
+        drained = server.crash(device_ids)
+        if server.last_recovery:
+            self.metrics.on_reconstruct(server.last_recovery)
+            self.metrics.on_event(
+                self.clock, "recover",
+                f"server{sid} reconstruct "
+                f"reqs={server.last_recovery.get('reconstructed_reqs', 0):.0f} "
+                f"kv_reused={server.last_recovery.get('kv_reused', 0):.0f} "
+                f"full_prefill={server.last_recovery.get('full_prefill', 0):.0f}")
+        migrated = reprefilled = 0
+        leftovers: List[ServeRequest] = []
+        for req in drained:
+            if not req.generated:          # queued-only: plain re-dispatch
+                req.snapshot = None
+                leftovers.append(req)
+                continue
+            self.metrics.on_reroute(req.rid)   # mid-decode: moved servers
+            n_state = req.snapshot.pos if req.snapshot is not None else 0
+            if (self.ccfg.migrate_on_crash and req.snapshot is not None
+                    and self._try_migrate(req)):
+                migrated += 1
+                self.metrics.on_recovery("migrate", req.rid, n_state)
+            else:
+                req.snapshot = None        # state lost: re-prefill path
+                reprefilled += 1
+                self.metrics.on_recovery(
+                    "reprefill", req.rid,
+                    len(req.tokens) + len(req.generated))
+                leftovers.append(req)
         self.metrics.on_event(self.clock, "crash",
-                              f"server{sid} rerouted={inflight} "
-                              f"requeued={len(drained) - inflight}")
-        for req in reversed(drained):
-            if req.generated:      # mid-decode: exercises exact resumption
-                self.metrics.on_reroute(req.rid)
+                              f"server{sid} migrated={migrated} "
+                              f"reprefilled={reprefilled} "
+                              f"requeued={len(leftovers) - reprefilled}")
+        for req in reversed(leftovers):
             self.queue.appendleft(req)
+
+    def _try_migrate(self, req: ServeRequest) -> bool:
+        """Import ``req``'s snapshot into the least-loaded admitting
+        survivor with a free slot; False when none can take it."""
+        cands = [s for s in self.servers
+                 if s.admitting and s.srv.batcher.free]
+        for s in sorted(cands, key=lambda s: (s.load, s.sid)):
+            s.srv.clock = max(s.srv.clock, self.clock)
+            if s.srv.admit_with_state(req):
+                return True
+        return False
 
     def rejoin_server(self, sid: int) -> None:
         self.servers[sid].rejoin()

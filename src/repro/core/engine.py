@@ -149,6 +149,24 @@ class PipeBoostEngine:
                 mask[i] = True
         return mask
 
+    def lost_state_layers(self, device_ids: Sequence[int]) -> List[bool]:
+        """Per-global-layer: True if that layer's KV/recurrent state lives
+        on one of ``device_ids`` under the current serving assignment.
+
+        Ownership follows the viable pipeline chain (each chained segment's
+        KV sits in its device's HBM); with no chain yet, nothing is owned.
+        Must be called BEFORE ``crash`` marks the devices dead — the chain
+        is computed over alive devices.  This is what lets a partial crash
+        reconstruct only the layers that actually died (paper §4.4.2)
+        instead of re-prefilling everything.
+        """
+        dead = set(device_ids)
+        ch = self.chain()
+        if ch is None:
+            return [False] * self.cfg.n_layers
+        return self._segment_layer_mask(
+            {seg for dev, seg in ch if dev in dead})
+
     def prefill(self, batch: Dict) -> jnp.ndarray:
         """Serve a prefill the moment a chain exists (the paper's point:
         this happens after each device loaded only ~1/N of the model)."""

@@ -6,6 +6,10 @@ per-layer "has state" mask, rebuild the missing per-layer caches:
   * attention layers WITH KV: recompute only Q over the full sequence and
     attend against the surviving cache (K/V projections skipped) — exact,
     because cached K/V equal what a recompute would produce;
+  * attention layers WITH KV but a *wrapped* ring buffer (windowed cache,
+    sequence longer than the window): positions older than the ring were
+    evicted, so Q-only reuse can't reproduce their outputs — the layer's
+    activations are recomputed in full while the surviving ring is kept;
   * attention layers WITHOUT KV: full prefill for that layer, cache stored;
   * SSM / RG-LRU layers WITHOUT state: full re-scan (there is no per-position
     memo to reuse — see DESIGN.md §5 mamba2 note); layers WITH state above
@@ -71,7 +75,12 @@ def reconstruct_cache(cfg: ArchConfig, params, batch: Dict,
     deepest_missing = max((i for i, h in enumerate(has_state) if not h),
                           default=-1)
     stats = {"layers_recomputed": 0, "kv_reused": 0, "full_prefill": 0,
-             "layers_skipped": 0}
+             "window_recompute": 0, "layers_skipped": 0,
+             # token-granular work counts (surface in cluster metrics):
+             # q_only_tokens  — positions whose K/V were reused (Q recomputed)
+             # prefill_tokens — positions run through a full layer forward
+             #                  (missing layers AND wrapped-ring recomputes)
+             "q_only_tokens": 0, "prefill_tokens": 0}
 
     new_cache = {k: (dict(v) if isinstance(v, dict) else v)
                  for k, v in cache.items()}
@@ -83,7 +92,17 @@ def reconstruct_cache(cfg: ArchConfig, params, batch: Dict,
             break
         p_l = _layer_params(params, kind, ki)
         if kind in ("attn", "moe"):
-            if has_state[gi]:
+            if has_state[gi] and cfg.attn_window > 0 and S > cap:
+                # Wrapped ring: positions older than S - cap were evicted,
+                # so Q-only reuse cannot reproduce their outputs (a query's
+                # window would attend keys that no longer exist).  The
+                # surviving ring stays as-is (it IS still exact for
+                # decode); the layer's *activations* are recomputed in
+                # full so deeper rebuilds see correct inputs.
+                x, _, _ = transformer.attn_layer_fwd(cfg, p_l, x, positions)
+                stats["window_recompute"] += 1
+                stats["prefill_tokens"] += S
+            elif has_state[gi]:
                 # Q-only recompute against the surviving cache (exact reuse)
                 h = _apply_norm(cfg, p_l["ln1"], x)
                 q, _, _ = _project_qkv(cfg, p_l, h)
@@ -105,24 +124,28 @@ def reconstruct_cache(cfg: ArchConfig, params, batch: Dict,
                     y = _apply_mlp(cfg, p_l["mlp"], h2)
                 x = x + y
                 stats["kv_reused"] += 1
+                stats["q_only_tokens"] += S
             else:
                 x, kv, _ = transformer.attn_layer_fwd(cfg, p_l, x, positions,
                                                       kv_write=cap)
                 new_cache["attn"]["k"] = new_cache["attn"]["k"].at[ai].set(kv[0])
                 new_cache["attn"]["v"] = new_cache["attn"]["v"].at[ai].set(kv[1])
                 stats["full_prefill"] += 1
+                stats["prefill_tokens"] += S
         elif kind == "ssm":
             x, (conv_s, state) = mamba2.ssm_block_fwd(cfg, p_l, x)
             if not has_state[gi]:
                 new_cache["ssm"]["conv"] = new_cache["ssm"]["conv"].at[ki].set(conv_s)
                 new_cache["ssm"]["state"] = new_cache["ssm"]["state"].at[ki].set(state)
                 stats["full_prefill"] += 1
+                stats["prefill_tokens"] += S
         elif kind == "rec":
             x, st = rec_layer_fwd(cfg, p_l, x, want_state=True)
             if not has_state[gi]:
                 new_cache["rec"]["conv"] = new_cache["rec"]["conv"].at[ki].set(st[0])
                 new_cache["rec"]["h"] = new_cache["rec"]["h"].at[ki].set(st[1])
                 stats["full_prefill"] += 1
+                stats["prefill_tokens"] += S
         stats["layers_recomputed"] += 1
     return new_cache, stats
 

@@ -83,6 +83,8 @@ def attention_partial(
     q_offset=0,                # global position of q[0] (int or traced scalar)
     k_offset=0,                # global position of k[0]
     kv_valid_len=None,         # mask k positions >= this (ragged caches)
+    kv_slot_mask=None,         # (B, Sk) bool per-slot mask (ring buffers:
+                               # validity is per slot, not a prefix length)
     block_k: int = 1024,
     block_q: int = 0,          # opt-in (pipeline full-seq stages): 0 = off —
                                # reshaping a sequence-sharded q breaks SPMD
@@ -109,8 +111,8 @@ def attention_partial(
             return attention_partial(
                 qblk, k, v, causal=causal, window=window,
                 q_offset=q_offset + i * block_q, k_offset=k_offset,
-                kv_valid_len=kv_valid_len, block_k=block_k, block_q=0,
-                scale=scale)
+                kv_valid_len=kv_valid_len, kv_slot_mask=kv_slot_mask,
+                block_k=block_k, block_q=0, scale=scale)
 
         parts = jax.lax.map(one, (qb, jnp.arange(nq)))
         acc = jnp.moveaxis(parts.acc, 0, 1).reshape(B, Sq, Hq, hd)
@@ -129,10 +131,16 @@ def attention_partial(
     vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     kb = kp.reshape(B, nk, block_k, Hkv, hd)
     vb = vp.reshape(B, nk, block_k, Hkv, hd)
+    if kv_slot_mask is not None:
+        smp = jnp.pad(jnp.asarray(kv_slot_mask, bool), ((0, 0), (0, pad_k)))
+        smb = jnp.moveaxis(smp.reshape(B, nk, block_k), 1, 0)  # (nk, B, bk)
 
     def step(carry, blk):
         acc, m, l = carry
-        kblk, vblk, kidx = blk                      # (B,bk,Hkv,hd) x2, ()
+        if kv_slot_mask is not None:
+            kblk, vblk, kidx, sblk = blk            # ... + (B, bk) slot mask
+        else:
+            kblk, vblk, kidx = blk                  # (B,bk,Hkv,hd) x2, ()
         k_pos = k_offset + kidx * block_k + jnp.arange(block_k)
         # logits: (B, Sq, Hkv, G, bk)
         s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kblk.astype(jnp.float32))
@@ -146,6 +154,8 @@ def attention_partial(
             else:  # per-batch valid lengths (continuous batching)
                 mask = mask & (k_pos[None, :] < vl[:, None]
                                )[:, None, None, None, :]
+        if kv_slot_mask is not None:
+            mask = mask & sblk[:, None, None, None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_blk = jnp.max(s, axis=-1)                 # (B,Sq,Hkv,G)
         m_new = jnp.maximum(m, m_blk)
@@ -162,8 +172,10 @@ def attention_partial(
     l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
     kb_t = jnp.moveaxis(kb, 1, 0)                   # (nk, B, bk, Hkv, hd)
     vb_t = jnp.moveaxis(vb, 1, 0)
-    (acc, m, l), _ = jax.lax.scan(
-        step, (acc0, m0, l0), (kb_t, vb_t, jnp.arange(nk)))
+    xs = (kb_t, vb_t, jnp.arange(nk))
+    if kv_slot_mask is not None:
+        xs = xs + (smb,)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), xs)
     return AttnPartial(acc.reshape(B, Sq, Hq, hd),
                        m.reshape(B, Sq, Hq), l.reshape(B, Sq, Hq))
 
@@ -284,6 +296,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
 
 
 def decode_attention_merged(q, k_cache, v_cache, cache_len, k_new, v_new, *,
+                            kv_slot_mask=None,
                             scale: Optional[float] = None) -> jnp.ndarray:
     """Zero-copy decode attention: the current token's K/V are merged as an
     online-softmax partial instead of being written into the cache first.
@@ -294,8 +307,14 @@ def decode_attention_merged(q, k_cache, v_cache, cache_len, k_new, v_new, *,
     ``cache_len`` and attending over ``cache_len + 1`` entries, but the
     cache is only read — the single-row write happens once, outside the
     layer scan, on the donated cache (see transformer.decode_step).
+
+    ``kv_slot_mask`` (B, C) bool extends the zero-copy trick to ring-
+    buffered (windowed) caches: slot validity there is not a prefix length
+    (the slot the new token will overwrite holds the evicted, out-of-window
+    entry and must not be attended).  The masked path always lowers through
+    XLA — the Pallas kernel only understands prefix lengths.
     """
-    if scale is None and _use_pallas_decode():
+    if kv_slot_mask is None and scale is None and _use_pallas_decode():
         from repro.kernels import ops
         B = q.shape[0]
         lens = jnp.broadcast_to(
@@ -304,6 +323,7 @@ def decode_attention_merged(q, k_cache, v_cache, cache_len, k_new, v_new, *,
                                     k_new=k_new, v_new=v_new)
     p_old = attention_partial(q, k_cache, v_cache, causal=False, window=0,
                               kv_valid_len=cache_len,
+                              kv_slot_mask=kv_slot_mask,
                               block_k=k_cache.shape[1], scale=scale)
     p_new = attention_partial(q, k_new, v_new, causal=False, window=0,
                               block_k=1, scale=scale)

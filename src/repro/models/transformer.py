@@ -248,16 +248,19 @@ def attn_layer_step(cfg, p, x, position, k_cache, v_cache, cache_len, *,
     """Single-token step. x: (B, 1, D); caches (B, C, kv, hd);
     cache_len: (B,) per-slot valid lengths (continuous batching).
 
-    ``zero_copy=False`` (ring-buffer / windowed path): the current token's
-    K/V are written into the cache here and the updated cache-sized arrays
-    are returned — the classic copy-per-layer loop.
+    ``zero_copy=False`` (legacy copy path): the current token's K/V are
+    written into the cache here and the updated cache-sized arrays are
+    returned — the classic copy-per-layer loop.
 
-    ``zero_copy=True`` (full-length caches): the cache is only *read*; the
-    current token is merged into the softmax as an online partial
+    ``zero_copy=True``: the cache is only *read*; the current token is
+    merged into the softmax as an online partial
     (``decode_attention_merged``) and only its (B, kv, hd) K/V row is
     returned.  The caller performs one scatter of all layers' rows into
     the donated cache after the layer scan — decode stops rewriting
-    cache-sized buffers every layer.
+    cache-sized buffers every layer.  Ring-buffered (windowed) caches ride
+    the same path: eviction becomes a per-slot mask on the read (the slot
+    the new row will land in holds the evicted, out-of-window entry), and
+    the post-scan scatter at ``pos % C`` performs the overwrite.
     """
     h = _apply_norm(cfg, p["ln1"], x)
     q, k, v = _project_qkv(cfg, p, h)
@@ -267,8 +270,17 @@ def attn_layer_step(cfg, p, x, position, k_cache, v_cache, cache_len, *,
     B, C = k_cache.shape[:2]
     if zero_copy:
         valid_old = jnp.minimum(cache_len, C)
+        slot_mask = None
+        if cfg.attn_window > 0:
+            # ring invariant: slot j holds the latest position p < pos with
+            # p % C == j.  Once the ring is full the slot the new token
+            # overwrites (pos % C) holds position pos - C — exactly one
+            # step outside the window — so it must not be attended.
+            j = jnp.arange(C)[None, :]
+            p_len = cache_len[:, None]
+            slot_mask = (j < p_len) & ((p_len < C) | (j != jnp.mod(p_len, C)))
         o = attn_lib.decode_attention_merged(q, k_cache, v_cache, valid_old,
-                                             k, v)
+                                             k, v, kv_slot_mask=slot_mask)
         kv_out = (k[:, 0], v[:, 0])
     else:
         slot = jnp.mod(cache_len, C)      # == cache_len when C >= max_len
@@ -494,31 +506,28 @@ def decode_step(cfg: ArchConfig, params: Params, batch: Dict,
             attnlike_cursor += count
             kc = cache["attn"]["k"][a0:a0 + count]
             vc = cache["attn"]["v"][a0:a0 + count]
-            # Zero-copy hot path (full-length caches): the scan only READS
-            # the cache and emits each layer's new (B, kv, hd) row; one
-            # scatter after the scan writes all rows — with a donated cache
-            # that's an in-place O(L*B)-row update instead of an
-            # O(cache-size) rewrite per layer.  Ring-buffer (windowed)
-            # models keep the in-scan write: eviction means the merged-
-            # partial trick can't express "replace the oldest entry".
-            zero_copy = cfg.attn_window == 0
+            # Zero-copy hot path: the scan only READS the cache and emits
+            # each layer's new (B, kv, hd) row; one scatter after the scan
+            # writes all rows — with a donated cache that's an in-place
+            # O(L*B)-row update instead of an O(cache-size) rewrite per
+            # layer.  Ring-buffer (windowed) caches use the same path:
+            # the merged partial masks out the slot being evicted
+            # (attn_layer_step builds the per-slot mask) and the post-scan
+            # scatter at pos % C is the eviction write itself.
 
             def body(x, per):
                 p_l, k_l, v_l = per
                 x, k_l, v_l = attn_layer_step(cfg, p_l, x, positions, k_l,
-                                              v_l, pos, zero_copy=zero_copy)
+                                              v_l, pos, zero_copy=True)
                 return x, (k_l, v_l)
 
             x, (kn, vn) = jax.lax.scan(body, x, (stacked, kc, vc),
                                        unroll=unroll)
-            if zero_copy:
-                C = kc.shape[2]
-                slot = jnp.mod(pos, C)
-                bidx = jnp.arange(B)
-                kc = kc.at[:, bidx, slot].set(kn)    # (count, B, kv, hd) rows
-                vc = vc.at[:, bidx, slot].set(vn)
-            else:
-                kc, vc = kn, vn
+            C = kc.shape[2]
+            slot = jnp.mod(pos, C)
+            bidx = jnp.arange(B)
+            kc = kc.at[:, bidx, slot].set(kn)        # (count, B, kv, hd) rows
+            vc = vc.at[:, bidx, slot].set(vn)
             collected["attn_k"].append(kc)
             collected["attn_v"].append(vc)
         elif kind == "ssm":

@@ -46,6 +46,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.models import transformer
+from repro.serving.snapshot import KVSnapshot, export_slot
 
 BUCKET_MIN = 16
 
@@ -83,6 +84,10 @@ class ServeRequest:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     eos_id: Optional[int] = None
+    # decode state exported at drain time (crash migration); carried so a
+    # survivor can resume without re-prefill — excluded from equality
+    snapshot: Optional[KVSnapshot] = field(default=None, repr=False,
+                                           compare=False)
 
 
 class ContinuousBatcher:
@@ -117,6 +122,10 @@ class ContinuousBatcher:
         self.decode_time_s = 0.0
         self.n_prefill_calls = 0
         self.n_prefill_reqs = 0
+        # migration counters (snapshot imports; tokens whose prefill was
+        # skipped because their state arrived with them)
+        self.n_migrated_in = 0
+        self.migrated_tokens_in = 0
         self._sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
         self._build_jits()
 
@@ -182,6 +191,25 @@ class ContinuousBatcher:
             return first, cache
 
         self._prefill_fused = jax.jit(fused_prefill, donate_argnums=(5,))
+
+        def fused_import(cache, rows, slot, pos):
+            """Scatter one request's per-layer state rows into ``slot``.
+
+            ``rows``: kind -> leaf -> (L, ...) arrays (a KVSnapshot's rows
+            or a reconstructed slot).  One donated in-place scatter for the
+            whole model — no host round-trip per layer, no cache copy.
+            ``slot``/``pos`` are traced scalars so every import shares one
+            compilation.
+            """
+            for kind in ("attn", "ssm", "rec"):
+                if kind in rows:
+                    for leaf in rows[kind]:
+                        cache[kind][leaf] = \
+                            cache[kind][leaf].at[:, slot].set(rows[kind][leaf])
+            cache["pos"] = cache["pos"].at[slot].set(pos)
+            return cache
+
+        self._import_fused = jax.jit(fused_import, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # prefill / admission
@@ -311,18 +339,110 @@ class ContinuousBatcher:
         self.decode_time_s += time.perf_counter() - t0
         return finished
 
-    def drain(self) -> List[ServeRequest]:
+    def drain(self, export_state: bool = True) -> List[ServeRequest]:
         """Pull every in-flight request out of the batch (server crash /
         re-route path): slots are freed, requests keep their generated
-        prefix so ``admit`` elsewhere resumes them exactly."""
+        prefix so ``admit`` elsewhere resumes them exactly.
+
+        With ``export_state`` each request also carries a ``KVSnapshot``
+        of its slot (per-layer KV/recurrent rows + pos), so a survivor can
+        ``import_snapshot`` it into a free slot and continue decoding with
+        ZERO re-prefilled tokens instead of recomputing prompt+prefix.
+        """
         drained = []
         for slot, req in sorted(self.active.items()):
+            if export_state:
+                req.snapshot = self.export_snapshot(slot)
             req.slot = -1
             self.free.append(slot)
             drained.append(req)
         self.active.clear()
         self._io_dirty = True
         return drained
+
+    def export_snapshot(self, slot: int) -> KVSnapshot:
+        """Snapshot ``slot``'s state to host memory (see serving.snapshot)."""
+        return export_slot(self.cache, slot, arch=self.cfg.name,
+                           max_len=self.max_len)
+
+    def import_snapshot(self, req: ServeRequest, snap: KVSnapshot) -> bool:
+        """Resume ``req`` from a migrated snapshot in a free slot.
+
+        The state rows are scattered into the donated cache in one jitted
+        call; the request starts decoding from its last sampled token on
+        the next ``step`` — no prefill happens.  False if the batch is
+        full or the snapshot's shapes don't match this batcher.
+        """
+        if not self.free:
+            return False
+        if not snap.compatible_with(self.cache, self.cfg.name, self.max_len):
+            return False
+        slot = self.free.pop()
+        # numpy rows go straight into the jitted call (the transfer happens
+        # as part of the one dispatch — no per-leaf host round-trip)
+        self.cache = self._import_fused(
+            self.cache, snap.rows, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(snap.pos, jnp.int32))
+        req.slot = slot
+        self.active[slot] = req
+        self._io_dirty = True
+        self.n_migrated_in += 1
+        self.migrated_tokens_in += snap.pos
+        return True
+
+    def warm_import(self) -> None:
+        """Pre-compile the snapshot-import jit (recovery-path warm-up).
+
+        Writes slot 0's own rows back to itself — a semantic no-op — so
+        the first real migration pays steady-state import cost, not an
+        XLA compile, inside the post-crash TTFT window.
+        """
+        rows = {kind: {leaf: arr[:, 0]
+                       for leaf, arr in self.cache[kind].items()}
+                for kind in ("attn", "ssm", "rec") if kind in self.cache}
+        self.cache = self._import_fused(
+            self.cache, rows, jnp.asarray(0, jnp.int32),
+            self.cache["pos"][0])
+
+    def reconstruct_inflight(self, has_state: Sequence[bool]
+                             ) -> Dict[str, float]:
+        """Partial-crash recovery (paper §4.4.2) for the live batch: rebuild
+        only the layers whose state died, per active slot, via
+        ``core.kv_reconstruct.reconstruct_cache`` — attention layers with
+        surviving KV get the Q-only recompute, missing layers a full
+        per-layer prefill, layers above the deepest missing one are
+        untouched.  Requests stay in their slots; decode resumes exactly.
+        Returns the summed per-layer work stats."""
+        from repro.core.kv_reconstruct import reconstruct_cache
+        totals: Dict[str, float] = {}
+        if not self.active or all(has_state):
+            return totals
+        for slot, req in sorted(self.active.items()):
+            # tokens processed so far: prompt + generated prefix minus the
+            # last sampled token (it is the NEXT decode step's input)
+            seq = np.asarray(req.tokens, np.int64)
+            tail = req.generated[:-1]
+            if tail:
+                seq = np.concatenate([seq, np.asarray(tail, np.int64)])
+            view = {"pos": self.cache["pos"][slot:slot + 1]}
+            for kind in ("attn", "ssm", "rec"):
+                if kind in self.cache:
+                    view[kind] = {leaf: arr[:, slot:slot + 1]
+                                  for leaf, arr in self.cache[kind].items()}
+            rebuilt, stats = reconstruct_cache(
+                self.cfg, self.params, {"tokens": jnp.asarray(seq)[None]},
+                view, has_state, max_len=self.max_len)
+            rows = {kind: {leaf: arr[:, 0]
+                           for leaf, arr in rebuilt[kind].items()}
+                    for kind in ("attn", "ssm", "rec") if kind in rebuilt}
+            self.cache = self._import_fused(
+                self.cache, rows, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(len(seq), jnp.int32))
+            for k, v in stats.items():
+                totals[k] = totals.get(k, 0.0) + float(v)
+            totals["reconstructed_reqs"] = \
+                totals.get("reconstructed_reqs", 0.0) + 1.0
+        return totals
 
     @property
     def n_active(self) -> int:
@@ -458,17 +578,54 @@ class ServingEngine:
             self.completed.append(r)
         return finished + done
 
-    def drain_inflight(self) -> List[ServeRequest]:
+    def admit_with_state(self, req: ServeRequest) -> bool:
+        """Admit a migrated request by importing its ``KVSnapshot`` into a
+        free slot — the state-preserving alternative to ``submit`` for
+        requests drained off a crashed server.  Zero prompt tokens are
+        re-prefilled; decode continues from the request's last sampled
+        token.
+
+        Falls back (returns False, snapshot kept) when: no free slot, the
+        snapshot's shapes don't match, the request needs an adapter this
+        engine doesn't have, or the batch is mid-epoch on a *different*
+        adapter (merged-LoRA weights apply to every slot, so importing
+        across the epoch barrier would decode with the wrong weights).
+        """
+        snap = req.snapshot
+        if snap is None or not self.batcher.free:
+            return False
+        name = req.adapter
+        if name is not None and name not in self.adapter_params:
+            return False
+        if self.batcher.active:
+            if name != self.active_adapter:
+                return False
+        else:
+            self._switch_adapter(name)
+        if not self.batcher.import_snapshot(req, snap):
+            return False
+        if req.arrival is None:
+            req.arrival = self.clock
+        req.snapshot = None
+        return True
+
+    def drain_inflight(self, export_state: bool = True) -> List[ServeRequest]:
         """Remove every in-flight AND queued request (crash re-route path);
-        in-flight requests keep their generated prefix for exact resumption
-        on another server."""
-        out = self.batcher.drain()
+        in-flight requests keep their generated prefix — and, with
+        ``export_state``, their KV snapshot — for exact resumption on
+        another server."""
+        out = self.batcher.drain(export_state=export_state)
         while True:
             adapter, batch = self.policy.next_batch(self.policy_state)
             if adapter is None:
                 break
             out.extend(item.req for item in batch)
         return out
+
+    def reconstruct_inflight(self, has_state) -> Dict[str, float]:
+        """Partial-crash in-place rebuild of the live batch's lost layers
+        (see ContinuousBatcher.reconstruct_inflight)."""
+        return self.batcher.reconstruct_inflight(has_state)
 
     def queued_requests(self) -> List[ServeRequest]:
         """Requests enqueued but not yet admitted (no first token yet)."""

@@ -1,0 +1,88 @@
+"""Portable per-request KV/recurrent state snapshots (crash migration).
+
+PipeBoost's recovery claim (§4.4) is that surviving hardware keeps serving
+*without* redoing prefill.  At cluster scale that means a crashed server's
+in-flight requests must carry their decode state to a survivor instead of
+re-prefilling prompt+prefix there (λScale's fast state handoff).  The unit
+of transfer is a ``KVSnapshot``: one batch slot's slice of every cache
+leaf — per-layer KV rows (or ring-buffer rows, unrotated), SSM/RG-LRU
+states — plus the slot position and enough config identity to refuse an
+incompatible import.
+
+Layout notes
+------------
+* Cache leaves are stacked by layer kind with shape (L, B, ...); a
+  snapshot holds the (L, ...) slice at one batch index, so the per-layer
+  structure survives verbatim and import is a single scatter back into
+  any free slot of a same-shaped cache.
+* Ring-buffer (windowed) caches need no special casing: slot occupancy is
+  a pure function of ``pos`` (slot j holds position p with p % C == j),
+  which travels with the snapshot — importing rows + pos reproduces the
+  ring exactly.
+* Rows are host numpy (the "wire format"): a snapshot can cross process
+  boundaries; re-upload happens once, inside the importer's donated jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+
+@dataclass
+class KVSnapshot:
+    """One in-flight request's decode state, detached from its batch slot.
+
+    ``pos`` is the number of tokens whose state the snapshot holds
+    (prompt + generated prefix, minus the last sampled-but-unprocessed
+    token) — also exactly the number of tokens a survivor does NOT have to
+    re-prefill.
+    """
+    arch: str                                   # cfg.name of the producer
+    max_len: int                                # producer cache max_len
+    pos: int                                    # tokens with state
+    rows: Dict[str, Dict[str, np.ndarray]] = field(default_factory=dict)
+    # kind ("attn" | "ssm" | "rec") -> leaf -> (L, ...) one slot's rows
+
+    @property
+    def n_state_tokens(self) -> int:
+        return self.pos
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for leaves in self.rows.values()
+                   for a in leaves.values())
+
+    def compatible_with(self, cache: Dict, arch: str, max_len: int) -> bool:
+        """True iff this snapshot can be scattered into ``cache`` (same
+        arch + max_len and every leaf's per-slot shape matches)."""
+        if self.arch != arch or self.max_len != max_len:
+            return False
+        for kind, leaves in self.rows.items():
+            if kind not in cache:
+                return False
+            for leaf, a in leaves.items():
+                if leaf not in cache[kind]:
+                    return False
+                dst = cache[kind][leaf]
+                if a.shape != dst.shape[:1] + dst.shape[2:]:
+                    return False
+        return True
+
+
+def export_slot(cache: Dict, slot: int, *, arch: str,
+                max_len: int) -> KVSnapshot:
+    """Snapshot one batch slot of a slot-stacked cache to host memory.
+
+    One device->host transfer per *kind leaf* (k, v, conv, state, h — a
+    handful total, NOT one per layer: leaves are stacked across layers).
+    This is the crash path; the latency-critical direction is import,
+    which is a single in-jit scatter (see ContinuousBatcher).
+    """
+    rows: Dict[str, Dict[str, np.ndarray]] = {}
+    for kind in ("attn", "ssm", "rec"):
+        if kind in cache:
+            rows[kind] = {leaf: np.asarray(arr[:, slot])
+                          for leaf, arr in cache[kind].items()}
+    return KVSnapshot(arch=arch, max_len=max_len,
+                      pos=int(np.asarray(cache["pos"][slot])), rows=rows)

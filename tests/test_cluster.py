@@ -86,13 +86,35 @@ def test_trace_roundtrip(tmp_path):
 # metrics
 # ---------------------------------------------------------------------------
 
-def test_percentile_and_summary():
+def test_percentile_nearest_rank():
+    """Ceil-based nearest rank: smallest 1-based rank k with k/n >= q/100.
+    The old round((n-1)*q/100) index interpolation mis-ranked even-n
+    medians and high percentiles (it reported p50 of 100 samples as the
+    51st value)."""
     assert percentile([], 99) == 0.0
-    assert percentile([1.0], 50) == 1.0
+    # n = 1: every percentile is the single sample
+    for q in (0, 1, 50, 99, 100):
+        assert percentile([7.0], q) == 7.0
+    # n = 2: p50 must be the FIRST sample (rank ceil(0.5*2) = 1), anything
+    # above 50 the second
+    assert percentile([1.0, 2.0], 50) == 1.0
+    assert percentile([2.0, 1.0], 50) == 1.0    # sorts first
+    assert percentile([1.0, 2.0], 51) == 2.0
+    assert percentile([1.0, 2.0], 99) == 2.0
+    assert percentile([1.0, 2.0], 0) == 1.0
+    # n = 100 over 1..100: nearest-rank percentile q is the value q itself
     xs = [float(i) for i in range(1, 101)]
     assert percentile(xs, 0) == 1.0
-    assert percentile(xs, 50) == 51.0       # nearest-rank on 0..99 idx
+    assert percentile(xs, 50) == 50.0
+    assert percentile(xs, 99) == 99.0
     assert percentile(xs, 100) == 100.0
+    # monotone in q, and never out of range
+    vals = [percentile(xs, q) for q in range(0, 101)]
+    assert vals == sorted(vals)
+    assert min(vals) >= 1.0 and max(vals) <= 100.0
+
+
+def test_summary_metrics():
     from repro.cluster.metrics import ClusterMetrics
     m = ClusterMetrics()
     m.on_submit(0, 1.0)
@@ -178,6 +200,120 @@ def test_crash_reroute_tokens_exact(setup):
     assert "crash" in kinds and "rejoin" in kinds
     # the downed server rebooted through the pipelined loader and serves again
     assert r_crash.servers[1].state in ("loading", "serving")
+
+
+def test_crash_migration_zero_reprefill_tokens_exact(setup):
+    """With survivor capacity available, a whole-server crash migrates
+    every in-flight request's KV snapshot: zero prompt tokens re-prefill
+    anywhere, and outputs equal the crash-free run token-for-token (the
+    equivalence oracle the re-prefill path already satisfies)."""
+    cfg, params = setup
+    trace = burst_wave_trace(10, base_rate=2.0, wave_rate=20.0, wave_at=0.3,
+                             wave_len=0.5, seed=5, max_new_tokens=6)
+
+    def run(crash):
+        router = ClusterRouter(cfg, params, n_servers=3,
+                               ccfg=ClusterConfig(n_devices=2, n_slots=6))
+        done = router.run(trace, crash_after_completions=2 if crash else None,
+                          crash_server_id=1,
+                          rejoin_after_ticks=15 if crash else None)
+        return router, {r.rid: r.generated for r in done}
+
+    r_crash, toks_crash = run(True)
+    _, toks_ref = run(False)
+    s = r_crash.metrics.summary()
+    assert s["recovery_mode_migrate"] >= 1          # migration actually ran
+    assert s["recovery_migrated_tokens"] > 0
+    assert s["recovery_reprefill_tokens"] == 0.0    # nothing re-prefilled
+    assert s["recovery_mode_reprefill"] == 0.0
+    assert set(toks_crash) == set(toks_ref)
+    for rid in toks_ref:
+        assert toks_crash[rid] == toks_ref[rid], rid
+    # recovery counters ride into the JSON blob
+    doc = json.loads(r_crash.metrics.to_json())
+    assert doc["recovery"]["mode_migrate"] >= 1
+    assert doc["summary"]["recovery_reprefill_tokens"] == 0.0
+
+
+def test_crash_migration_falls_back_when_survivors_full(setup):
+    """No admitting survivor capacity -> snapshots are dropped and the
+    legacy re-prefill re-route still completes every request exactly."""
+    cfg, params = setup
+    trace = burst_wave_trace(12, base_rate=2.0, wave_rate=30.0, wave_at=0.3,
+                             wave_len=0.5, seed=5, max_new_tokens=8)
+
+    def run(crash):
+        router = ClusterRouter(cfg, params, n_servers=2,
+                               ccfg=ClusterConfig(n_devices=2, n_slots=2))
+        arrivals = sorted(trace, key=lambda a: a.time)
+        i, crashed, done = 0, False, []
+        for _ in range(200_000):
+            while i < len(arrivals) and arrivals[i].time <= router.clock:
+                router.submit(arrivals[i])
+                i += 1
+            done.extend(router.tick())
+            s0, s1 = router.servers[0], router.servers[1]
+            if (crash and not crashed and s1.srv.batcher.n_active >= 1
+                    and not s0.srv.batcher.free):
+                router.crash_server(1)   # survivors full: must fall back
+                crashed = True
+            if i >= len(arrivals) and router.pending == 0:
+                break
+        assert not crash or crashed, "fallback scenario never armed"
+        return router, {r.rid: r.generated for r in done}
+
+    r_crash, toks_crash = run(True)
+    _, toks_ref = run(False)
+    s = r_crash.metrics.summary()
+    # survivors were full: at least one displaced request re-prefilled
+    assert s["recovery_mode_reprefill"] >= 1
+    assert s["recovery_reprefill_tokens"] > 0
+    assert set(toks_crash) == set(toks_ref)
+    for rid in toks_ref:
+        assert toks_crash[rid] == toks_ref[rid], rid
+
+
+def test_partial_crash_reconstructs_only_lost_layers(setup):
+    """Killing one device of a mid-load serving chain rebuilds ONLY the
+    layers whose state lived there (Q-only recompute elsewhere); requests
+    never leave the server and stay token-exact."""
+    from repro.cluster import ClusterServer
+    from repro.serving.engine import ServeRequest
+    cfg, params = setup
+    ccfg = ClusterConfig(n_devices=4, n_slots=2)
+    server = ClusterServer(0, cfg, params, ccfg)
+    while server.state == "loading":
+        server.tick(0.0)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 250, size=L) for L in (10, 13)]
+    reqs = [ServeRequest(i, p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        server.submit(r)
+    server.tick(0.0)                       # admit + decode while chain
+    assert server.srv.batcher.n_active == 2
+    # pick a device owning SOME but not all layers' state
+    cands = [d for d in range(ccfg.n_devices)
+             if 0 < sum(server.engine.lost_state_layers([d]))
+             < cfg.n_layers]
+    assert cands, "chain collapsed to one device — can't test partial loss"
+    n_lost = sum(server.engine.lost_state_layers([cands[0]]))
+    drained = server.crash([cands[0]])
+    assert drained == []                   # requests stay on the server
+    assert server.state == "recovering"
+    stats = server.last_recovery
+    assert stats["reconstructed_reqs"] == 2
+    assert stats["full_prefill"] == n_lost * 2
+    assert stats["kv_reused"] + stats["layers_skipped"] > 0
+    kinds = [e for e, _ in server.engine.events]
+    assert "crash" in kinds
+    now = 1.0
+    while any(not r.done for r in reqs):
+        server.tick(now)
+        now += ccfg.tick_s
+    assert "recover" in [e for e, _ in server.engine.events]
+    for i, p in enumerate(prompts):
+        assert reqs[i].generated == _solo(cfg, params, p, 8), i
 
 
 def test_partial_crash_recovers_in_place(setup):
