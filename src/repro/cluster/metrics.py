@@ -65,6 +65,11 @@ class ClusterMetrics:
     # prompt+prefix recomputed, "reconstruct" = partial-crash in-place
     # rebuild) and how many prompt/prefix tokens each path saved or re-spent
     recovery: Dict[str, float] = field(default_factory=dict)
+    # overlapped cold-start accounting, one record per server (latest
+    # generation wins on rejoin): time_to_ready / time_to_fully_loaded on
+    # the router clock, wall-clock equivalents + loaded bytes from the
+    # engine's per-round fill accounting (see ClusterServer.cold_start_record)
+    coldstart: Dict[int, Dict] = field(default_factory=dict)
 
     # ---- recording --------------------------------------------------------
     def on_submit(self, rid: int, arrival: float) -> None:
@@ -127,8 +132,14 @@ class ClusterMetrics:
         across servers; compile counts sum too (each server jits its own
         functions), so per-server regressions stay visible in the total."""
         for k in ("n_decode_steps", "decode_time_s", "n_prefill_calls",
-                  "n_prefill_reqs", "decode_compiles", "prefill_compiles"):
+                  "n_prefill_reqs", "n_prefill_pipeline",
+                  "n_batched_imports", "decode_compiles",
+                  "prefill_compiles"):
             self.hotpath[k] = self.hotpath.get(k, 0.0) + stats.get(k, 0.0)
+
+    def record_coldstart(self, sid: int, rec: Dict) -> None:
+        """Record one server's cold-start accounting (latest wins)."""
+        self.coldstart[sid] = rec
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -168,6 +179,23 @@ class ClusterMetrics:
         if self.hotpath.get("decode_time_s", 0.0) > 0:
             out["hotpath_decode_steps_per_s"] = \
                 self.hotpath["n_decode_steps"] / self.hotpath["decode_time_s"]
+        # cold-start summary (always-present keys; zeros when no server
+        # reported) — scale-up latency as the fleet experienced it
+        ttrs = [r["time_to_ready"] for r in self.coldstart.values()
+                if r.get("time_to_ready") is not None]
+        ttfs = [r["time_to_fully_loaded"] for r in self.coldstart.values()
+                if r.get("time_to_fully_loaded") is not None]
+        out["coldstart_n_servers"] = float(len(self.coldstart))
+        out["coldstart_time_to_ready_mean"] = \
+            sum(ttrs) / len(ttrs) if ttrs else 0.0
+        out["coldstart_time_to_ready_max"] = max(ttrs, default=0.0)
+        out["coldstart_time_to_fully_loaded_mean"] = \
+            sum(ttfs) / len(ttfs) if ttfs else 0.0
+        out["coldstart_served_while_loading"] = float(sum(
+            1 for r in self.coldstart.values()
+            if r.get("served_while_loading")))
+        out["coldstart_loaded_bytes"] = float(sum(
+            r.get("loaded_bytes") or 0 for r in self.coldstart.values()))
         return out
 
     def to_json(self, path: Optional[str] = None) -> str:
@@ -179,6 +207,8 @@ class ClusterMetrics:
             "n_servers": self.n_servers,
             "events": self.events,
             "recovery": self.recovery,
+            "coldstart": [self.coldstart[sid]
+                          for sid in sorted(self.coldstart)],
         }
         blob = json.dumps(doc, indent=1)
         if path:

@@ -47,6 +47,7 @@ class ClusterConfig:
     max_len: int = 96
     tick_s: float = 0.05           # logical seconds per router tick
     load_rounds_per_tick: int = 1  # cold-start progress per tick
+    segments_per_round: int = 1    # per-device fill budget inside one round
     recovery_ticks: int = 2        # service pause: crash -> rejoined chain
     epoch_budget: int = 4          # adapter epoch budget per server
     migrate_on_crash: bool = True  # KV-snapshot migration to survivors
@@ -61,16 +62,31 @@ class ClusterServer:
         self.sid = sid
         self.ccfg = ccfg
         self.engine = PipeBoostEngine(cfg, params, n_devices=ccfg.n_devices,
-                                      max_len=ccfg.max_len)
+                                      max_len=ccfg.max_len,
+                                      segments_per_round=ccfg.segments_per_round)
         self.srv = ServingEngine(
             cfg, params, n_slots=ccfg.n_slots, max_len=ccfg.max_len,
             policy=EpochSchedulerPolicy(epoch_budget=ccfg.epoch_budget,
                                         max_batch=ccfg.n_slots),
             adapter_params=adapter_params or {})
         self.srv.batcher.sampler = quantized_greedy
+        # overlapped cold start: on multi-device XLA backends the TTFT-
+        # critical admission prefills lower through the engine's shard_map
+        # pipeline belt until the strategy switch; on 1-device backends
+        # enable_ returns False and the batcher keeps its single lowering
+        if self.engine.enable_pipeline_prefill():
+            self.srv.batcher.set_pipeline_prefill(
+                self.engine.serving_pipeline_prefill,
+                fits=self.engine.serving_pipeline_fits)
+            self.srv.batcher.prefill_backend = (
+                lambda: "pipeline" if self.engine.strategy == "pipeline"
+                else "single")
         self.state = "loading"
         self.idle_ticks = 0
         self.served_while_loading = False   # admitted before fully loaded
+        self.spawned_at = 0.0               # router stamps these in router
+        self.ready_at: Optional[float] = None       # clock seconds
+        self.fully_loaded_at: Optional[float] = None
         self._recover_left = 0
         self.last_recovery: Dict[str, float] = {}  # partial-crash rebuild
         # stats (kv_reconstruct work counts); read by the router right
@@ -102,9 +118,13 @@ class ClusterServer:
         if self.state == "loading":
             for _ in range(self.ccfg.load_rounds_per_tick):
                 self.engine.load_round()
-            if self.engine.ready:       # viable chain => admit immediately
-                self.state = "serving"
-            return []
+            if not self.engine.ready:
+                return []
+            # viable chain => serve THIS tick (the overlap: the queue
+            # starts draining the moment ready flips, not a tick later;
+            # background fill of the remaining segments continues below)
+            self.state = "serving"
+            self.ready_at = now
         if self.state == "recovering":
             self._recover_left -= 1
             if self._recover_left <= 0:
@@ -122,9 +142,30 @@ class ClusterServer:
             # crossover policy: switch to per-device serving as soon as the
             # full model is resident (rate-based crossover is a future knob)
             self.engine.maybe_switch_strategy(request_rate=0.0)
+        if self.fully_loaded_at is None and self.engine.fully_loaded:
+            self.fully_loaded_at = now
         done = self.srv.step(now=now)
         self.idle_ticks = 0 if self.srv.n_pending else self.idle_ticks + 1
         return done
+
+    def cold_start_record(self) -> Dict[str, Any]:
+        """Per-server cold-start accounting (logical clock + the engine's
+        wall-clock/byte accounting) for the cluster metrics JSON."""
+        eng = self.engine.cold_start_stats()
+        rdy = self.ready_at
+        ful = self.fully_loaded_at
+        return {
+            "server": self.sid,
+            "time_to_ready": None if rdy is None else rdy - self.spawned_at,
+            "time_to_fully_loaded": (None if ful is None
+                                     else ful - self.spawned_at),
+            "served_while_loading": self.served_while_loading,
+            "wall_time_to_ready": eng["time_to_ready"],
+            "wall_time_to_fully_loaded": eng["time_to_fully_loaded"],
+            "loaded_bytes": eng["loaded_bytes"],
+            "total_bytes": eng["total_bytes"],
+            "n_rounds": eng["n_rounds"],
+        }
 
     def crash(self, device_ids: Optional[Sequence[int]] = None
               ) -> List[ServeRequest]:
@@ -166,6 +207,9 @@ class ClusterServer:
         start through the pipelined loader)."""
         self.engine.restart()
         self.state = "loading"
+        self.ready_at = None
+        self.fully_loaded_at = None
+        self.served_while_loading = False
 
     def retire(self) -> List[ServeRequest]:
         # scale-down is voluntary: leftovers re-queue through dispatch
@@ -200,6 +244,7 @@ class ClusterRouter:
     def spawn_server(self) -> ClusterServer:
         s = ClusterServer(len(self.servers), self.cfg, self.params,
                           self.ccfg, self.adapter_params)
+        s.spawned_at = self.clock
         self.servers.append(s)
         self.metrics.on_event(self.clock, "spawn", f"server{s.sid}")
         return s
@@ -230,17 +275,40 @@ class ClusterRouter:
                 f"full_prefill={server.last_recovery.get('full_prefill', 0):.0f}")
         migrated = reprefilled = 0
         leftovers: List[ServeRequest] = []
+        mid_decode: List[ServeRequest] = []
         for req in drained:
             if not req.generated:          # queued-only: plain re-dispatch
                 req.snapshot = None
                 leftovers.append(req)
-                continue
+            else:
+                mid_decode.append(req)
+        # Batched migration: survivors absorb victims least-loaded-first,
+        # each taking as many snapshots as it has free slots in ONE donated
+        # scatter (admit_with_state_batch) — not one import dispatch per
+        # victim.  Requests no survivor can take fall back to re-prefill.
+        n_state = {req.rid: (req.snapshot.pos if req.snapshot is not None
+                             else 0) for req in mid_decode}
+        accepted_ids = set()
+        if self.ccfg.migrate_on_crash:
+            pending = [r for r in mid_decode if r.snapshot is not None]
+            cands = [s for s in self.servers
+                     if s.admitting and s.srv.batcher.free]
+            for s in sorted(cands, key=lambda s: (s.load, s.sid)):
+                if not pending:
+                    break
+                # offer the whole backlog: the importer itself caps at its
+                # free slots, and slicing here would let epoch-barrier
+                # rejects starve migratable requests behind them
+                s.srv.clock = max(s.srv.clock, self.clock)
+                for r in s.srv.admit_with_state_batch(pending):
+                    accepted_ids.add(r.rid)
+                pending = [r for r in pending if r.rid not in accepted_ids]
+        for req in mid_decode:
             self.metrics.on_reroute(req.rid)   # mid-decode: moved servers
-            n_state = req.snapshot.pos if req.snapshot is not None else 0
-            if (self.ccfg.migrate_on_crash and req.snapshot is not None
-                    and self._try_migrate(req)):
+            if req.rid in accepted_ids:
                 migrated += 1
-                self.metrics.on_recovery("migrate", req.rid, n_state)
+                self.metrics.on_recovery("migrate", req.rid,
+                                         n_state[req.rid])
             else:
                 req.snapshot = None        # state lost: re-prefill path
                 reprefilled += 1
@@ -255,19 +323,9 @@ class ClusterRouter:
         for req in reversed(leftovers):
             self.queue.appendleft(req)
 
-    def _try_migrate(self, req: ServeRequest) -> bool:
-        """Import ``req``'s snapshot into the least-loaded admitting
-        survivor with a free slot; False when none can take it."""
-        cands = [s for s in self.servers
-                 if s.admitting and s.srv.batcher.free]
-        for s in sorted(cands, key=lambda s: (s.load, s.sid)):
-            s.srv.clock = max(s.srv.clock, self.clock)
-            if s.srv.admit_with_state(req):
-                return True
-        return False
-
     def rejoin_server(self, sid: int) -> None:
         self.servers[sid].rejoin()
+        self.servers[sid].spawned_at = self.clock
         self.metrics.on_event(self.clock, "rejoin", f"server{sid}")
 
     # ---- request path -----------------------------------------------------
@@ -329,11 +387,21 @@ class ClusterRouter:
         self._dispatch()
         finished: List[ServeRequest] = []
         for s in self.servers:
+            was_loading = s.state == "loading"
             for r in s.tick(now):
                 self.metrics.on_first_token(r.rid, r.first_token_at)
                 self.metrics.on_finish(r.rid, r.finished_at,
                                        len(r.generated), s.sid)
                 finished.append(r)
+            if was_loading and s.state == "serving":
+                # scale-up latency = time-to-first-admittable, NOT
+                # time-to-fully-loaded: the autoscaler's new capacity is
+                # live from this moment while segments keep streaming in
+                self.metrics.on_event(
+                    now, "ready",
+                    f"server{s.sid} time_to_ready="
+                    f"{now - s.spawned_at:.2f}s "
+                    f"loaded_bytes={s.engine.loaded_bytes()}")
         busy = sum(self.ccfg.n_devices for s in self.servers
                    if s.state not in ("down", "retired"))
         self.metrics.on_tick(now, self.pending, len(
@@ -378,4 +446,5 @@ class ClusterRouter:
                 break
         for s in self.servers:
             self.metrics.record_hotpath(s.srv.hotpath_stats())
+            self.metrics.record_coldstart(s.sid, s.cold_start_record())
         return completed

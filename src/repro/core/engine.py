@@ -16,8 +16,11 @@ comes from core/simulator.py; this module owns *correctness*:
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +47,16 @@ class DeviceState:
 
 
 @dataclass
+class LoadRound:
+    """Accounting for one background-fill round (overlapped cold start)."""
+    idx: int
+    t_start: float                       # seconds since engine construction
+    wall_s: float                        # wall-clock spent inside the round
+    bytes: int                           # segment bytes transferred this round
+    segments: List[Tuple[int, int]]      # (device, segment) loads
+
+
+@dataclass
 class EngineStatus:
     ready: bool
     fully_loaded: bool
@@ -51,6 +64,12 @@ class EngineStatus:
     alive: List[int]
     loaded: Dict[int, List[int]]
     chain: Optional[List[Tuple[int, int]]]
+    # overlapped cold-start instrumentation (None until the event happened)
+    time_to_ready: Optional[float] = None
+    time_to_fully_loaded: Optional[float] = None
+    loaded_bytes: int = 0
+    total_bytes: int = 0
+    n_rounds: int = 0
 
 
 class PipeBoostEngine:
@@ -58,7 +77,8 @@ class PipeBoostEngine:
 
     def __init__(self, cfg: ArchConfig, params, n_devices: int,
                  n_segments: Optional[int] = None, max_len: int = 256,
-                 adapters: Optional[Dict[str, LoRAAdapter]] = None):
+                 adapters: Optional[Dict[str, LoRAAdapter]] = None,
+                 segments_per_round: int = 1):
         self.cfg = cfg
         self._full_params = params          # "checkpoint in DRAM"
         self.n_devices = n_devices
@@ -74,6 +94,20 @@ class PipeBoostEngine:
         self._cache: Optional[Dict] = None
         self._tokens_seen: Optional[jnp.ndarray] = None
         self.events: List[Tuple[str, Any]] = []
+        # overlapped cold start: loading is re-entrant (background thread or
+        # generator-stepped) and accounted per round
+        self.segments_per_round = max(1, segments_per_round)
+        self._load_lock = threading.RLock()
+        self._fill_thread: Optional[threading.Thread] = None
+        self._fill_stop = threading.Event()
+        self._reset_load_accounting()
+        # pipeline (shard_map) prefill path — disabled until enabled
+        self._pipe_enabled = False
+        self._pipe_mesh = None
+        self._pipe_n_stages = 0
+        self._pipe_n_micro = 0
+        self._pipe_fns: Dict[Tuple[int, int], Callable] = {}
+        self.prefill_backend_used: Optional[str] = None
         self._prefill_jit = jax.jit(
             lambda p, b: transformer.forward(cfg, p, b, mode="prefill",
                                              max_len=self.max_len))
@@ -82,33 +116,107 @@ class PipeBoostEngine:
 
     # ---------------- loading ------------------------------------------------
 
+    def _reset_load_accounting(self) -> None:
+        self._t0 = time.perf_counter()
+        self.rounds: List[LoadRound] = []
+        self.time_to_ready: Optional[float] = None
+        self.time_to_fully_loaded: Optional[float] = None
+
     def load_next_segment(self, device: int) -> Optional[int]:
         """Advance device's rotated loading order by one segment."""
-        d = self.devices[device]
-        if not d.alive:
-            raise EngineError(f"device {device} is dead")
-        for s in self.plan.order[device]:
-            if s not in d.loaded:
-                d.loaded.add(s)
-                self.events.append(("load", (device, s)))
-                return s
-        return None
+        with self._load_lock:
+            d = self.devices[device]
+            if not d.alive:
+                raise EngineError(f"device {device} is dead")
+            for s in self.plan.order[device]:
+                if s not in d.loaded:
+                    d.loaded.add(s)
+                    self.events.append(("load", (device, s)))
+                    return s
+            return None
 
-    def load_round(self) -> bool:
-        """One synchronous loading round across alive devices.  Returns True
-        if anything was loaded."""
-        any_loaded = False
-        for d in self.devices:
-            if d.alive and self.load_next_segment(d.idx) is not None:
-                any_loaded = True
-        return any_loaded
+    def load_round(self, budget: Optional[int] = None) -> bool:
+        """One loading round across alive devices: each device loads up to
+        ``budget`` segments (default: the engine's ``segments_per_round``).
+        Safe to call from a background thread concurrently with serving.
+        Returns True if anything was loaded."""
+        budget = budget if budget is not None else self.segments_per_round
+        t0 = time.perf_counter()
+        loads: List[Tuple[int, int]] = []
+        with self._load_lock:
+            for d in self.devices:
+                if not d.alive:
+                    continue
+                for _ in range(budget):
+                    s = self.load_next_segment(d.idx)
+                    if s is None:
+                        break
+                    loads.append((d.idx, s))
+            if loads:
+                nbytes = sum(self.plan.segments[s].bytes for _, s in loads)
+                self.rounds.append(LoadRound(
+                    len(self.rounds), t0 - self._t0,
+                    time.perf_counter() - t0, nbytes, loads))
+            # stamp the two cold-start milestones the moment they flip
+            if self.time_to_ready is None and self.ready:
+                self.time_to_ready = time.perf_counter() - self._t0
+            if self.time_to_fully_loaded is None and self.fully_loaded:
+                self.time_to_fully_loaded = time.perf_counter() - self._t0
+        return bool(loads)
+
+    # -- background fill driver (the overlap: loading runs concurrently
+    #    with serving ticks instead of load-then-serve sequencing) ----------
+
+    def fill_steps(self, budget: Optional[int] = None) -> Iterator[LoadRound]:
+        """Generator-step fill API: yields one ``LoadRound`` of accounting
+        per round until the model is fully loaded.  The caller interleaves
+        ``next()`` with serving work (discrete-event overlap)."""
+        while True:
+            n_before = len(self.rounds)
+            if not self.load_round(budget):
+                return
+            yield self.rounds[n_before]
+
+    def start_fill(self, interval_s: float = 0.0,
+                   budget: Optional[int] = None) -> threading.Thread:
+        """Start the asynchronous background fill: a daemon thread runs
+        ``load_round`` until fully loaded (or ``stop_fill``).  Loading is
+        pure host-side bookkeeping + ``device_put`` scheduling, so it
+        overlaps with jitted serving steps on the main thread."""
+        if self._fill_thread is not None and self._fill_thread.is_alive():
+            return self._fill_thread
+        self._fill_stop.clear()
+
+        def _run():
+            while not self._fill_stop.is_set():
+                if not self.load_round(budget):
+                    return
+                if interval_s > 0:
+                    self._fill_stop.wait(interval_s)
+
+        t = threading.Thread(target=_run, name="pipeboost-fill", daemon=True)
+        self._fill_thread = t
+        t.start()
+        return t
+
+    def stop_fill(self, join: bool = True) -> None:
+        self._fill_stop.set()
+        if join and self._fill_thread is not None:
+            self._fill_thread.join(timeout=30.0)
+        self._fill_thread = None
+
+    @property
+    def fill_running(self) -> bool:
+        return self._fill_thread is not None and self._fill_thread.is_alive()
 
     def loaded_map(self) -> Dict[int, List[int]]:
-        return {d.idx: sorted(d.loaded) for d in self.devices if d.alive}
+        with self._load_lock:
+            return {d.idx: sorted(d.loaded) for d in self.devices if d.alive}
 
     def chain(self) -> Optional[List[Tuple[int, int]]]:
-        return viable_chain(self.plan, self.loaded_map(),
-                            [d.idx for d in self.devices if d.alive])
+        with self._load_lock:
+            return viable_chain(self.plan, self.loaded_map(),
+                                [d.idx for d in self.devices if d.alive])
 
     @property
     def ready(self) -> bool:
@@ -116,13 +224,42 @@ class PipeBoostEngine:
 
     @property
     def fully_loaded(self) -> bool:
-        n = len(self.plan.segments)
-        return all(len(d.loaded) == n for d in self.devices if d.alive)
+        with self._load_lock:
+            n = len(self.plan.segments)
+            return all(len(d.loaded) == n for d in self.devices if d.alive)
+
+    def loaded_bytes(self) -> int:
+        """Bytes resident across alive devices (each device transfers its
+        own copy of a segment, so bytes count per device)."""
+        with self._load_lock:
+            return sum(self.plan.segments[s].bytes
+                       for d in self.devices if d.alive for s in d.loaded)
+
+    def total_bytes(self) -> int:
+        """Bytes every alive device must eventually hold (fully_loaded)."""
+        with self._load_lock:
+            model = sum(s.bytes for s in self.plan.segments)
+            return model * sum(1 for d in self.devices if d.alive)
+
+    def cold_start_stats(self) -> Dict[str, Any]:
+        """Flat cold-start accounting for metrics/benchmarks."""
+        with self._load_lock:
+            return {
+                "time_to_ready": self.time_to_ready,
+                "time_to_fully_loaded": self.time_to_fully_loaded,
+                "loaded_bytes": self.loaded_bytes(),
+                "total_bytes": self.total_bytes(),
+                "n_rounds": len(self.rounds),
+                "round_bytes": [r.bytes for r in self.rounds],
+            }
 
     def status(self) -> EngineStatus:
         return EngineStatus(self.ready, self.fully_loaded, self.strategy,
                             [d.idx for d in self.devices if d.alive],
-                            self.loaded_map(), self.chain())
+                            self.loaded_map(), self.chain(),
+                            self.time_to_ready, self.time_to_fully_loaded,
+                            self.loaded_bytes(), self.total_bytes(),
+                            len(self.rounds))
 
     # ---------------- adapters (merged-LoRA, §4.3.2) -------------------------
 
@@ -167,13 +304,113 @@ class PipeBoostEngine:
         return self._segment_layer_mask(
             {seg for dev, seg in ch if dev in dead})
 
+    # -- pipeline (shard_map) prefill dispatch ------------------------------
+
+    def enable_pipeline_prefill(self, mesh=None, n_micro: int = 2) -> bool:
+        """Opt the TTFT-critical prefill into the shard_map pipeline
+        lowering (distributed/pipeline.py): stage *i* runs the layers of
+        the segments device *i* has loaded, so the first token computes on
+        the partial chain while later segments keep streaming in.
+
+        Auto-sizes the ('data', 'stage') mesh over the visible XLA devices
+        when ``mesh`` is None.  Returns False (engine keeps the standard
+        lowering) when the backend or architecture can't pipeline: fewer
+        than 2 XLA devices, a hybrid layer stack, or an indivisible layer
+        count.
+        """
+        kinds = set(self.cfg.layer_kinds())
+        if len(kinds) != 1 or next(iter(kinds)) not in ("attn", "moe", "ssm"):
+            return False
+        if mesh is None:
+            n_xla = len(jax.devices())
+            if n_xla < 2:
+                return False
+            n_stages = 0
+            for s in range(min(n_xla, self.cfg.n_layers), 1, -1):
+                if self.cfg.n_layers % s == 0 and n_xla % s == 0:
+                    n_stages = s
+                    break
+            if not n_stages:
+                return False
+            mesh = jax.make_mesh((n_xla // n_stages, n_stages),
+                                 ("data", "stage"))
+        else:
+            n_stages = mesh.shape["stage"]
+            if self.cfg.n_layers % n_stages:
+                return False
+        self._pipe_mesh = mesh
+        self._pipe_n_stages = n_stages
+        self._pipe_n_micro = max(1, n_micro)
+        self._pipe_fns = {}
+        self._pipe_enabled = True
+        return True
+
+    def _pipeline_fits(self, batch: Dict) -> bool:
+        if not self._pipe_enabled or self.strategy != "pipeline":
+            return False
+        tokens = batch.get("tokens", batch.get("embeds"))
+        B = tokens.shape[0]
+        n_data = self._pipe_mesh.shape["data"]
+        if B % n_data:
+            return False
+        return (B // n_data) % self._pipe_n_micro == 0
+
+    def _pipeline_prefill_fn(self, B: int, S: int) -> Callable:
+        key = (B, S)
+        if key not in self._pipe_fns:
+            from repro.distributed.pipeline import build_pipeline_prefill
+            self._pipe_fns[key] = jax.jit(build_pipeline_prefill(
+                self.cfg, n_stages=self._pipe_n_stages,
+                n_micro=self._pipe_n_micro, mesh=self._pipe_mesh,
+                seq_len=S, max_len=self.max_len, return_cache=True))
+        return self._pipe_fns[key]
+
+    def serving_pipeline_fits(self, P: int, S: int) -> bool:
+        """Shape pre-check for ``serving_pipeline_prefill`` (the batcher's
+        dispatch): row count must split over the ('data', 'stage') mesh."""
+        if not self._pipe_enabled:
+            return False
+        n_data = self._pipe_mesh.shape["data"]
+        return P % n_data == 0 and (P // n_data) % self._pipe_n_micro == 0
+
+    def serving_pipeline_prefill(self, params, batch: Dict):
+        """``ContinuousBatcher.set_pipeline_prefill`` contract: lower an
+        admission prefill (right-padded rows + per-row last_index) through
+        the shard_map pipeline belt and hand the state back in the
+        per-replica layout (committed, so the batcher's donated scatter
+        and the fused decode step never retrace)."""
+        tokens = batch["tokens"]
+        fn = self._pipeline_prefill_fn(tokens.shape[0], tokens.shape[1])
+        logits, state = fn(params, batch)
+        return jax.device_put((logits, state), jax.devices()[0])
+
     def prefill(self, batch: Dict) -> jnp.ndarray:
         """Serve a prefill the moment a chain exists (the paper's point:
-        this happens after each device loaded only ~1/N of the model)."""
+        this happens after each device loaded only ~1/N of the model).
+
+        While the engine is in pipeline strategy on a multi-device backend
+        (``enable_pipeline_prefill``), the prefill lowers through the
+        shard_map belt — layers stay stage-sharded exactly like the loaded
+        segments — and the returned cache feeds the SAME fused decode jit
+        the single lowering uses (identical shapes: no retrace at the
+        strategy switch)."""
         chain = self.chain()
         if chain is None:
             raise EngineError("no viable pipeline chain: model not ready")
-        logits, cache = self._prefill_jit(self._merged_params, batch)
+        if self._pipeline_fits(batch):
+            tokens = batch.get("tokens", batch.get("embeds"))
+            B, S = tokens.shape[0], tokens.shape[1]
+            logits, cache = self._pipeline_fn_call(B, S, batch)
+            self.prefill_backend_used = "pipeline"
+        else:
+            logits, cache = self._prefill_jit(self._merged_params, batch)
+            if self._pipe_enabled:
+                # keep layouts (and committed-ness, part of the jit cache
+                # key) identical to the pipeline hand-off's so alternating
+                # backends never retraces the decode step
+                logits, cache = jax.device_put((logits, cache),
+                                               jax.devices()[0])
+            self.prefill_backend_used = "single"
         self._cache = cache
         self._tokens_seen = batch.get("tokens")
         # KV ownership follows the serving chain
@@ -182,7 +419,23 @@ class PipeBoostEngine:
         for dev, seg in chain:
             self.devices[dev].kv_segments.add(seg)
         self.events.append(("prefill", chain))
+        self.events.append(("prefill_backend", self.prefill_backend_used))
         return logits
+
+    def _pipeline_fn_call(self, B: int, S: int, batch: Dict):
+        fn = self._pipeline_prefill_fn(B, S)
+        logits, state = fn(self._merged_params, batch)
+        # Strategy hand-off (§4.3.3): the pipeline leaves KV stage-sharded
+        # where each segment's layers live; the per-replica fused decode
+        # step owns the whole cache.  One explicit re-lay here keeps the
+        # decode jit's input layouts identical to the standard lowering's —
+        # the switch moves data once but NEVER retraces.
+        cache: Dict[str, Any] = {"pos": jnp.full((B,), S, jnp.int32)}
+        cache.update(state)
+        # committed-ness is part of the jit cache key, so the whole cache
+        # (pos included) must land identically to the standard lowering's
+        logits, cache = jax.device_put((logits, cache), jax.devices()[0])
+        return logits, cache
 
     def decode(self, tokens: jnp.ndarray) -> jnp.ndarray:
         if self._cache is None:
@@ -195,6 +448,25 @@ class PipeBoostEngine:
             self._tokens_seen = jnp.concatenate(
                 [self._tokens_seen, tokens.reshape(-1, 1)], axis=1)
         return logits
+
+    # ---------------- instrumentation ----------------------------------------
+
+    def compile_stats(self) -> Dict[str, int]:
+        """XLA compile counts of the engine's jitted paths.  The decode
+        count must stay 1 across the pipeline->single strategy switch (the
+        pipeline prefill's cache has the same shapes as the standard
+        lowering's, so the switch never retraces)."""
+        def _n(fn):
+            try:
+                return int(fn._cache_size())
+            except Exception:       # private API moved — report -1, don't die
+                return -1
+        out = {"decode_compiles": _n(self._decode_jit),
+               "prefill_compiles": _n(self._prefill_jit)}
+        out["pipeline_prefill_compiles"] = (
+            sum(max(0, _n(f)) for f in self._pipe_fns.values())
+            if self._pipe_fns else 0)
+        return out
 
     # ---------------- strategy switching (§4.3.3) ----------------------------
 
@@ -213,38 +485,43 @@ class PipeBoostEngine:
     # ---------------- failures + recovery (§4.4) -----------------------------
 
     def crash(self, device_ids: Sequence[int]):
-        for i in device_ids:
-            self.devices[i].alive = False
+        with self._load_lock:
+            for i in device_ids:
+                self.devices[i].alive = False
         self.events.append(("crash", list(device_ids)))
 
     def restart(self, n_devices: Optional[int] = None):
         """Full server reboot (cluster rejoin path): every device comes back
         alive and empty with a fresh rotated load plan; serving state is
         dropped (in-flight requests were re-routed before the restart)."""
-        if n_devices is not None:
-            self.n_devices = n_devices
-            self.n_segments = None   # segment override was per-device-count
-        lb = analytic.layer_bytes_list(self.cfg)
-        self.plan = make_plan(lb, self.n_devices, self.n_segments)
-        self.devices = [DeviceState(i) for i in range(self.n_devices)]
-        self.strategy = "pipeline"
-        self._cache = None
-        self._tokens_seen = None
+        self.stop_fill()
+        with self._load_lock:
+            if n_devices is not None:
+                self.n_devices = n_devices
+                self.n_segments = None  # segment override was per-dev-count
+            lb = analytic.layer_bytes_list(self.cfg)
+            self.plan = make_plan(lb, self.n_devices, self.n_segments)
+            self.devices = [DeviceState(i) for i in range(self.n_devices)]
+            self.strategy = "pipeline"
+            self._cache = None
+            self._tokens_seen = None
+            self._reset_load_accounting()   # a rejoin is a fresh cold start
         self.events.append(("restart", self.n_devices))
 
     def revive(self, device_ids: Sequence[int]):
         """Bring crashed devices back online with empty HBM and re-plan the
         segment ring over the enlarged alive set; the revived devices pick
         up their missing spans on subsequent ``load_round`` calls."""
-        for i in device_ids:
-            d = self.devices[i]
-            if d.alive:
-                continue
-            d.alive = True
-            d.loaded = set()
-            d.kv_segments = set()
-        alive = [d.idx for d in self.devices if d.alive]
-        self.plan = reassign(self.plan, self.loaded_map(), alive)
+        with self._load_lock:
+            for i in device_ids:
+                d = self.devices[i]
+                if d.alive:
+                    continue
+                d.alive = True
+                d.loaded = set()
+                d.kv_segments = set()
+            alive = [d.idx for d in self.devices if d.alive]
+            self.plan = reassign(self.plan, self.loaded_map(), alive)
         self.events.append(("revive", list(device_ids)))
 
     def recover(self) -> Dict[str, Any]:

@@ -44,22 +44,42 @@ def _uniform_kind(cfg: ArchConfig) -> str:
 
 
 def build_pipeline_prefill(cfg: ArchConfig, *, n_stages: int, n_micro: int,
-                           mesh: Mesh, seq_len: int):
+                           mesh: Mesh, seq_len: int,
+                           max_len: Optional[int] = None,
+                           return_cache: bool = False):
     """Returns f(params, batch) -> last-token logits (B, V), shard_map'ed.
 
     params['blocks'][kind] leaves are (L, ...) sharded over 'stage' on dim 0;
     embed/head replicated (stage 0 embeds, last stage unembeds — replication
     costs HBM but keeps the belt code uniform; refining this is a recorded
     perf lever).
+
+    ``return_cache=True`` (the engine's overlapped cold-start wiring): f
+    additionally returns the per-layer decode state — attn KV sized to
+    ``attn_cache_capacity(cfg, max_len)`` (ring-rolled like the standard
+    prefill when windowed) or SSM conv/state — stacked (L, B, ...) with the
+    layer dim sharded over 'stage' (each stage's KV lives where its
+    segment's layers live) and B over 'data'.  Shapes match
+    ``transformer.forward(mode="prefill")``'s cache exactly, so the fused
+    per-replica decode step consumes it WITHOUT a retrace: the TTFT-
+    critical prefill runs on the partial pipeline chain, then decoding
+    strategy-switches seamlessly (paper §4.3.3).
+
+    ``batch["last_index"]`` (B,) int32, optional: per-row true last prompt
+    token for right-padded (bucketed) prompts — logits are gathered there
+    (the serving engine's padded-admission contract, mirroring
+    ``transformer.forward(last_index=...)``; attn-only, like bucketing).
     """
     kind = _uniform_kind(cfg)
     L_local = cfg.n_layers // n_stages
+    cap = transformer.attn_cache_capacity(cfg, max_len or seq_len)
 
     def body(params, batch):
         # --- local (per-stage) program -----------------------------------
         stage = jax.lax.axis_index("stage")
         tokens = batch.get("tokens")
         embeds = batch.get("embeds")
+        last_index = batch.get("last_index")
         B = (tokens if tokens is not None else embeds).shape[0]
         mb = B // n_micro
         D = cfg.d_model
@@ -78,50 +98,96 @@ def build_pipeline_prefill(cfg: ArchConfig, *, n_stages: int, n_micro: int,
             def layer(x, p_l):
                 if kind == "ssm":
                     from repro.models import mamba2
-                    x, _ = mamba2.ssm_block_fwd(cfg, p_l, x)
-                else:
-                    x, _, _ = transformer.attn_layer_fwd(cfg, p_l, x,
-                                                         positions)
-                return x, None
-            x, _ = jax.lax.scan(layer, x, blocks)
-            return x
+                    x, st = mamba2.ssm_block_fwd(cfg, p_l, x)
+                    return x, (st if return_cache else None)
+                x, kv, _ = transformer.attn_layer_fwd(
+                    cfg, p_l, x, positions,
+                    kv_write=cap if return_cache else None)
+                return x, (kv if return_cache else None)
+            x, st = jax.lax.scan(layer, x, blocks)
+            return x, st
 
         n_ticks = n_micro + n_stages - 1
         logits_buf = jnp.zeros((n_micro, mb, cfg.padded_vocab), jnp.float32)
+        # per-stage decode-state buffer: (L_local, n_micro, mb, ...) — each
+        # stage only materializes its OWN layers' state (1/n_stages of it)
+        if not return_cache:
+            st_buf = {}
+        elif kind == "ssm":
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            st_buf = {
+                "conv": jnp.zeros((L_local, n_micro, mb, cfg.ssm_conv - 1,
+                                   ch), jnp.dtype(cfg.dtype)),
+                "state": jnp.zeros((L_local, n_micro, mb, cfg.ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state),
+                                   jnp.float32),
+            }
+        else:
+            hd = cfg.resolved_head_dim
+            st_buf = {
+                "k": jnp.zeros((L_local, n_micro, mb, cap, cfg.n_kv_heads,
+                                hd), jnp.dtype(cfg.dtype)),
+                "v": jnp.zeros((L_local, n_micro, mb, cap, cfg.n_kv_heads,
+                                hd), jnp.dtype(cfg.dtype)),
+            }
 
         def tick(carry, t):
-            belt, logits_buf = carry             # belt: (mb, S, D)
+            belt, logits_buf, st_buf = carry     # belt: (mb, S, D)
             mb_idx = t - stage                   # microbatch this stage sees
             feed = jnp.clip(mb_idx, 0, n_micro - 1)
             x_in = jnp.where(jnp.equal(stage, 0)[..., None, None],
                              embed_mb(feed), belt)
-            x_out = run_local_layers(x_in)
-            # last stage: final norm + last-token unembed
-            xl = _apply_norm(cfg, params["final_norm"], x_out[:, -1:, :])
+            x_out, st = run_local_layers(x_in)
+            # last stage: final norm + last-token unembed (at the row's
+            # true last prompt position when the batch is right-padded)
+            if last_index is not None:
+                li = jax.lax.dynamic_slice_in_dim(last_index, feed * mb,
+                                                  mb, 0)
+                x_last = x_out[jnp.arange(mb), li][:, None, :]
+            else:
+                x_last = x_out[:, -1:, :]
+            xl = _apply_norm(cfg, params["final_norm"], x_last)
             head = params["embed"].T if cfg.tie_embeddings \
                 else params["lm_head"]
             lg = jnp.einsum("bsd,dv->bsv", xl, head,
                             preferred_element_type=jnp.float32)[:, 0]
-            is_mine = (jnp.equal(stage, n_stages - 1)
-                       & (mb_idx >= 0) & (mb_idx < n_micro))
+            on_belt = (mb_idx >= 0) & (mb_idx < n_micro)
+            is_mine = jnp.equal(stage, n_stages - 1) & on_belt
             logits_buf = jax.lax.cond(
                 is_mine,
                 lambda b: jax.lax.dynamic_update_slice_in_dim(
                     b, lg[None], feed, 0),
                 lambda b: b, logits_buf)
+            if return_cache:
+                new = ({"conv": st[0], "state": st[1]} if kind == "ssm"
+                       else {"k": st[0], "v": st[1]})
+                # off-belt ticks compute on the zeros belt — their state is
+                # garbage and must not land in the buffer
+                st_buf = jax.lax.cond(
+                    on_belt,
+                    lambda b: {key: jax.lax.dynamic_update_slice_in_dim(
+                        b[key], new[key][:, None].astype(b[key].dtype),
+                        feed, 1) for key in b},
+                    lambda b: b, st_buf)
             # belt shift: stage s -> s+1 (last stage's output is dropped
             # by feeding zeros around the ring into stage 0, which ignores it)
             nxt = jax.lax.ppermute(
                 x_out, "stage",
                 [(i, (i + 1) % n_stages) for i in range(n_stages)])
-            return (nxt, logits_buf), None
+            return (nxt, logits_buf, st_buf), None
 
         belt0 = jnp.zeros((mb, seq_len, D), jnp.dtype(cfg.dtype))
-        (_, logits_buf), _ = jax.lax.scan(tick, (belt0, logits_buf),
-                                          jnp.arange(n_ticks))
+        (_, logits_buf, st_buf), _ = jax.lax.scan(
+            tick, (belt0, logits_buf, st_buf), jnp.arange(n_ticks))
         # only the last stage wrote real logits; share them along the belt
         logits_buf = jax.lax.psum(logits_buf, "stage")
-        return logits_buf.reshape(B, cfg.padded_vocab)
+        logits = logits_buf.reshape(B, cfg.padded_vocab)
+        if not return_cache:
+            return logits
+        state = {("ssm" if kind == "ssm" else "attn"): {
+            key: st_buf[key].reshape((L_local, B) + st_buf[key].shape[3:])
+            for key in st_buf}}
+        return logits, state
 
     # --- shard_map wiring --------------------------------------------------
     def pspec_params(path, leaf):
@@ -134,11 +200,23 @@ def build_pipeline_prefill(cfg: ArchConfig, *, n_stages: int, n_micro: int,
         pspecs = jax.tree_util.tree_map_with_path(pspec_params, params)
         bspecs = jax.tree.map(
             lambda a: P("data", *([None] * (a.ndim - 1))), batch)
+        if return_cache:
+            # state leaves: layer dim over 'stage', batch dim over 'data'
+            if kind == "ssm":
+                state_specs = {"ssm": {"conv": P("stage", "data", None, None),
+                                       "state": P("stage", "data", None,
+                                                  None, None)}}
+            else:
+                kv_spec = P("stage", "data", None, None, None)
+                state_specs = {"attn": {"k": kv_spec, "v": kv_spec}}
+            out_specs = (P("data", None), state_specs)
+        else:
+            out_specs = P("data", None)
         with default_block_q(512):
             return shard_map(
                 body, mesh=mesh,
                 in_specs=(pspecs, bspecs),
-                out_specs=P("data", None),
+                out_specs=out_specs,
                 check_rep=False,
             )(params, batch)
 

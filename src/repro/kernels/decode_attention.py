@@ -13,8 +13,14 @@ split-K block's online-softmax state — the cache is only *read*, so the
 serving engine can defer the single-row cache write to one donated
 post-scan scatter instead of rewriting cache-sized buffers every layer.
 
+Ring-buffer (windowed) caches: pass ``slot_mask`` (B, C) — validity there
+is per *slot*, not a prefix length (the slot the new token will overwrite
+holds the evicted, out-of-window entry and must not be attended).  The
+mask rides the same split-K blocking as K/V, so the windowed zero-copy
+path no longer has to fall back to the XLA lowering.
+
 Layouts: q (B, Hq, d); k/v (B, Hkv, C, d); lens (B,) int32;
-k/v_new (B, Hkv, 1, d) -> out (B, Hq, d).
+k/v_new (B, Hkv, 1, d); slot_mask (B, C) bool/int -> out (B, Hq, d).
 """
 from __future__ import annotations
 
@@ -30,7 +36,11 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, *rest, scale: float,
-                   block_k: int, n_k: int, merge_new: bool):
+                   block_k: int, n_k: int, merge_new: bool,
+                   masked: bool):
+    smask_ref = None
+    if masked:
+        smask_ref, rest = rest[0], rest[1:]
     if merge_new:
         knew_ref, vnew_ref, o_ref, acc_ref, m_ref, l_ref = rest
     else:
@@ -52,6 +62,10 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, *rest, scale: float,
     valid = lens_ref[b]
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
     mask = k_pos < valid
+    if masked:
+        # per-slot validity (ring buffers): ANDed with the prefix-length
+        # mask, exactly like the XLA lowering's kv_slot_mask
+        mask = mask & (smask_ref[...] != 0)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -86,17 +100,21 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, *rest, scale: float,
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      lens: jnp.ndarray, *, k_new: Optional[jnp.ndarray] = None,
                      v_new: Optional[jnp.ndarray] = None,
+                     slot_mask: Optional[jnp.ndarray] = None,
                      scale: Optional[float] = None,
                      block_k: int = 512,
                      interpret: bool = True) -> jnp.ndarray:
     """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d).
 
     With ``k_new``/``v_new`` (B, Hkv, 1, d) the current token is attended
-    as if written at position ``lens`` (zero-copy serving mode)."""
+    as if written at position ``lens`` (zero-copy serving mode).  With
+    ``slot_mask`` (B, C) only slots where the mask is nonzero are attended
+    (ring-buffer eviction), ANDed with the ``lens`` prefix mask."""
     B, Hq, d = q.shape
     _, Hkv, C, _ = k.shape
     G = Hq // Hkv
     merge_new = k_new is not None
+    masked = slot_mask is not None
     scale = scale if scale is not None else d ** -0.5
     block_k = min(block_k, C)
     pad = (-C) % block_k
@@ -107,7 +125,8 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     q4 = q[:, :, None, :]                                 # (B, Hq, 1, d)
 
     kernel = functools.partial(_decode_kernel, scale=scale,
-                               block_k=block_k, n_k=n_k, merge_new=merge_new)
+                               block_k=block_k, n_k=n_k, merge_new=merge_new,
+                               masked=masked)
     in_specs = [
         pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h, 0, 0)),
         pl.BlockSpec((1, 1, block_k, d),
@@ -116,6 +135,13 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      lambda b, h, ki, lens: (b, h // G, ki, 0)),
     ]
     inputs = [q4, k, v]
+    if masked:
+        sm = jnp.asarray(slot_mask, jnp.int32)
+        if pad:
+            sm = jnp.pad(sm, ((0, 0), (0, pad)))
+        in_specs.append(
+            pl.BlockSpec((1, block_k), lambda b, h, ki, lens: (b, ki)))
+        inputs.append(sm)
     if merge_new:
         in_specs += [
             pl.BlockSpec((1, 1, 1, d), lambda b, h, ki, lens: (b, h // G, 0, 0)),

@@ -44,18 +44,20 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, lens, *, k_new=None, v_new=None,
-                     block_k: int = 512, interpret: Optional[bool] = None):
+                     slot_mask=None, block_k: int = 512,
+                     interpret: Optional[bool] = None):
     """Model-layout flash decode: q (B,1,Hq,d), caches (B,C,Hkv,d),
     lens (B,) -> (B,1,Hq,d).  Optional k/v_new (B,1,Hkv,d): the current
     token's K/V, merged in-kernel instead of read from the cache
-    (zero-copy serving mode)."""
+    (zero-copy serving mode).  Optional slot_mask (B,C): per-slot cache
+    validity for ring-buffered (windowed) caches."""
     qt = q[:, 0]                                     # (B,Hq,d)
     kt = jnp.moveaxis(k_cache, 1, 2)                 # (B,Hkv,C,d)
     vt = jnp.moveaxis(v_cache, 1, 2)
     kn = None if k_new is None else jnp.moveaxis(k_new, 1, 2)
     vn = None if v_new is None else jnp.moveaxis(v_new, 1, 2)
     o = _dec.decode_attention(qt, kt, vt, lens, k_new=kn, v_new=vn,
-                              block_k=block_k,
+                              slot_mask=slot_mask, block_k=block_k,
                               interpret=_interpret(interpret))
     return o[:, None]
 

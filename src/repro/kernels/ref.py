@@ -36,8 +36,11 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
                       vv.astype(jnp.float32)).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v, lens, *, scale=None):
-    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d)."""
+def decode_attention_ref(q, k, v, lens, *, slot_mask=None, scale=None):
+    """q: (B, Hq, d); k/v: (B, Hkv, C, d); lens: (B,) -> (B, Hq, d).
+
+    ``slot_mask`` (B, C): per-slot validity (ring-buffer eviction), ANDed
+    with the prefix-length mask — the oracle for the masked kernel path."""
     B, Hq, d = q.shape
     _, Hkv, C, _ = k.shape
     G = Hq // Hkv
@@ -47,6 +50,8 @@ def decode_attention_ref(q, k, v, lens, *, scale=None):
     s = jnp.einsum("bhd,bhcd->bhc", q.astype(jnp.float32),
                    kk.astype(jnp.float32)) * scale
     mask = jnp.arange(C)[None, :] < lens[:, None]          # (B, C)
+    if slot_mask is not None:
+        mask = mask & jnp.asarray(slot_mask, bool)
     s = jnp.where(mask[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(mask[:, None, :], p, 0.0)

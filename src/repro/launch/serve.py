@@ -126,12 +126,16 @@ def main(argv=None):
         run_cluster(cfg, params, args)
         return
 
-    # cold start through the PipeBoost engine
+    # overlapped cold start through the PipeBoost engine: one loading
+    # round flips `ready` (each device holds ~1/N of the model); the rest
+    # of the segments stream in on a background fill thread WHILE the
+    # serving engine below admits and decodes
     eng = PipeBoostEngine(cfg, params, n_devices=args.devices, max_len=96)
     t0 = time.perf_counter()
     eng.load_round()
     print(f"ready after 1 loading round ({time.perf_counter()-t0:.2f}s "
           f"wall): chain={eng.chain()}")
+    eng.start_fill()                   # background fill: load || serve
 
     adapter_params = {}
     for i in range(args.adapters):
@@ -143,6 +147,13 @@ def main(argv=None):
                         policy=EpochSchedulerPolicy(epoch_budget=4,
                                                     max_batch=args.slots),
                         adapter_params=adapter_params)
+    if eng.enable_pipeline_prefill():
+        # multi-device XLA: admission prefills ride the shard_map belt
+        # until the engine's strategy switch (same wiring as ClusterServer)
+        srv.batcher.set_pipeline_prefill(eng.serving_pipeline_prefill,
+                                         fits=eng.serving_pipeline_fits)
+        srv.batcher.prefill_backend = (
+            lambda: "pipeline" if eng.strategy == "pipeline" else "single")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         adapter = (f"lora{i % args.adapters}" if args.adapters and i % 2
@@ -152,8 +163,18 @@ def main(argv=None):
                                 max_new_tokens=args.new_tokens,
                                 adapter=adapter))
     done = srv.run()
+    eng.stop_fill()
+    while eng.load_round():     # finish any tail the thread didn't reach
+        pass
+    cs = eng.cold_start_stats()
+    overlapped = cs["time_to_fully_loaded"] is None \
+        or cs["time_to_fully_loaded"] > cs["time_to_ready"]
     print(f"served {len(done)} requests "
           f"({srv.n_adapter_switches} adapter switches)")
+    print(f"  cold start: time_to_ready={cs['time_to_ready']:.3f}s "
+          f"time_to_fully_loaded={cs['time_to_fully_loaded']:.3f}s "
+          f"({cs['n_rounds']} fill rounds, {cs['loaded_bytes']}B; "
+          f"serving overlapped loading={overlapped})")
     for r in done:
         print(f"  req{r.rid} adapter={r.adapter or 'base':6s} "
               f"-> {r.generated}")

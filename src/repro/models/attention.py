@@ -311,16 +311,18 @@ def decode_attention_merged(q, k_cache, v_cache, cache_len, k_new, v_new, *,
     ``kv_slot_mask`` (B, C) bool extends the zero-copy trick to ring-
     buffered (windowed) caches: slot validity there is not a prefix length
     (the slot the new token will overwrite holds the evicted, out-of-window
-    entry and must not be attended).  The masked path always lowers through
-    XLA — the Pallas kernel only understands prefix lengths.
+    entry and must not be attended).  The mask rides the Pallas kernel's
+    split-K blocking too, so the windowed path no longer pins to the XLA
+    lowering.
     """
-    if kv_slot_mask is None and scale is None and _use_pallas_decode():
+    if scale is None and _use_pallas_decode():
         from repro.kernels import ops
         B = q.shape[0]
         lens = jnp.broadcast_to(
             jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
         return ops.decode_attention(q, k_cache, v_cache, lens,
-                                    k_new=k_new, v_new=v_new)
+                                    k_new=k_new, v_new=v_new,
+                                    slot_mask=kv_slot_mask)
     p_old = attention_partial(q, k_cache, v_cache, causal=False, window=0,
                               kv_valid_len=cache_len,
                               kv_slot_mask=kv_slot_mask,

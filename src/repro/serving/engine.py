@@ -99,6 +99,14 @@ class ContinuousBatcher:
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        # prefill backend dispatch (overlapped cold start): while the host
+        # engine is mid-load in pipeline strategy, admission prefills lower
+        # through the injected pipeline fn (shard_map belt on multi-device
+        # backends); after the strategy switch — or when nothing was
+        # injected — through the engine's own fused single lowering
+        self.prefill_backend: Callable[[], str] = lambda: "single"
+        self._pipe_prefill: Optional[Callable] = None
+        self._pipe_fits: Callable[[int, int], bool] = lambda P, S: True
         self.cache = transformer.init_cache(cfg, n_slots, max_len,
                                             jnp.dtype(cfg.dtype))
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
@@ -122,10 +130,13 @@ class ContinuousBatcher:
         self.decode_time_s = 0.0
         self.n_prefill_calls = 0
         self.n_prefill_reqs = 0
+        self.n_prefill_pipeline = 0      # requests prefilled via the
+                                         # pipeline (cold-start) lowering
         # migration counters (snapshot imports; tokens whose prefill was
         # skipped because their state arrived with them)
         self.n_migrated_in = 0
         self.migrated_tokens_in = 0
+        self.n_batched_imports = 0       # import_snapshots scatter calls
         self._sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
         self._build_jits()
 
@@ -161,6 +172,29 @@ class ContinuousBatcher:
 
         self._decode_fused = jax.jit(fused_decode, donate_argnums=(3,))
 
+        def write_rows(cache, rows, slots, valid, pos):
+            """Scatter per-request row stacks into the donated cache.
+
+            ``rows``: kind -> leaf -> (L, P, ...) stacked rows (a prefill's
+            fresh cache, a batch of migrated snapshots, or the pipeline
+            prefill's state); slot j takes row src[j] iff some valid row
+            targets it — one select per leaf, no per-row dispatch.
+            """
+            sel = (slots[None, :] == jnp.arange(n_slots)[:, None]) \
+                & valid[None, :]                       # (n_slots, P)
+            written = sel.any(axis=1)                  # (n_slots,)
+            src = jnp.argmax(sel.astype(jnp.int32), axis=1)
+            for key in ("attn", "ssm", "rec"):
+                if key in rows:
+                    for leaf in rows[key]:
+                        old = cache[key][leaf]
+                        new = jnp.take(rows[key][leaf], src, axis=1)
+                        w = written.reshape((1, -1) + (1,) * (old.ndim - 2))
+                        cache[key][leaf] = jnp.where(w, new, old)
+            cache["pos"] = jnp.where(written, jnp.take(pos, src),
+                                     cache["pos"])
+            return cache
+
         def fused_prefill(p, toks, last_idx, slots, valid, cache):
             """Prefill padded prompts and write them into ``slots`` in-jit.
 
@@ -173,24 +207,22 @@ class ContinuousBatcher:
             logits, c1 = transformer.forward(
                 cfg, p, {"tokens": toks}, mode="prefill", max_len=max_len,
                 last_index=last_idx)
-            # slot j takes row src[j] iff some valid row targets it
-            sel = (slots[None, :] == jnp.arange(n_slots)[:, None]) \
-                & valid[None, :]                       # (n_slots, P)
-            written = sel.any(axis=1)                  # (n_slots,)
-            src = jnp.argmax(sel.astype(jnp.int32), axis=1)
-            for key in ("attn", "ssm", "rec"):
-                if key in c1:
-                    for leaf in c1[key]:
-                        old = cache[key][leaf]
-                        new = jnp.take(c1[key][leaf], src, axis=1)
-                        w = written.reshape((1, -1) + (1,) * (old.ndim - 2))
-                        cache[key][leaf] = jnp.where(w, new, old)
-            new_pos = jnp.take(last_idx + 1, src)
-            cache["pos"] = jnp.where(written, new_pos, cache["pos"])
+            rows = {k: c1[k] for k in ("attn", "ssm", "rec") if k in c1}
+            cache = write_rows(cache, rows, slots, valid, last_idx + 1)
             first = self._sampler(logits).astype(jnp.int32)
             return first, cache
 
         self._prefill_fused = jax.jit(fused_prefill, donate_argnums=(5,))
+
+        def fused_scatter(cache, rows, slots, pos, valid):
+            """Standalone donated row scatter (one compile for its
+            lifetime): batched snapshot import — N migrated requests land
+            in ONE call — and the pipeline-prefill slot write both ride
+            this.  Row count is pinned to ``n_slots`` (pad rows masked by
+            ``valid``) so every caller shares the compilation."""
+            return write_rows(cache, rows, slots, valid, pos)
+
+        self._scatter_fused = jax.jit(fused_scatter, donate_argnums=(0,))
 
         def fused_import(cache, rows, slot, pos):
             """Scatter one request's per-layer state rows into ``slot``.
@@ -214,6 +246,31 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------
     # prefill / admission
     # ------------------------------------------------------------------
+    def set_pipeline_prefill(self, fn: Callable,
+                             fits: Optional[Callable[[int, int], bool]]
+                             = None) -> None:
+        """Inject the pipeline prefill lowering for cold-start dispatch.
+
+        ``fn(params, {"tokens": (P, S), "last_index": (P,)})`` must return
+        ``(last-index logits (P, V), state {kind: {leaf: (L, P, ...)}})``
+        — the contract of ``distributed.pipeline.build_pipeline_prefill``
+        with ``return_cache=True`` (see ``PipeBoostEngine.
+        serving_pipeline_prefill``).  ``fits(P, S)`` pre-checks mesh
+        divisibility; unfit shapes fall back to the single lowering.
+        Admission uses it only while ``prefill_backend()`` says
+        "pipeline" (i.e. mid-load, before the strategy switch).
+        """
+        self._pipe_prefill = fn
+        if fits is not None:
+            self._pipe_fits = fits
+
+    def _choose_prefill_backend(self, P: int, bucket: int) -> str:
+        if (self._pipe_prefill is not None and self._can_bucket
+                and self.prefill_backend() == "pipeline"
+                and self._pipe_fits(P, bucket)):
+            return "pipeline"
+        return "single"
+
     def _total_len(self, req: ServeRequest) -> int:
         return len(req.tokens) + len(req.generated)
 
@@ -284,9 +341,23 @@ class ContinuousBatcher:
             slots[i] = slot
             valid[i] = True
             assigned.append((i, slot, req))
-        first, self.cache = self._prefill_fused(
-            self.params, jnp.asarray(toks), jnp.asarray(last_idx),
-            jnp.asarray(slots), jnp.asarray(valid), self.cache)
+        backend = self._choose_prefill_backend(P, bucket)
+        if backend == "pipeline":
+            # TTFT-critical cold-start path: the prompt runs the shard_map
+            # pipeline belt over the partially-loaded stage chain; the slot
+            # write reuses the shared donated scatter
+            logits, state = self._pipe_prefill(
+                self.params, {"tokens": jnp.asarray(toks),
+                              "last_index": jnp.asarray(last_idx)})
+            self.cache = self._scatter_fused(
+                self.cache, state, jnp.asarray(slots),
+                jnp.asarray(last_idx + 1), jnp.asarray(valid))
+            first = self._sampler(logits).astype(jnp.int32)
+            self.n_prefill_pipeline += len(reqs)
+        else:
+            first, self.cache = self._prefill_fused(
+                self.params, jnp.asarray(toks), jnp.asarray(last_idx),
+                jnp.asarray(slots), jnp.asarray(valid), self.cache)
         first_host = np.asarray(first)
         self.n_prefill_calls += 1
         self.n_prefill_reqs += len(reqs)
@@ -390,12 +461,67 @@ class ContinuousBatcher:
         self.migrated_tokens_in += snap.pos
         return True
 
+    def import_snapshots(self, pairs: Sequence[Tuple[ServeRequest,
+                                                     KVSnapshot]]
+                         ) -> List[ServeRequest]:
+        """Batched migration import: N displaced requests' snapshots land
+        in ONE donated scatter (one dispatch, one compile shared with the
+        other row-scatter users) instead of N sequential
+        ``import_snapshot`` calls — the survivor-absorbs-several-victims
+        path after a whole-server crash.
+
+        Imports as many pairs as there are free slots / compatible
+        snapshots (in order) and returns the requests actually admitted;
+        the caller re-routes the rest.
+        """
+        usable: List[Tuple[ServeRequest, KVSnapshot]] = []
+        for req, snap in pairs:
+            if len(usable) >= len(self.free):
+                break
+            if snap is not None and snap.compatible_with(
+                    self.cache, self.cfg.name, self.max_len):
+                usable.append((req, snap))
+        if not usable:
+            return []
+        P = self.n_slots
+        slots = np.zeros((P,), np.int32)
+        pos = np.zeros((P,), np.int32)
+        valid = np.zeros((P,), bool)
+        # stack each leaf's per-request rows (L, ...) -> (L, P, ...); pad
+        # rows stay zero and are masked out by ``valid``
+        rows: Dict[str, Dict[str, np.ndarray]] = {}
+        for kind, leaves in usable[0][1].rows.items():
+            rows[kind] = {}
+            for leaf, a in leaves.items():
+                buf = np.zeros((a.shape[0], P) + a.shape[1:], a.dtype)
+                for j, (_, s) in enumerate(usable):
+                    buf[:, j] = s.rows[kind][leaf]
+                rows[kind][leaf] = buf
+        out: List[ServeRequest] = []
+        for j, (req, snap) in enumerate(usable):
+            slot = self.free.pop()
+            slots[j] = slot
+            pos[j] = snap.pos
+            valid[j] = True
+            req.slot = slot
+            self.active[slot] = req
+            self.n_migrated_in += 1
+            self.migrated_tokens_in += snap.pos
+            out.append(req)
+        self.cache = self._scatter_fused(
+            self.cache, rows, jnp.asarray(slots), jnp.asarray(pos),
+            jnp.asarray(valid))
+        self.n_batched_imports += 1
+        self._io_dirty = True
+        return out
+
     def warm_import(self) -> None:
-        """Pre-compile the snapshot-import jit (recovery-path warm-up).
+        """Pre-compile the snapshot-import jits (recovery-path warm-up).
 
         Writes slot 0's own rows back to itself — a semantic no-op — so
         the first real migration pays steady-state import cost, not an
-        XLA compile, inside the post-crash TTFT window.
+        XLA compile, inside the post-crash TTFT window.  The batched
+        scatter is warmed with an all-invalid write for the same reason.
         """
         rows = {kind: {leaf: arr[:, 0]
                        for leaf, arr in self.cache[kind].items()}
@@ -403,6 +529,13 @@ class ContinuousBatcher:
         self.cache = self._import_fused(
             self.cache, rows, jnp.asarray(0, jnp.int32),
             self.cache["pos"][0])
+        zeros = {kind: {leaf: jnp.zeros_like(arr)
+                        for leaf, arr in self.cache[kind].items()}
+                 for kind in ("attn", "ssm", "rec") if kind in self.cache}
+        P = self.n_slots
+        self.cache = self._scatter_fused(
+            self.cache, zeros, jnp.zeros((P,), jnp.int32),
+            jnp.zeros((P,), jnp.int32), jnp.zeros((P,), bool))
 
     def reconstruct_inflight(self, has_state: Sequence[bool]
                              ) -> Dict[str, float]:
@@ -472,6 +605,8 @@ class ContinuousBatcher:
                                    if self.decode_time_s > 0 else 0.0),
             "n_prefill_calls": float(self.n_prefill_calls),
             "n_prefill_reqs": float(self.n_prefill_reqs),
+            "n_prefill_pipeline": float(self.n_prefill_pipeline),
+            "n_batched_imports": float(self.n_batched_imports),
         }
         s.update({k: float(v) for k, v in self.compile_stats().items()})
         return s
@@ -608,6 +743,38 @@ class ServingEngine:
             req.arrival = self.clock
         req.snapshot = None
         return True
+
+    def admit_with_state_batch(self, reqs: Sequence[ServeRequest]
+                               ) -> List[ServeRequest]:
+        """Batched ``admit_with_state``: displaced requests sharing an
+        adapter import their snapshots in ONE donated scatter (one
+        dispatch) instead of one call each — how a survivor absorbs
+        several victims of a whole-server crash.  Applies the same guards
+        (free slots, shape compatibility, adapter availability, epoch
+        barrier) and returns the requests actually admitted; the caller
+        falls back to re-prefill for the rest.
+        """
+        accepted: List[ServeRequest] = []
+        groups: Dict[Optional[str], List[ServeRequest]] = {}
+        for r in reqs:
+            if r.snapshot is not None:
+                groups.setdefault(r.adapter, []).append(r)
+        for name, group in groups.items():
+            if name is not None and name not in self.adapter_params:
+                continue
+            if self.batcher.active:
+                if name != self.active_adapter:
+                    continue            # epoch barrier (see admit_with_state)
+            else:
+                self._switch_adapter(name)
+            done = self.batcher.import_snapshots(
+                [(r, r.snapshot) for r in group])
+            for r in done:
+                if r.arrival is None:
+                    r.arrival = self.clock
+                r.snapshot = None
+                accepted.append(r)
+        return accepted
 
     def drain_inflight(self, export_state: bool = True) -> List[ServeRequest]:
         """Remove every in-flight AND queued request (crash re-route path);

@@ -91,6 +91,82 @@ def test_decode_attention_merged_new_token(B, C, Hq, Hkv, d, dtype):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("B,C,Hq,Hkv,d,block_k", [
+    (3, 40, 8, 2, 64, 16),           # GQA, mask straddles block edges
+    (2, 300, 4, 4, 32, 128),         # pad path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("merge_new", [False, True])
+def test_decode_attention_slot_mask(B, C, Hq, Hkv, d, block_k, dtype,
+                                    merge_new):
+    """Ring-buffer mode: per-slot validity mask (eviction) must match the
+    oracle — with and without the zero-copy in-kernel new-token merge."""
+    q = rnd((B, 1, Hq, d), dtype, 50)
+    k = rnd((B, C, Hkv, d), dtype, 51)
+    v = rnd((B, C, Hkv, d), dtype, 52)
+    rng = np.random.default_rng(2)
+    lens = jnp.asarray(rng.integers(0, C + 1, size=B), jnp.int32)
+    sm = rng.integers(0, 2, size=(B, C)).astype(bool)
+    sm[0, :] = True                   # one fully-valid row
+    kwargs = {}
+    if merge_new:
+        kwargs["k_new"] = rnd((B, 1, Hkv, d), dtype, 53)
+        kwargs["v_new"] = rnd((B, 1, Hkv, d), dtype, 54)
+    o = ops.decode_attention(q, k, v, lens, slot_mask=jnp.asarray(sm),
+                             block_k=block_k, **kwargs)
+    if merge_new:
+        # oracle: write the new token at the ring slot (pos % C), mark the
+        # slot valid, and attend over min(lens+1, C) entries
+        bidx = jnp.arange(B)
+        slot = jnp.mod(lens, C)
+        kw = k.at[bidx, slot].set(kwargs["k_new"][:, 0])
+        vw = v.at[bidx, slot].set(kwargs["v_new"][:, 0])
+        smw = jnp.asarray(sm).at[bidx, slot].set(True)
+        r = ref.decode_attention_ref(q[:, 0], jnp.moveaxis(kw, 1, 2),
+                                     jnp.moveaxis(vw, 1, 2),
+                                     jnp.minimum(lens + 1, C), slot_mask=smw)
+    else:
+        r = ref.decode_attention_ref(q[:, 0], jnp.moveaxis(k, 1, 2),
+                                     jnp.moveaxis(v, 1, 2), lens,
+                                     slot_mask=jnp.asarray(sm))
+    np.testing.assert_allclose(np.asarray(o[:, 0], np.float32),
+                               np.asarray(r, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_windowed_decode_step_pallas_matches_xla():
+    """Ring-buffer (windowed) decode under eviction: the slot-masked Pallas
+    flash-decode must produce the same logits/cache as the XLA lowering —
+    the windowed zero-copy path no longer pins to XLA (ROADMAP item)."""
+    from repro.configs.base import get_arch
+    from repro.models import attention as A
+    from repro.models import transformer as T
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2, attn_window=8)
+    params = T.init_params(cfg, KEY)
+    # prompt longer than the window: the ring is full and every further
+    # decode step evicts (the slot mask is live, not vacuous)
+    prompt = jax.random.randint(jax.random.fold_in(KEY, 60), (2, 12), 0, 250)
+    lg, cache0 = T.forward(cfg, params, {"tokens": prompt}, mode="prefill",
+                           max_len=32)
+    tok0 = jnp.argmax(lg, -1).astype(jnp.int32)
+    outs = {}
+    for impl in ("xla", "pallas"):
+        cache = jax.tree.map(lambda a: a, cache0)
+        tok = tok0
+        toks = []
+        with A.decode_attn_impl(impl):
+            for _ in range(6):
+                lg, cache = T.decode_step(cfg, params, {"tokens": tok}, cache)
+                tok = jnp.argmax(lg, -1).astype(jnp.int32)
+                toks.append(np.asarray(tok))
+        outs[impl] = (np.stack(toks), cache)
+    np.testing.assert_array_equal(outs["xla"][0], outs["pallas"][0])
+    for leaf in outs["xla"][1]["attn"]:
+        np.testing.assert_allclose(
+            np.asarray(outs["xla"][1]["attn"][leaf]),
+            np.asarray(outs["pallas"][1]["attn"][leaf]), atol=1e-5, rtol=1e-5)
+
+
 def test_decode_step_pallas_matches_xla():
     """transformer.decode_step behind the backend dispatch: the Pallas
     flash-decode path (interpret mode here, Mosaic on TPU) must match the

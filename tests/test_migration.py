@@ -230,3 +230,81 @@ def test_reconstruct_inflight_partial_layers():
         srv.step()
     for i, p in enumerate(prompts):
         assert reqs[i].generated == _solo(cfg, params, p, 8), i
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("qwen3-1.7b", {}),                          # dense, full-length cache
+    ("qwen3-1.7b", {"attn_window": 8}),          # pure-attn ring buffer
+    ("mamba2-780m", {}),                         # SSM state only
+])
+def test_batched_import_matches_sequential(arch, kw):
+    """A survivor absorbing several victims imports their snapshots in ONE
+    donated scatter (import_snapshots) with the same continuations as N
+    sequential import_snapshot calls — and one batched-import dispatch."""
+    cfg = get_arch(arch).reduced(n_layers=4, **kw)
+    params = T.init_params(cfg, KEY)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 250, size=L) for L in (20, 11, 15)]
+
+    def drained_victims():
+        a = _engine(cfg, params, n_slots=4)
+        reqs = [ServeRequest(i, p, max_new_tokens=10)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            a.submit(r)
+        for _ in range(4):
+            a.step()
+        return a.drain_inflight()
+
+    b = _engine(cfg, params, n_slots=4)
+    batch = drained_victims()
+    accepted = b.admit_with_state_batch(batch)
+    assert sorted(r.rid for r in accepted) == [0, 1, 2]
+    assert b.batcher.n_batched_imports == 1      # ONE scatter dispatch
+    assert b.batcher.n_migrated_in == 3
+    assert b.batcher.n_prefill_reqs == 0         # zero re-prefill
+    while b.batcher.n_active:
+        b.step()
+
+    c = _engine(cfg, params, n_slots=4)
+    seq = drained_victims()
+    for r in seq:
+        assert c.admit_with_state(r)
+    while c.batcher.n_active:
+        c.step()
+    for x, y in zip(sorted(accepted, key=lambda r: r.rid),
+                    sorted(seq, key=lambda r: r.rid)):
+        assert x.generated == y.generated, (x.rid, x.generated, y.generated)
+        assert x.generated == _solo(cfg, params, prompts[x.rid], 10)
+
+
+def test_batched_import_partial_capacity():
+    """With fewer free slots than victims, import_snapshots takes what
+    fits and hands the rest back for the re-prefill fallback."""
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2)
+    params = T.init_params(cfg, KEY)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 250, size=10 + i) for i in range(3)]
+    a = _engine(cfg, params, n_slots=4)
+    reqs = [ServeRequest(i, p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        a.submit(r)
+    for _ in range(3):
+        a.step()
+    drained = a.drain_inflight()
+
+    b = _engine(cfg, params, n_slots=3)
+    resident = ServeRequest(9, rng.integers(0, 250, size=8),
+                            max_new_tokens=12)
+    b.submit(resident)
+    b.step()                                     # 2 free slots remain
+    accepted = b.admit_with_state_batch(drained)
+    assert len(accepted) == 2
+    left = [r for r in drained if r.rid not in {x.rid for x in accepted}]
+    assert len(left) == 1 and left[0].snapshot is not None
+    while b.batcher.n_active:
+        b.step()
+    for r in accepted:
+        assert r.generated == _solo(cfg, params, prompts[r.rid], 8)
+    assert resident.generated == _solo(cfg, params, resident.tokens, 12)
