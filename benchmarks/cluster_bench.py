@@ -19,7 +19,7 @@ import jax
 
 from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
                            ClusterRouter, burst_wave_trace, gamma_trace,
-                           poisson_trace)
+                           make_dispatch, poisson_trace)
 from repro.configs.base import get_arch
 from repro.models import transformer as T
 
@@ -48,6 +48,8 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=2)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--crash-at", type=int, default=-1)
+    ap.add_argument("--dispatch", default="least_loaded",
+                    choices=("least_loaded", "slo_aware", "adapter_affine"))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="cluster_metrics.json")
     args = ap.parse_args(argv)
@@ -60,7 +62,8 @@ def main(argv=None) -> None:
         ccfg=ClusterConfig(n_devices=args.devices, n_slots=args.slots),
         autoscaler=Autoscaler(AutoscalerConfig(
             target_queue_per_server=args.slots,
-            max_servers=args.max_servers)))
+            max_servers=args.max_servers)),
+        dispatch=make_dispatch(args.dispatch))
     crash = args.crash_at if args.crash_at >= 0 else None
     router.run(trace, crash_after_completions=crash,
                crash_server_id=min(1, args.servers - 1),

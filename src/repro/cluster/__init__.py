@@ -7,15 +7,33 @@ across N server replicas, an autoscaler that cold-starts servers mid-burst
 and admits traffic the moment a viable pipeline chain exists, cross-server
 re-routing of in-flight requests on a crash, and a JSON metrics layer
 (TTFT/TBT percentiles, queue depth, GPU-seconds).
+
+Scheduling is pluggable (cluster/scheduler.py): dispatch policies
+(least-loaded / SLO-aware / adapter-affine), placement policies for what
+a spawned server preloads, and injected clocks (logical ticks vs wall
+time).  Multi-model fleets ride cluster/fleet.py: named per-model pools
+over shared base params with per-pool autoscalers and cross-pool metrics.
 """
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.fleet import Fleet, PoolSpec
 from repro.cluster.metrics import ClusterMetrics, percentile
 from repro.cluster.router import ClusterConfig, ClusterRouter, ClusterServer
+from repro.cluster.scheduler import (DISPATCH_POLICIES, AdapterAffine,
+                                     Clock, DispatchPolicy,
+                                     HotAdapterPlacement, LeastLoaded,
+                                     LogicalClock, PlacementPolicy,
+                                     PreloadAll, SloAware, WallClock,
+                                     make_dispatch)
 from repro.cluster.traces import (Arrival, burst_wave_trace, gamma_trace,
-                                  load_trace, poisson_trace, save_trace)
+                                  load_azure_trace, load_trace,
+                                  merge_traces, poisson_trace, save_trace)
 
 __all__ = [
-    "Arrival", "Autoscaler", "AutoscalerConfig", "ClusterConfig",
-    "ClusterMetrics", "ClusterRouter", "ClusterServer", "burst_wave_trace",
-    "gamma_trace", "load_trace", "percentile", "poisson_trace", "save_trace",
+    "AdapterAffine", "Arrival", "Autoscaler", "AutoscalerConfig", "Clock",
+    "ClusterConfig", "ClusterMetrics", "ClusterRouter", "ClusterServer",
+    "DISPATCH_POLICIES", "DispatchPolicy", "Fleet", "HotAdapterPlacement",
+    "LeastLoaded", "LogicalClock", "PlacementPolicy", "PoolSpec",
+    "PreloadAll", "SloAware", "WallClock", "burst_wave_trace",
+    "gamma_trace", "load_azure_trace", "load_trace", "make_dispatch",
+    "merge_traces", "percentile", "poisson_trace", "save_trace",
 ]

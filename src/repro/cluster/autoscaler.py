@@ -12,7 +12,7 @@ drain + shutdown of an idle replica).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
 
@@ -30,11 +30,7 @@ class AutoscalerConfig:
 @dataclass
 class ScaleDecision:
     spawn: int = 0
-    retire: List[int] = None               # server ids to retire
-
-    def __post_init__(self):
-        if self.retire is None:
-            self.retire = []
+    retire: List[int] = field(default_factory=list)  # server ids to retire
 
 
 class Autoscaler:

@@ -1,0 +1,137 @@
+"""Multi-model fleet: named per-model server pools on one shared clock.
+
+PipeBoost's serverless scenario (§2.1) is many functions sharing a few
+base models and differing by adapter.  A ``Fleet`` maps that onto named
+``ModelPool``s — each pool is a full ``ClusterRouter`` (queue, lifecycle,
+crash re-route, its own autoscaler and dispatch/placement policies) over
+its base model's params — while the fleet owns what must be shared:
+
+* one injected ``Clock`` (logical or wall — same code either way),
+* one ``ClusterMetrics`` store (cross-pool percentiles + per-model
+  breakdown via ``summary_by_model``; request ids are fleet-global),
+* trace demux: ``Arrival.model`` routes each request to its pool.
+
+Pools over the *same* base model can share one params pytree (pass the
+same object to several specs) — the functional analogue of N pools of
+servers loading segments of one checkpoint, which is exactly the
+many-adapters-one-base fleet the paper's premise implies.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.router import ClusterConfig, ClusterRouter
+from repro.cluster.scheduler import (Clock, DispatchPolicy, LogicalClock,
+                                     PlacementPolicy)
+from repro.cluster.traces import Arrival
+
+
+@dataclass
+class PoolSpec:
+    """One model pool's recipe: base model + sizing + policies.  Fields
+    left None fall back to the ``ClusterRouter`` defaults."""
+    cfg: Any                                  # ArchConfig of the base model
+    params: Any                               # base params (shareable)
+    n_servers: int = 1
+    ccfg: Optional[ClusterConfig] = None
+    autoscaler: Optional[Autoscaler] = None
+    adapter_params: Optional[Dict[str, Any]] = None
+    dispatch: Optional[DispatchPolicy] = None
+    placement: Optional[PlacementPolicy] = None
+
+
+class Fleet:
+    """Named per-model pools sharing a clock, metrics, and rid space."""
+
+    def __init__(self, pools: Dict[str, PoolSpec], *,
+                 clock: Optional[Clock] = None,
+                 metrics: Optional[ClusterMetrics] = None,
+                 default_model: Optional[str] = None):
+        if not pools:
+            raise ValueError("a fleet needs at least one pool")
+        self._clock: Clock = clock or LogicalClock()
+        self.metrics = metrics or ClusterMetrics()
+        self.metrics.clock = self._clock
+        self.default_model = default_model or next(iter(pools))
+        if self.default_model not in pools:
+            raise ValueError(f"default_model {self.default_model!r} is not "
+                             f"a pool: {sorted(pools)}")
+        rid = itertools.count()
+        self.pools: Dict[str, ClusterRouter] = {}
+        for name, spec in pools.items():
+            self.pools[name] = ClusterRouter(
+                spec.cfg, spec.params, n_servers=spec.n_servers,
+                ccfg=spec.ccfg, autoscaler=spec.autoscaler,
+                adapter_params=spec.adapter_params, metrics=self.metrics,
+                dispatch=spec.dispatch, placement=spec.placement,
+                clock=self._clock, model=name, rid_counter=rid)
+
+    @property
+    def clock(self) -> float:
+        return self._clock.now()
+
+    def pool_for(self, arrival: Arrival) -> ClusterRouter:
+        name = arrival.model or self.default_model
+        if name not in self.pools:
+            raise ValueError(f"trace names model {name!r} but the fleet "
+                             f"has pools for {sorted(self.pools)}")
+        return self.pools[name]
+
+    def submit(self, arrival: Arrival) -> int:
+        return self.pool_for(arrival).submit(arrival)
+
+    def crash_server(self, model: str, sid: int,
+                     device_ids: Optional[Sequence[int]] = None) -> None:
+        self.pools[model].crash_server(sid, device_ids)
+
+    @property
+    def pending(self) -> int:
+        return sum(p.pending for p in self.pools.values())
+
+    def tick(self) -> List:
+        """One fleet tick: every pool ticks against the shared clock, then
+        the clock advances ONCE (pools must agree on tick_s — asserted at
+        run time, not assumed).  ``now`` is frozen across the pools so
+        their gauges/events share one timestamp under wall clocks too."""
+        now = self._clock.now()
+        finished: List = []
+        for pool in self.pools.values():
+            finished.extend(pool.tick(advance=False, now=now))
+        self._clock.advance(self._tick_s())
+        return finished
+
+    def _tick_s(self) -> float:
+        ticks = {p.ccfg.tick_s for p in self.pools.values()}
+        if len(ticks) != 1:
+            raise ValueError(f"pools disagree on tick_s: {sorted(ticks)}")
+        return next(iter(ticks))
+
+    def run(self, trace: Sequence[Arrival], *,
+            max_ticks: int = 200_000) -> List:
+        """Replay a (multi-model) trace across the pools to completion."""
+        arrivals = sorted(trace, key=lambda a: a.time)
+        i = 0
+        completed: List = []
+        for _ in range(max_ticks):
+            while i < len(arrivals) and arrivals[i].time <= self.clock:
+                self.submit(arrivals[i])
+                i += 1
+            completed.extend(self.tick())
+            if i >= len(arrivals) and self.pending == 0:
+                break
+            # liveness: stop when EVERY pool is either done or provably
+            # stuck (see ClusterRouter.stalled) — a pool still making
+            # progress keeps the fleet ticking.  Evaluate every pool
+            # (no short-circuit): stalled() advances per-pool counters.
+            states = [(p, p.stalled(arrivals_left=i < len(arrivals)))
+                      for p in self.pools.values()]
+            if self.pending and all(st or p.pending == 0
+                                    for p, st in states):
+                break
+        for pool in self.pools.values():
+            pool.finalize_metrics()
+        return completed

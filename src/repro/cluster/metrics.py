@@ -28,6 +28,16 @@ def percentile(xs: List[float], q: float) -> float:
     return s[k]
 
 
+def _gauge_max(samples: List[Tuple[float, int]]) -> float:
+    """Max of a per-tick gauge.  In a fleet, every pool appends its own
+    sample at the shared tick timestamp — same-time samples sum first, so
+    the max is fleet-wide, not per-pool."""
+    agg: Dict[float, int] = {}
+    for t, v in samples:
+        agg[t] = agg.get(t, 0) + v
+    return float(max(agg.values(), default=0))
+
+
 @dataclass
 class RequestRecord:
     rid: int
@@ -36,7 +46,9 @@ class RequestRecord:
     finished: Optional[float] = None
     n_tokens: int = 0
     reroutes: int = 0            # times the request moved servers (crashes)
-    server: int = -1             # server that completed it
+    # server that completed it: sid, or "pool/sid" in a multi-model fleet
+    server: object = -1
+    model: Optional[str] = None  # fleet pool that served it (multi-model)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -69,11 +81,20 @@ class ClusterMetrics:
     # generation wins on rejoin): time_to_ready / time_to_fully_loaded on
     # the router clock, wall-clock equivalents + loaded bytes from the
     # engine's per-round fill accounting (see ClusterServer.cold_start_record)
-    coldstart: Dict[int, Dict] = field(default_factory=dict)
+    # — keyed by sid, or "pool/sid" strings in a multi-model fleet
+    coldstart: Dict = field(default_factory=dict)
+    # the time source this run records against (the router injects its
+    # Clock here, so external instrumentation can stamp events with
+    # ``metrics.now()`` under logical AND wall time without branching)
+    clock: Optional[object] = field(default=None, repr=False, compare=False)
+
+    def now(self) -> float:
+        return self.clock.now() if self.clock is not None else 0.0
 
     # ---- recording --------------------------------------------------------
-    def on_submit(self, rid: int, arrival: float) -> None:
-        self.records[rid] = RequestRecord(rid, arrival)
+    def on_submit(self, rid: int, arrival: float,
+                  model: Optional[str] = None) -> None:
+        self.records[rid] = RequestRecord(rid, arrival, model=model)
 
     def on_first_token(self, rid: int, t: float) -> None:
         r = self.records[rid]
@@ -81,7 +102,7 @@ class ClusterMetrics:
             r.first_token = t
 
     def on_finish(self, rid: int, t: float, n_tokens: int,
-                  server: int) -> None:
+                  server) -> None:
         r = self.records[rid]
         r.finished = t
         r.n_tokens = n_tokens
@@ -137,8 +158,9 @@ class ClusterMetrics:
                   "prefill_compiles"):
             self.hotpath[k] = self.hotpath.get(k, 0.0) + stats.get(k, 0.0)
 
-    def record_coldstart(self, sid: int, rec: Dict) -> None:
-        """Record one server's cold-start accounting (latest wins)."""
+    def record_coldstart(self, sid, rec: Dict) -> None:
+        """Record one server's cold-start accounting (latest wins).
+        ``sid`` is an int for a standalone router, "pool/sid" in a fleet."""
         self.coldstart[sid] = rec
 
     # ---- summary ----------------------------------------------------------
@@ -157,10 +179,8 @@ class ClusterMetrics:
             "tbt_mean": sum(tbts) / len(tbts) if tbts else 0.0,
             "tbt_p50": percentile(tbts, 50),
             "tbt_p99": percentile(tbts, 99),
-            "queue_depth_max": float(max((d for _, d in self.queue_depth),
-                                         default=0)),
-            "servers_max": float(max((n for _, n in self.n_servers),
-                                     default=0)),
+            "queue_depth_max": _gauge_max(self.queue_depth),
+            "servers_max": _gauge_max(self.n_servers),
             "gpu_seconds": self.gpu_seconds,
             "tokens_total": float(sum(r.n_tokens for r in done)),
             "throughput_tok_s": (sum(r.n_tokens for r in done) / horizon
@@ -198,9 +218,34 @@ class ClusterMetrics:
             r.get("loaded_bytes") or 0 for r in self.coldstart.values()))
         return out
 
+    def summary_by_model(self) -> Dict[str, Dict[str, float]]:
+        """Cross-pool view: per-model request-latency summaries (fleet
+        runs tag records with their pool; untagged requests group under
+        ``"default"``)."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.records.values():
+            groups.setdefault(r.model or "default", []).append(r)
+        out: Dict[str, Dict[str, float]] = {}
+        for model, recs in sorted(groups.items()):
+            done = [r for r in recs if r.finished is not None]
+            ttfts = [r.ttft for r in done if r.ttft is not None]
+            tbts = [r.tbt for r in done if r.tbt is not None]
+            out[model] = {
+                "n_requests": float(len(recs)),
+                "n_completed": float(len(done)),
+                "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+                "ttft_p50": percentile(ttfts, 50),
+                "ttft_p99": percentile(ttfts, 99),
+                "tbt_p50": percentile(tbts, 50),
+                "tbt_p99": percentile(tbts, 99),
+                "tokens_total": float(sum(r.n_tokens for r in done)),
+            }
+        return out
+
     def to_json(self, path: Optional[str] = None) -> str:
         doc = {
             "summary": self.summary(),
+            "models": self.summary_by_model(),
             "requests": [asdict(r) for r in
                          sorted(self.records.values(), key=lambda r: r.rid)],
             "queue_depth": self.queue_depth,
@@ -208,7 +253,9 @@ class ClusterMetrics:
             "events": self.events,
             "recovery": self.recovery,
             "coldstart": [self.coldstart[sid]
-                          for sid in sorted(self.coldstart)],
+                          for sid in sorted(self.coldstart,
+                                            key=lambda k: (str(type(k)),
+                                                           k))],
         }
         blob = json.dumps(doc, indent=1)
         if path:

@@ -3,12 +3,23 @@
 Each ``ClusterServer`` composes the two single-server pieces the repo
 already proves correct: a ``PipeBoostEngine`` (pipelined cold start, crash,
 recovery, strategy switch — core/engine.py) gating a continuous-batched
-``ServingEngine`` (serving/engine.py).  The ``ClusterRouter`` owns a shared
-logical clock, replays an arrival trace, dispatches to the least-loaded
-admitting server, drives the autoscaler, and re-routes in-flight requests
-off crashed servers — their generated prefix re-prefills on a survivor, so
-greedy outputs are EXACTLY the tokens of a crash-free run (the cluster-level
-analogue of the engine's KV-reconstruction exactness).
+``ServingEngine`` (serving/engine.py).  The ``ClusterRouter`` owns the
+queue, the server lifecycle, and crash re-routing; the actual scheduling
+decisions are delegated to pluggable pieces from ``cluster/scheduler.py``:
+
+* a ``DispatchPolicy`` picks which queued request goes to which server
+  (``LeastLoaded`` is the default and reproduces the pre-refactor
+  routing; ``SloAware``/``AdapterAffine`` add deadline- and
+  adapter-aware scheduling);
+* a ``PlacementPolicy`` decides which adapters a spawned server preloads;
+* a ``Clock`` (``LogicalClock`` ticks or ``WallClock`` off
+  ``time.monotonic``) is injected through router, autoscaler, and
+  metrics — simulation and real slices run the SAME code.
+
+Crash re-routing is state-preserving: a crashed server's in-flight
+requests carry their ``KVSnapshot`` to survivors, so greedy outputs are
+EXACTLY the tokens of a crash-free run (the cluster-level analogue of the
+engine's KV-reconstruction exactness).
 
 Server lifecycle::
 
@@ -16,14 +27,14 @@ Server lifecycle::
     serving --crash(total)--> down --rejoin--> loading
     serving --idle + autoscaler--> retired
 
-Time: one router tick = ``tick_s`` logical seconds; per tick a loading
+Time: one router tick = ``tick_s`` clock seconds; per tick a loading
 server advances ``load_rounds_per_tick`` rounds and a serving server runs
-one continuous-batching decode step.  On a real slice the same router runs
-off the wall clock.
+one continuous-batching decode step.
 """
 from __future__ import annotations
 
 import itertools
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence
@@ -32,6 +43,9 @@ import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.scheduler import (Clock, DispatchPolicy, LeastLoaded,
+                                     LogicalClock, PlacementPolicy,
+                                     PreloadAll)
 from repro.cluster.traces import Arrival, prompt_tokens
 from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
@@ -88,6 +102,7 @@ class ClusterServer:
         self.ready_at: Optional[float] = None       # clock seconds
         self.fully_loaded_at: Optional[float] = None
         self._recover_left = 0
+        self._ready_est: Optional[tuple] = None  # (now, s) rounds_to_ready
         self.last_recovery: Dict[str, float] = {}  # partial-crash rebuild
         # stats (kv_reconstruct work counts); read by the router right
         # after crash(), reset only at this server's next crash()
@@ -100,6 +115,37 @@ class ClusterServer:
     @property
     def load(self) -> int:
         return self.srv.n_pending
+
+    def can_serve(self, req: ServeRequest) -> bool:
+        """Does this server hold the weights the request needs?  Placement
+        may have preloaded only a subset of the pool's adapters."""
+        return req.adapter is None or req.adapter in self.srv.adapter_params
+
+    def predicted_ready_s(self, now: float) -> float:
+        """Predicted seconds until this server can admit (0 when serving).
+
+        Loading servers estimate off the engine's load-plan progress
+        (``rounds_to_ready`` — cold-start progress, the signal
+        ``EngineStatus.time_to_ready`` stamps once it flips); recovering
+        servers off the remaining recovery ticks.  Down/retired servers
+        are never admittable (+inf).
+
+        The load-plan simulation only changes when ``load_round`` runs
+        (once per tick), and dispatch evaluates every (request, server)
+        pair against one tick's ``now`` — so the estimate is cached per
+        ``now`` instead of re-simulated per queue entry."""
+        if self.state == "serving":
+            return 0.0
+        if self.state == "loading":
+            if self._ready_est is None or self._ready_est[0] != now:
+                rounds = self.engine.rounds_to_ready()
+                ticks = math.ceil(rounds
+                                  / max(1, self.ccfg.load_rounds_per_tick))
+                self._ready_est = (now, ticks * self.ccfg.tick_s)
+            return self._ready_est[1]
+        if self.state == "recovering":
+            return max(0, self._recover_left) * self.ccfg.tick_s
+        return math.inf
 
     @property
     def oldest_queued_arrival(self) -> Optional[float]:
@@ -154,11 +200,14 @@ class ClusterServer:
         eng = self.engine.cold_start_stats()
         rdy = self.ready_at
         ful = self.fully_loaded_at
+        # clamp: under a wall clock the spawn stamp can land microseconds
+        # after the tick's ``now`` capture
         return {
             "server": self.sid,
-            "time_to_ready": None if rdy is None else rdy - self.spawned_at,
+            "time_to_ready": (None if rdy is None
+                              else max(0.0, rdy - self.spawned_at)),
             "time_to_fully_loaded": (None if ful is None
-                                     else ful - self.spawned_at),
+                                     else max(0.0, ful - self.spawned_at)),
             "served_while_loading": self.served_while_loading,
             "wall_time_to_ready": eng["time_to_ready"],
             "wall_time_to_fully_loaded": eng["time_to_fully_loaded"],
@@ -219,34 +268,64 @@ class ClusterServer:
 
 
 class ClusterRouter:
-    """Trace replay + dispatch + autoscaling + crash handling."""
+    """Trace replay + queue + server lifecycle + crash handling; scheduling
+    decisions delegate to the injected dispatch/placement policies."""
 
     def __init__(self, cfg: ArchConfig, params, *, n_servers: int = 2,
                  ccfg: Optional[ClusterConfig] = None,
                  autoscaler: Optional[Autoscaler] = None,
                  adapter_params: Optional[Dict[str, Any]] = None,
-                 metrics: Optional[ClusterMetrics] = None):
+                 metrics: Optional[ClusterMetrics] = None,
+                 dispatch: Optional[DispatchPolicy] = None,
+                 placement: Optional[PlacementPolicy] = None,
+                 clock: Optional[Clock] = None,
+                 model: Optional[str] = None,
+                 rid_counter: Optional[itertools.count] = None):
         self.cfg = cfg
         self.params = params
         self.ccfg = ccfg or ClusterConfig()
         self.autoscaler = autoscaler
         self.adapter_params = adapter_params
         self.metrics = metrics or ClusterMetrics()
-        self.clock = 0.0
+        self.dispatch = dispatch or LeastLoaded()
+        self.placement = placement or PreloadAll()
+        self._clock: Clock = clock or LogicalClock()
+        self.metrics.clock = self._clock
+        self.model = model                  # pool name in a multi-model fleet
         self.servers: List[ClusterServer] = []
         self.queue: Deque[ServeRequest] = deque()
         self._arrival_time: Dict[int, float] = {}
-        self._rid = itertools.count()
+        self._recent_adapters: Deque[str] = deque(maxlen=256)
+        self._prev_tick_t: Optional[float] = None
+        self._unservable_flagged: set = set()   # rids already evented
+        self._stuck_ticks = 0                   # liveness: no-progress run
+        # a fleet shares one rid counter across pools so metrics keys are
+        # globally unique; standalone routers own theirs
+        self._rid = rid_counter if rid_counter is not None else \
+            itertools.count()
         for _ in range(n_servers):
             self.spawn_server()
 
+    @property
+    def clock(self) -> float:
+        """Current router time in seconds (reads the injected clock)."""
+        return self._clock.now()
+
+    def _metrics_sid(self, sid: int):
+        """Server key in shared (cross-pool) metrics stores."""
+        return f"{self.model}/{sid}" if self.model is not None else sid
+
     # ---- fleet ops --------------------------------------------------------
     def spawn_server(self) -> ClusterServer:
+        aps = self.placement.adapters_for(self.adapter_params or {},
+                                          list(self._recent_adapters))
         s = ClusterServer(len(self.servers), self.cfg, self.params,
-                          self.ccfg, self.adapter_params)
+                          self.ccfg, aps)
         s.spawned_at = self.clock
         self.servers.append(s)
-        self.metrics.on_event(self.clock, "spawn", f"server{s.sid}")
+        self.metrics.on_event(self.clock, "spawn",
+                              f"server{self._metrics_sid(s.sid)} "
+                              f"adapters={sorted(aps)}")
         return s
 
     def crash_server(self, sid: int,
@@ -269,7 +348,7 @@ class ClusterRouter:
             self.metrics.on_reconstruct(server.last_recovery)
             self.metrics.on_event(
                 self.clock, "recover",
-                f"server{sid} reconstruct "
+                f"server{self._metrics_sid(sid)} reconstruct "
                 f"reqs={server.last_recovery.get('reconstructed_reqs', 0):.0f} "
                 f"kv_reused={server.last_recovery.get('kv_reused', 0):.0f} "
                 f"full_prefill={server.last_recovery.get('full_prefill', 0):.0f}")
@@ -317,7 +396,7 @@ class ClusterRouter:
                     len(req.tokens) + len(req.generated))
                 leftovers.append(req)
         self.metrics.on_event(self.clock, "crash",
-                              f"server{sid} migrated={migrated} "
+                              f"server{self._metrics_sid(sid)} migrated={migrated} "
                               f"reprefilled={reprefilled} "
                               f"requeued={len(leftovers) - reprefilled}")
         for req in reversed(leftovers):
@@ -326,7 +405,8 @@ class ClusterRouter:
     def rejoin_server(self, sid: int) -> None:
         self.servers[sid].rejoin()
         self.servers[sid].spawned_at = self.clock
-        self.metrics.on_event(self.clock, "rejoin", f"server{sid}")
+        self.metrics.on_event(self.clock, "rejoin",
+                              f"server{self._metrics_sid(sid)}")
 
     # ---- request path -----------------------------------------------------
     def submit(self, arrival: Arrival) -> int:
@@ -338,35 +418,87 @@ class ClusterRouter:
         rid = next(self._rid)
         req = ServeRequest(rid, prompt_tokens(arrival, self.cfg.vocab_size),
                            max_new_tokens=arrival.max_new_tokens,
-                           adapter=arrival.adapter, arrival=arrival.time)
+                           adapter=arrival.adapter, arrival=arrival.time,
+                           model=arrival.model or self.model,
+                           deadline=(None if arrival.ttft_deadline_s is None
+                                     else arrival.time
+                                     + arrival.ttft_deadline_s))
         self._arrival_time[rid] = arrival.time
-        self.metrics.on_submit(rid, arrival.time)
+        if arrival.adapter:
+            self._recent_adapters.append(arrival.adapter)
+        self.metrics.on_submit(rid, arrival.time, model=req.model)
         self.queue.append(req)
         return rid
 
-    def _dispatch(self) -> None:
+    def _dispatch(self, now: Optional[float] = None) -> None:
         # capacity-bounded: hand a server at most n_slots outstanding
         # requests; the backlog stays in the router queue so a server that
         # cold-starts mid-burst absorbs it (and the queue's wait keeps
-        # feeding the autoscaler's SLO signal)
+        # feeding the autoscaler's SLO signal).  The (request, server)
+        # pairing itself is the injected policy's call.
+        if now is None:
+            now = self.clock
+        # visibility: a request no provisioned server can serve (placement
+        # preloaded subsets) is skipped by the policies, not dispatched —
+        # surface that once per request so a starved adapter is diagnosable
+        live = [s for s in self.servers
+                if s.state not in ("down", "retired")]
+        for req in self.queue:
+            if req.rid not in self._unservable_flagged \
+                    and not any(s.can_serve(req) for s in live):
+                self._unservable_flagged.add(req.rid)
+                self.metrics.on_event(
+                    now, "unservable",
+                    f"req{req.rid} adapter={req.adapter!r}: no live server "
+                    "preloads it (placement)")
         while self.queue:
-            cands = [s for s in self.servers
-                     if s.admitting and s.load < self.ccfg.n_slots]
-            if not cands:
+            picked = self.dispatch.select(self.queue, self.servers, now,
+                                          self.ccfg)
+            if picked is None:
                 return
-            target = min(cands, key=lambda s: (s.load, s.sid))
+            idx, target = picked
+            req = self.queue[idx]
+            del self.queue[idx]
             # sync the server clock so dispatch-time stamps are router time
-            target.srv.clock = max(target.srv.clock, self.clock)
-            target.submit(self.queue.popleft())
+            target.srv.clock = max(target.srv.clock, now)
+            target.submit(req)
 
     @property
     def pending(self) -> int:
         return len(self.queue) + sum(s.load for s in self.servers)
 
+    def stalled(self, arrivals_left: bool, patience: int = 500) -> bool:
+        """Liveness guard for ``run``-style loops: True once the router
+        has spent ``patience`` consecutive ticks with work stuck in the
+        router queue, nothing in flight, no future arrivals, and no
+        server mid-cold-start/recovery — i.e. no event left that could
+        ever dispatch the remainder (requests whose adapter no
+        provisioned server preloads).  Without this, an unservable
+        request would spin the replay loop to ``max_ticks`` silently."""
+        stuck = (not arrivals_left and self.pending > 0
+                 and self.pending == len(self.queue)
+                 and not any(s.state in ("loading", "recovering")
+                             for s in self.servers))
+        self._stuck_ticks = self._stuck_ticks + 1 if stuck else 0
+        if self._stuck_ticks == patience + 1:   # event once, at the crossing
+            self.metrics.on_event(
+                self.clock, "starved",
+                f"{len(self.queue)} request(s) undispatchable "
+                f"(no server can serve them); giving up the replay")
+        return self._stuck_ticks > patience
+
     # ---- main loop --------------------------------------------------------
-    def tick(self) -> List[ServeRequest]:
-        """One cluster tick: autoscale, dispatch, advance every server."""
-        now = self.clock
+    def tick(self, *, advance: bool = True,
+             now: Optional[float] = None) -> List[ServeRequest]:
+        """One cluster tick: autoscale, dispatch, advance every server.
+
+        ``advance=False`` leaves the clock alone — a multi-pool fleet
+        ticks every pool against the shared clock, then advances it once;
+        the fleet also freezes one ``now`` for all pools so their samples
+        share a timestamp even under a wall clock.
+        """
+        if now is None:
+            now = self.clock
         if self.autoscaler is not None:
             # head-of-line wait spans the router queue AND requests still
             # queued inside servers (dispatch drains the router queue every
@@ -382,16 +514,18 @@ class ClusterRouter:
                 self.metrics.on_event(now, "scale_up", "")
                 self.spawn_server()
             for sid in d.retire:
-                self.metrics.on_event(now, "retire", f"server{sid}")
+                self.metrics.on_event(now, "retire",
+                                      f"server{self._metrics_sid(sid)}")
                 self.queue.extend(self.servers[sid].retire())
-        self._dispatch()
+        self._dispatch(now)
         finished: List[ServeRequest] = []
         for s in self.servers:
             was_loading = s.state == "loading"
             for r in s.tick(now):
                 self.metrics.on_first_token(r.rid, r.first_token_at)
                 self.metrics.on_finish(r.rid, r.finished_at,
-                                       len(r.generated), s.sid)
+                                       len(r.generated),
+                                       self._metrics_sid(s.sid))
                 finished.append(r)
             if was_loading and s.state == "serving":
                 # scale-up latency = time-to-first-admittable, NOT
@@ -399,15 +533,22 @@ class ClusterRouter:
                 # live from this moment while segments keep streaming in
                 self.metrics.on_event(
                     now, "ready",
-                    f"server{s.sid} time_to_ready="
-                    f"{now - s.spawned_at:.2f}s "
+                    f"server{self._metrics_sid(s.sid)} time_to_ready="
+                    f"{max(0.0, now - s.spawned_at):.2f}s "
                     f"loaded_bytes={s.engine.loaded_bytes()}")
         busy = sum(self.ccfg.n_devices for s in self.servers
                    if s.state not in ("down", "retired"))
+        # GPU-seconds accrue over the REAL tick duration: under the logical
+        # clock that's exactly tick_s; under the wall clock it's whatever
+        # time the tick actually took (same code, no clock branch)
+        dt = (self.ccfg.tick_s if self._prev_tick_t is None
+              else max(0.0, now - self._prev_tick_t))
+        self._prev_tick_t = now
         self.metrics.on_tick(now, self.pending, len(
             [s for s in self.servers if s.state not in ("down", "retired")]),
-            busy, self.ccfg.tick_s)
-        self.clock = now + self.ccfg.tick_s
+            busy, dt)
+        if advance:
+            self._clock.advance(self.ccfg.tick_s)
         return finished
 
     def run(self, trace: Sequence[Arrival], *, max_ticks: int = 200_000,
@@ -444,7 +585,15 @@ class ClusterRouter:
                 self.rejoin_server(crash_server_id)
             if i >= len(arrivals) and self.pending == 0:
                 break
+            if self.stalled(arrivals_left=i < len(arrivals)):
+                break
+        self.finalize_metrics()
+        return completed
+
+    def finalize_metrics(self) -> None:
+        """Fold per-server hot-path and cold-start accounting into the
+        metrics store (end of a run; fleets call this per pool)."""
         for s in self.servers:
             self.metrics.record_hotpath(s.srv.hotpath_stats())
-            self.metrics.record_coldstart(s.sid, s.cold_start_record())
-        return completed
+            self.metrics.record_coldstart(self._metrics_sid(s.sid),
+                                          s.cold_start_record())

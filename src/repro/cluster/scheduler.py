@@ -1,0 +1,335 @@
+"""Pluggable fleet scheduling: dispatch policies, placement, and clocks.
+
+PipeBoost's premise (§2.1) is that many serverless tasks share one base
+model and differ only by adapter — so *which server gets a request during
+a burst* matters as much as how fast servers cold-start (HydraServe's
+SLO-aware placement, λScale's scaling-state-aware request scheduling).
+This module extracts the routing decision the ``ClusterRouter`` used to
+hard-code into three separable pieces:
+
+* ``DispatchPolicy`` — picks (request, server) pairs off the router queue.
+  - ``LeastLoaded``     the pre-refactor behaviour, extracted verbatim:
+                        fewest pending requests wins, ties by server id.
+  - ``SloAware``        TTFT-deadline priority: earliest-deadline request
+                        first, routed to the server minimizing *predicted*
+                        first-token time (cold-start progress via the
+                        engine's rounds-to-ready, epoch-switch drain
+                        stalls via the batcher's resident-adapter set,
+                        in-flight decode load via remaining tokens).
+  - ``AdapterAffine``   prefers servers whose batcher already has the
+                        request's adapter resident (no epoch-switch
+                        stall), falling back to SLO-aware scoring.
+
+* ``PlacementPolicy`` — decides what a *spawned* server preloads.  The
+  model pool is decided by which pool's autoscaler fired (see
+  ``cluster/fleet.py``); placement narrows the adapter set so a scale-up
+  in a 100-adapter pool doesn't merge-load all 100.
+  - ``PreloadAll``            every adapter the pool knows (default —
+                              the pre-refactor behaviour).
+  - ``HotAdapterPlacement``   the k most-recently-requested adapters.
+
+* ``Clock`` — ``LogicalClock`` (discrete ticks, deterministic CI) vs
+  ``WallClock`` (``time.monotonic``, real slices).  The router/autoscaler
+  take ``now`` from the injected clock and never branch on its type: the
+  same scheduler code runs simulation and real time.
+
+Pure host-side policy — no JAX.  Scoring peeks only at cheap scheduling
+surfaces (queue depths, remaining-token counts, adapter residency,
+load-plan progress), never at device state.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import (Any, Dict, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Clock(Protocol):
+    """Router time source.  ``now`` is seconds since the run started;
+    ``advance`` is called once per router tick with the tick's nominal
+    duration."""
+
+    def now(self) -> float: ...
+
+    def advance(self, dt: float) -> None: ...
+
+
+@dataclass
+class LogicalClock:
+    """Discrete-event time: one ``advance(tick_s)`` per router tick.
+    Deterministic — the CI/simulation clock."""
+    t: float = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class WallClock:
+    """Real time off ``time.monotonic`` (zeroed at construction).
+
+    ``advance`` is a no-op: wall time flows on its own while the tick does
+    real work.  Injecting this instead of ``LogicalClock`` is the ONLY
+    change needed to run the same router/autoscaler/policies on a real
+    slice — no code forks anywhere downstream.
+    """
+
+    def __init__(self) -> None:
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def advance(self, dt: float) -> None:  # real time advances itself
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Dispatch policies
+# ---------------------------------------------------------------------------
+# ``servers`` are ClusterServer-likes exposing the scheduling surface:
+# .sid .state .admitting .load .can_serve(req) .predicted_ready_s(now)
+# .srv (ServingEngine: .resident_adapters() .predicted_step_cost_s()
+#       .batcher.active / .batcher.free / .queued_requests())
+
+def _capacity(server, n_slots: int) -> bool:
+    return server.load < n_slots
+
+
+class DispatchPolicy(Protocol):
+    """One dispatch decision: which queued request goes to which server.
+
+    ``select`` returns ``(queue_index, server)`` or ``None`` when nothing
+    can be dispatched this tick (the router stops pulling and the backlog
+    keeps feeding the autoscaler's SLO signal).  The router pops the
+    request and submits it; ``select`` must not mutate the queue.
+    """
+
+    name: str
+
+    def select(self, queue: Sequence, servers: Sequence, now: float,
+               ccfg) -> Optional[Tuple[int, Any]]: ...
+
+
+@dataclass
+class LeastLoaded:
+    """Pre-refactor routing, extracted: FIFO queue order, dispatch to the
+    admitting server with the fewest pending requests (ties by sid),
+    capacity-bounded at ``n_slots`` outstanding per server.
+
+    A request no current server can serve (placement preloaded a subset
+    of adapters) is skipped, not allowed to block the head of the queue —
+    with full preloads (the pre-refactor world) skipping never triggers
+    and the decisions are identical to the old inline loop.
+    """
+    name: str = "least_loaded"
+
+    def select(self, queue, servers, now, ccfg):
+        for idx, req in enumerate(queue):
+            cands = [s for s in servers
+                     if s.admitting and _capacity(s, ccfg.n_slots)
+                     and s.can_serve(req)]
+            if cands:
+                return idx, min(cands, key=lambda s: (s.load, s.sid))
+            if any(s.admitting and _capacity(s, ccfg.n_slots)
+                   for s in servers):
+                continue          # only THIS request is unservable: skip it
+            return None           # fleet out of capacity: stop dispatching
+        return None
+
+
+@dataclass
+class SloAware:
+    """TTFT-deadline-priority dispatch to the predicted-fastest server.
+
+    Request choice: the queued request with the earliest absolute TTFT
+    deadline (``ServeRequest.deadline``; no deadline = +inf) — FIFO among
+    equals.  Server choice: minimize predicted first-token time::
+
+        t̂ = predicted_ready            (cold start / recovery remaining)
+          + epoch_drain_stall          (batch busy on a DIFFERENT adapter:
+                                        merged-LoRA must drain first —
+                                        max remaining tokens in the batch)
+          + slot_wait                  (no free slot: min remaining tokens
+                                        until one opens)
+          + queue_depth * step_cost    (admissions queued ahead)
+
+    all in seconds of the injected clock.  ``step_cost_s`` pins the
+    per-decode-step cost for deterministic scoring (benchmarks/tests);
+    None consults the server's measured hook
+    (``ServingEngine.predicted_step_cost_s``) with ``tick_s`` fallback.
+    Warming servers are candidates (``consider_warming``): mid-burst it
+    is often faster to queue on a server whose chain is one load-round
+    from viable than behind a deep epoch on a serving one.
+    """
+    name: str = "slo_aware"
+    step_cost_s: Optional[float] = None
+    consider_warming: bool = True
+
+    def _step_cost(self, server, ccfg) -> float:
+        if self.step_cost_s is not None:
+            return self.step_cost_s
+        return server.srv.predicted_step_cost_s(default=ccfg.tick_s)
+
+    def predicted_first_token_s(self, server, req, now, ccfg) -> float:
+        cost = self._step_cost(server, ccfg)
+        # predicted_ready_s counts ticks at nominal tick_s; convert to the
+        # same per-tick cost unit as the drain/queue terms (under a wall
+        # clock a tick really costs ~one measured decode step, not tick_s)
+        t = server.predicted_ready_s(now) / ccfg.tick_s * cost
+        b = server.srv.batcher
+        rem = [max(0, r.max_new_tokens - len(r.generated))
+               for r in b.active.values()]
+        resident = server.srv.resident_adapters()
+        if rem and req.adapter not in resident:
+            t += max(rem) * cost                  # epoch barrier: full drain
+        elif rem and not b.free:
+            t += min(rem) * cost                  # wait for one slot
+        # queued-ahead work: same-adapter requests ride the same admission
+        # batch (≈ one step each); OTHER-adapter requests run whole epochs
+        # before this adapter's turn — price their full remaining tokens,
+        # or a dispatch can look fast on a server whose queue guarantees a
+        # cross-epoch wait
+        for q in server.srv.queued_requests():
+            if q.adapter == req.adapter:
+                t += cost
+            else:
+                t += max(1, q.max_new_tokens - len(q.generated)) * cost
+        return t
+
+    def _candidates(self, req, servers, ccfg):
+        states = ("serving", "loading", "recovering") if self.consider_warming \
+            else ("serving",)
+        return [s for s in servers
+                if s.state in states and _capacity(s, ccfg.n_slots)
+                and s.can_serve(req)]
+
+    def select(self, queue, servers, now, ccfg):
+        # earliest-deadline-first over the queue; a request no current
+        # server can serve is skipped, never left blocking the rest.
+        # (materialize once: the router hands us a deque, and O(n)
+        # deque indexing inside the sort would make burst dispatch cubic)
+        reqs = list(queue)
+        order = sorted(range(len(reqs)),
+                       key=lambda i: (getattr(reqs[i], "deadline", None)
+                                      if getattr(reqs[i], "deadline", None)
+                                      is not None else math.inf, i))
+        for idx in order:
+            req = reqs[idx]
+            cands = self._candidates(req, servers, ccfg)
+            if cands:
+                best = min(cands, key=lambda s: (
+                    self.predicted_first_token_s(s, req, now, ccfg), s.sid))
+                return idx, best
+            if not any(s.state in ("serving", "loading", "recovering")
+                       and _capacity(s, ccfg.n_slots) for s in servers):
+                return None       # fleet out of capacity: stop dispatching
+        return None
+
+
+@dataclass
+class AdapterAffine:
+    """Adapter-affinity first, SLO-aware otherwise.
+
+    Among capacity-holding serving servers, prefer those whose batcher
+    already has the request's adapter resident (admission needs no
+    epoch-switch drain); break ties by the SLO-aware predicted
+    first-token time.  When no affine server exists, fall back to the
+    full SLO-aware scoring (which prices the epoch stall instead of
+    forbidding it).
+    """
+    name: str = "adapter_affine"
+    slo: SloAware = field(default_factory=SloAware)
+
+    def select(self, queue, servers, now, ccfg):
+        if not queue:
+            return None
+        picked = self.slo.select(queue, servers, now, ccfg)
+        if picked is None:
+            return None
+        idx, fallback = picked
+        req = queue[idx]
+        affine = [s for s in servers
+                  if s.admitting and _capacity(s, ccfg.n_slots)
+                  and s.can_serve(req)
+                  and req.adapter in s.srv.resident_adapters()]
+        if not affine:
+            return idx, fallback
+        best = min(affine, key=lambda s: (
+            self.slo.predicted_first_token_s(s, req, now, ccfg), s.sid))
+        return idx, best
+
+
+DISPATCH_POLICIES = {
+    "least_loaded": LeastLoaded,
+    "slo_aware": SloAware,
+    "adapter_affine": AdapterAffine,
+}
+
+
+def make_dispatch(name: str) -> DispatchPolicy:
+    """CLI/bench helper: dispatch policy by registry name."""
+    try:
+        return DISPATCH_POLICIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown dispatch policy {name!r}; "
+                         f"available: {sorted(DISPATCH_POLICIES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Placement policies
+# ---------------------------------------------------------------------------
+
+class PlacementPolicy(Protocol):
+    """What a freshly spawned server preloads.
+
+    The *pool* (base model) is already decided — each pool's autoscaler
+    spawns into its own pool (``cluster/fleet.py``); placement narrows
+    the pool's adapter set to what the new server merge-loads.  ``recent``
+    is the router's recently-requested adapter names, most recent last.
+    """
+
+    name: str
+
+    def adapters_for(self, all_adapters: Dict[str, Any],
+                     recent: Sequence[str]) -> Dict[str, Any]: ...
+
+
+@dataclass
+class PreloadAll:
+    """Every adapter the pool knows — the pre-refactor behaviour, and the
+    right call while adapter sets are small."""
+    name: str = "preload_all"
+
+    def adapters_for(self, all_adapters, recent):
+        return dict(all_adapters)
+
+
+@dataclass
+class HotAdapterPlacement:
+    """Preload the ``k`` hottest adapters by recent request count (ties
+    by recency), so a mid-burst scale-up pays k merge passes, not one per
+    adapter the pool has ever seen.  Requests for non-resident adapters
+    simply never dispatch to this server (``can_serve``) — they ride
+    servers that do hold them."""
+    k: int = 4
+    name: str = "hot_adapters"
+
+    def adapters_for(self, all_adapters, recent):
+        seen = [a for a in recent if a in all_adapters]
+        counts = Counter(seen)
+        last_pos = {a: i for i, a in enumerate(seen)}
+        hot = sorted(counts, key=lambda a: (-counts[a], -last_pos[a]))[:self.k]
+        if not hot:                   # no history yet: behave like PreloadAll
+            return dict(all_adapters)
+        return {a: all_adapters[a] for a in hot}

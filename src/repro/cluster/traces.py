@@ -17,9 +17,11 @@ All generators are deterministic in ``seed``.
 """
 from __future__ import annotations
 
+import csv
+import heapq
 import json
 from dataclasses import asdict, dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -32,24 +34,31 @@ class Arrival:
     max_new_tokens: int = 6
     adapter: Optional[str] = None
     seed: int = 0               # per-request prompt-content seed
+    model: Optional[str] = None          # fleet pool (None = default pool)
+    ttft_deadline_s: Optional[float] = None  # TTFT SLO relative to arrival
 
 
 def _materialize(times: Sequence[float], rng: np.random.Generator, *,
                  prompt_len: int, max_new_tokens: int,
-                 adapters: Sequence[str] = ()) -> List[Arrival]:
+                 adapters: Sequence[str] = (), adapter_prob: float = 0.5,
+                 model: Optional[str] = None,
+                 ttft_deadline_s: Optional[float] = None) -> List[Arrival]:
     out = []
     for i, t in enumerate(times):
         adapter = None
-        if adapters and rng.random() < 0.5:
+        if adapters and rng.random() < adapter_prob:
             adapter = adapters[int(rng.integers(len(adapters)))]
         out.append(Arrival(float(t), prompt_len, max_new_tokens, adapter,
-                           seed=int(rng.integers(2**31 - 1))))
+                           seed=int(rng.integers(2**31 - 1)), model=model,
+                           ttft_deadline_s=ttft_deadline_s))
     return out
 
 
 def poisson_trace(rate: float, horizon: float, *, seed: int = 0,
                   prompt_len: int = 8, max_new_tokens: int = 6,
-                  adapters: Sequence[str] = ()) -> List[Arrival]:
+                  adapters: Sequence[str] = (), adapter_prob: float = 0.5,
+                  model: Optional[str] = None,
+                  ttft_deadline_s: Optional[float] = None) -> List[Arrival]:
     """Homogeneous Poisson arrivals at ``rate`` req/s over ``horizon`` s."""
     rng = np.random.default_rng(seed)
     times, t = [], 0.0
@@ -59,12 +68,16 @@ def poisson_trace(rate: float, horizon: float, *, seed: int = 0,
             break
         times.append(t)
     return _materialize(times, rng, prompt_len=prompt_len,
-                       max_new_tokens=max_new_tokens, adapters=adapters)
+                        max_new_tokens=max_new_tokens, adapters=adapters,
+                        adapter_prob=adapter_prob, model=model,
+                        ttft_deadline_s=ttft_deadline_s)
 
 
 def gamma_trace(rate: float, horizon: float, *, burstiness: float = 4.0,
                 seed: int = 0, prompt_len: int = 8, max_new_tokens: int = 6,
-                adapters: Sequence[str] = ()) -> List[Arrival]:
+                adapters: Sequence[str] = (), adapter_prob: float = 0.5,
+                model: Optional[str] = None,
+                ttft_deadline_s: Optional[float] = None) -> List[Arrival]:
     """Gamma-renewal arrivals with mean rate ``rate`` and CV² = burstiness.
 
     shape k = 1/burstiness < 1 makes inter-arrivals heavy at zero (bursts)
@@ -80,14 +93,19 @@ def gamma_trace(rate: float, horizon: float, *, burstiness: float = 4.0,
             break
         times.append(t)
     return _materialize(times, rng, prompt_len=prompt_len,
-                       max_new_tokens=max_new_tokens, adapters=adapters)
+                        max_new_tokens=max_new_tokens, adapters=adapters,
+                        adapter_prob=adapter_prob, model=model,
+                        ttft_deadline_s=ttft_deadline_s)
 
 
 def burst_wave_trace(n_requests: int, *, base_rate: float = 0.5,
                      wave_rate: float = 20.0, wave_at: float = 2.0,
                      wave_len: float = 2.0, seed: int = 0,
                      prompt_len: int = 8, max_new_tokens: int = 6,
-                     adapters: Sequence[str] = ()) -> List[Arrival]:
+                     adapters: Sequence[str] = (), adapter_prob: float = 0.5,
+                     model: Optional[str] = None,
+                     ttft_deadline_s: Optional[float] = None
+                     ) -> List[Arrival]:
     """Quiet Poisson base load with one sudden wave of ``wave_rate`` starting
     at ``wave_at`` — the fleet-cold-start scenario (stops after
     ``n_requests`` total)."""
@@ -104,7 +122,86 @@ def burst_wave_trace(n_requests: int, *, base_rate: float = 0.5,
         t += dt
         times.append(t)
     return _materialize(times, rng, prompt_len=prompt_len,
-                       max_new_tokens=max_new_tokens, adapters=adapters)
+                        max_new_tokens=max_new_tokens, adapters=adapters,
+                        adapter_prob=adapter_prob, model=model,
+                        ttft_deadline_s=ttft_deadline_s)
+
+
+def merge_traces(*traces: Sequence[Arrival]) -> List[Arrival]:
+    """Interleave per-model/per-adapter traces into one time-sorted stream
+    (each input is already sorted; stable across equal times)."""
+    return list(heapq.merge(*traces, key=lambda a: a.time))
+
+
+# ---------------------------------------------------------------------------
+# Azure Functions trace ingestion
+# ---------------------------------------------------------------------------
+
+def load_azure_trace(path: str, *, minute_s: float = 60.0,
+                     rate_scale: float = 1.0, prompt_len: int = 8,
+                     max_new_tokens: int = 6,
+                     models: Sequence[str] = (),
+                     adapters: Sequence[Optional[str]] = (None,),
+                     ttft_deadline_s: Optional[float] = None,
+                     max_requests: Optional[int] = None,
+                     seed: int = 0) -> List[Arrival]:
+    """Convert the public Azure Functions invocation-count CSV shape into
+    ``Arrival``s (the real-workload replay ROADMAP names).
+
+    The dataset (Shahrad et al., ATC'20) is one row per function —
+    ``HashOwner,HashApp,HashFunction,Trigger,1..1440`` — where the numeric
+    columns are per-minute invocation counts.  Mapping:
+
+    * every numeric-named column is one trace minute; minute ``m`` spans
+      ``[(m-1)*minute_s, m*minute_s)`` seconds (shrink ``minute_s`` to
+      time-compress a day onto a bench horizon);
+    * per-function per-minute counts are scaled by ``rate_scale`` and
+      rounded stochastically (a count of 2.4 yields 2 arrivals plus one
+      more with p=0.4), then placed uniformly inside the minute;
+    * functions map deterministically (sorted by their hash triple) onto
+      the provided ``models``/``adapters`` round-robin — the per-function
+      → adapter/model mapping PipeBoost's shared-base-model premise
+      (§2.1) implies.  Empty ``models`` leaves ``Arrival.model`` None
+      (single-pool replay); ``adapters`` defaults to base-only.
+
+    Deterministic in ``seed``; arrivals return time-sorted, optionally
+    truncated to the first ``max_requests``.
+    """
+    rng = np.random.default_rng(seed)
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        return []
+    minute_cols = sorted((c for c in rows[0] if c and c.strip().isdigit()),
+                         key=int)
+    if not minute_cols:
+        raise ValueError(f"{path}: no per-minute count columns "
+                         "(expected the Azure Functions CSV shape)")
+    rows.sort(key=lambda r: (r.get("HashOwner", ""), r.get("HashApp", ""),
+                             r.get("HashFunction", "")))
+    out: List[Arrival] = []
+    for fi, row in enumerate(rows):
+        model = models[fi % len(models)] if models else None
+        adapter = adapters[fi % len(adapters)] if adapters else None
+        for col in minute_cols:
+            raw = (row.get(col) or "0").strip()
+            scaled = float(raw or 0) * rate_scale
+            n = int(scaled) + (1 if rng.random() < scaled - int(scaled)
+                               else 0)
+            if n <= 0:
+                continue
+            # minute columns are 1-based day minutes; honor gaps and
+            # trimmed excerpts (column "10" IS minute 10, wherever it
+            # sits in the header)
+            t0 = (int(col) - 1) * minute_s
+            for t in sorted(t0 + rng.random(n) * minute_s):
+                out.append(Arrival(float(t), prompt_len, max_new_tokens,
+                                   adapter,
+                                   seed=int(rng.integers(2**31 - 1)),
+                                   model=model,
+                                   ttft_deadline_s=ttft_deadline_s))
+    out.sort(key=lambda a: a.time)
+    return out[:max_requests] if max_requests is not None else out
 
 
 # ---------------------------------------------------------------------------

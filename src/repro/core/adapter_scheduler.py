@@ -27,6 +27,8 @@ class Request:
     service: float            # seconds of compute once scheduled
     start: float = -1.0
     finish: float = -1.0
+    model: str = ""           # fleet pool the request targets (multi-model)
+    deadline: float = math.inf  # absolute TTFT deadline (SLO-aware dispatch)
 
     @property
     def latency(self) -> float:

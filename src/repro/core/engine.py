@@ -222,6 +222,36 @@ class PipeBoostEngine:
     def ready(self) -> bool:
         return self.chain() is not None
 
+    def rounds_to_ready(self, budget: Optional[int] = None) -> int:
+        """Predicted ``load_round`` calls until a viable chain exists
+        (0 when already ready) — the cold-start-progress signal SLO-aware
+        dispatch scores warming servers by.
+
+        Pure bookkeeping: simulates the rotated load order on copies of
+        the per-device loaded sets, never touching real state.  Returns a
+        large sentinel if no amount of loading can complete a chain
+        (e.g. every device dead)."""
+        budget = budget if budget is not None else self.segments_per_round
+        with self._load_lock:
+            alive = [d.idx for d in self.devices if d.alive]
+            loaded = {d.idx: set(d.loaded) for d in self.devices if d.alive}
+            if not alive:
+                return 1 << 20
+            if viable_chain(self.plan, {i: sorted(s) for i, s in
+                                        loaded.items()}, alive) is not None:
+                return 0
+            n_seg = len(self.plan.segments)
+            for rounds in range(1, n_seg + 1):
+                for i in alive:
+                    todo = [s for s in self.plan.order[i]
+                            if s not in loaded[i]][:max(1, budget)]
+                    loaded[i].update(todo)
+                if viable_chain(self.plan, {i: sorted(s) for i, s in
+                                            loaded.items()},
+                                alive) is not None:
+                    return rounds
+            return 1 << 20
+
     @property
     def fully_loaded(self) -> bool:
         with self._load_lock:

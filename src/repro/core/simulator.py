@@ -81,6 +81,68 @@ def decode_step_time(cfg: ArchConfig, hw: HwModel, batch: int, kv_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Snapshot migration cost (bytes over a link)
+# ---------------------------------------------------------------------------
+# Crash migration moves a KVSnapshot's rows between servers.  The byte
+# count is architecture-determined; which link it crosses depends on the
+# deployment (same host: device->device over NVLink/ICI; cross host:
+# device->DRAM->NIC, bounded by the PCIe/host link).  GPU_PAPER carries
+# both bandwidths: ``ici_bw`` (NVLink-class P2P) and ``host_link_bw``
+# (PCIe-class DRAM<->device).
+
+SNAPSHOT_LINKS = ("nvlink", "pcie")
+
+
+def kv_snapshot_bytes(cfg: ArchConfig, pos: int, max_len: int,
+                      dtype_bytes: int = 2) -> int:
+    """Modeled wire size of one request's ``KVSnapshot`` at ``pos`` tokens.
+
+    Attention layers: K+V rows for the cached window
+    (``min(pos, capacity)`` positions x n_kv_heads x head_dim, 2 tensors).
+    SSM (mamba-style) layers: the recurrent state (heads x head_dim x
+    d_state) + conv buffer — position-independent.  RG-LRU layers: the
+    hidden state.  This is the *payload* a migration must move; the
+    repo's in-memory snapshots carry full ``max_len`` rows (pre-sliced
+    layout), so the model is the honest lower bound a wire format would
+    ship.
+    """
+    # windowed attention rings hold at most attn_window rows (the same
+    # capacity rule as transformer.attn_cache_capacity)
+    capacity = min(max_len, cfg.attn_window) if cfg.attn_window > 0 \
+        else max_len
+    kv_len = min(pos, capacity)
+    hd = cfg.resolved_head_dim
+    total = 0
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "moe"):
+            total += 2 * kv_len * cfg.n_kv_heads * hd * dtype_bytes
+        elif kind == "ssm":
+            # SSD state (H, P, N) + conv ring buffer
+            total += (cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                      + cfg.d_inner * cfg.ssm_conv) * dtype_bytes
+        else:  # rec (RG-LRU): hidden state at the recurrence width
+            total += (cfg.lru_width or cfg.d_model) * dtype_bytes
+    return total
+
+
+def snapshot_transfer_time(nbytes: int, hw: HwModel,
+                           link: str = "nvlink") -> float:
+    """Seconds to move ``nbytes`` of snapshot state over ``link``
+    ("nvlink" = device-P2P ``ici_bw``, "pcie" = ``host_link_bw``), plus
+    one hop latency.  ``bench_recovery`` reports this modeled time next
+    to the measured post-crash TTFT so the functional CPU numbers carry a
+    paper-testbed interpretation."""
+    if link == "nvlink":
+        bw = hw.ici_bw
+    elif link == "pcie":
+        bw = hw.host_link_bw
+    else:
+        raise ValueError(f"unknown link {link!r}; "
+                         f"available: {SNAPSHOT_LINKS}")
+    return hw.hop_latency + nbytes / bw
+
+
+# ---------------------------------------------------------------------------
 # Cold start
 # ---------------------------------------------------------------------------
 

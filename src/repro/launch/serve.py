@@ -39,7 +39,8 @@ def run_cluster(cfg, params, args):
     """Bursty trace -> router -> autoscaled PipeBoost servers; prints the
     TTFT/TBT percentile metrics the paper's cluster claims live on."""
     from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
-                               ClusterRouter, burst_wave_trace)
+                               ClusterRouter, WallClock, burst_wave_trace,
+                               make_dispatch)
     key = jax.random.PRNGKey(0)
     adapter_params = {}
     for i in range(args.adapters):
@@ -55,8 +56,13 @@ def run_cluster(cfg, params, args):
     scaler = Autoscaler(AutoscalerConfig(target_queue_per_server=args.slots,
                                          max_servers=args.max_servers,
                                          ttft_slo_s=1.0))
+    # the same router/scheduler code runs logical ticks (default,
+    # deterministic) or wall time (--wall-clock, real-slice mode): the
+    # clock is injected, never branched on
     router = ClusterRouter(cfg, params, n_servers=args.servers, ccfg=ccfg,
-                           autoscaler=scaler, adapter_params=adapter_params)
+                           autoscaler=scaler, adapter_params=adapter_params,
+                           dispatch=make_dispatch(args.dispatch),
+                           clock=WallClock() if args.wall_clock else None)
     t0 = time.perf_counter()
     crash = args.crash_at if args.crash_at >= 0 else None
     done = router.run(trace, crash_after_completions=crash,
@@ -101,6 +107,13 @@ def main(argv=None):
                          "--servers autoscaled PipeBoost servers")
     ap.add_argument("--servers", type=int, default=2)
     ap.add_argument("--max-servers", type=int, default=8)
+    ap.add_argument("--dispatch", default="least_loaded",
+                    choices=("least_loaded", "slo_aware", "adapter_affine"),
+                    help="--cluster: dispatch policy "
+                         "(cluster/scheduler.py)")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="--cluster: run the router off time.monotonic "
+                         "instead of logical ticks (real-slice mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-json", default="",
                     help="--cluster: also dump ClusterMetrics JSON here")

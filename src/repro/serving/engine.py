@@ -78,6 +78,9 @@ class ServeRequest:
     max_new_tokens: int
     adapter: Optional[str] = None
     arrival: Optional[float] = None      # stamped at submit if unset
+    model: Optional[str] = None          # fleet pool name (multi-model)
+    deadline: Optional[float] = None     # absolute TTFT deadline (clock s);
+                                         # None = no SLO attached
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
@@ -793,6 +796,30 @@ class ServingEngine:
         """Partial-crash in-place rebuild of the live batch's lost layers
         (see ContinuousBatcher.reconstruct_inflight)."""
         return self.batcher.reconstruct_inflight(has_state)
+
+    # ---- scheduling surface (consumed by cluster/scheduler.py policies) --
+    def resident_adapters(self) -> set:
+        """Adapters admittable RIGHT NOW without an epoch-switch stall.
+
+        Merged-LoRA semantics: while the batch is busy, only the active
+        adapter's weights are merged in — admitting anything else must
+        wait for the epoch to drain.  An idle batch can switch to any
+        loaded adapter with a pointer swap (params are a traced argument),
+        so everything this engine holds is resident.  ``None`` names the
+        base model.
+        """
+        if self.batcher.active:
+            return {self.active_adapter}
+        return set(self.adapter_params) | {None, self.active_adapter}
+
+    def predicted_step_cost_s(self, default: float = 0.05) -> float:
+        """Measured mean wall-clock cost of one decode step (the
+        SLO-aware dispatch's unit of predicted work); ``default`` until
+        this engine has decoded anything."""
+        b = self.batcher
+        if b.n_decode_steps > 0 and b.decode_time_s > 0:
+            return b.decode_time_s / b.n_decode_steps
+        return default
 
     def queued_requests(self) -> List[ServeRequest]:
         """Requests enqueued but not yet admitted (no first token yet)."""

@@ -1,0 +1,716 @@
+"""Fleet scheduler layer: pluggable dispatch/placement policies, injected
+clocks, multi-model pools, and the Azure trace ingestion.
+
+Load-bearing invariants:
+* ``LeastLoaded`` reproduces the pre-refactor routing decision (min
+  (load, sid) over admitting servers with capacity) — the behavioral
+  regression gate for the extraction.
+* Dispatch policy choice NEVER changes tokens — every policy serves the
+  exact greedy outputs of a solo run (scheduling moves requests, the
+  model math is untouched).
+* ``WallClock`` and ``LogicalClock`` drive the SAME router/autoscaler
+  code: the clock is injected, not branched on.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (AdapterAffine, Arrival, Autoscaler,
+                           AutoscalerConfig, ClusterConfig, ClusterRouter,
+                           Fleet, HotAdapterPlacement, LeastLoaded,
+                           LogicalClock, PoolSpec, PreloadAll, SloAware,
+                           WallClock, burst_wave_trace, load_azure_trace,
+                           load_trace, make_dispatch, merge_traces,
+                           poisson_trace, save_trace)
+from repro.cluster.scheduler import DISPATCH_POLICIES
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.serving.engine import ServeRequest, quantized_greedy
+
+KEY = jax.random.PRNGKey(3)
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _solo(cfg, params, prompt, n):
+    import jax.numpy as jnp
+    lg, cache = T.forward(cfg, params, {"tokens": jnp.asarray(prompt)[None]},
+                          mode="prefill", max_len=96)
+    toks = [int(quantized_greedy(lg)[0])]
+    for _ in range(n - 1):
+        lg, cache = T.decode_step(
+            cfg, params, {"tokens": jnp.asarray([toks[-1]], jnp.int32)},
+            cache)
+        toks.append(int(quantized_greedy(lg)[0]))
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+def test_logical_clock_ticks():
+    c = LogicalClock()
+    assert c.now() == 0.0
+    c.advance(0.05)
+    c.advance(0.05)
+    assert c.now() == pytest.approx(0.1)
+
+
+def test_wall_clock_monotonic_and_advance_noop():
+    c = WallClock()
+    t0 = c.now()
+    c.advance(100.0)            # no-op: wall time flows on its own
+    t1 = c.now()
+    assert 0 <= t0 <= t1 < 10.0
+
+
+# ---------------------------------------------------------------------------
+# dispatch policies (pure, on fakes — no JAX)
+# ---------------------------------------------------------------------------
+
+class _FakeBatcher:
+    def __init__(self, active=(), n_free=4):
+        self.active = {i: r for i, r in enumerate(active)}
+        self.free = list(range(len(self.active), len(self.active) + n_free))
+
+
+class _FakeSrvEngine:
+    """ServingEngine scheduling surface only."""
+
+    def __init__(self, active=(), n_free=4, active_adapter=None,
+                 adapter_params=(), queued=()):
+        self.batcher = _FakeBatcher(active, n_free)
+        self.active_adapter = active_adapter
+        self.adapter_params = {a: None for a in adapter_params}
+        self._queued = list(queued)
+
+    def resident_adapters(self):
+        if self.batcher.active:
+            return {self.active_adapter}
+        return set(self.adapter_params) | {None, self.active_adapter}
+
+    def predicted_step_cost_s(self, default=0.05):
+        return default
+
+    def queued_requests(self):
+        return self._queued
+
+
+class _FakeServer:
+    def __init__(self, sid, state="serving", srv=None, ready_s=0.0):
+        self.sid = sid
+        self.state = state
+        self.srv = srv or _FakeSrvEngine()
+        self._ready_s = ready_s
+
+    @property
+    def admitting(self):
+        return self.state == "serving"
+
+    @property
+    def load(self):
+        return len(self.srv.batcher.active) + len(self.srv.queued_requests())
+
+    def can_serve(self, req):
+        return req.adapter is None or req.adapter in self.srv.adapter_params
+
+    def predicted_ready_s(self, now):
+        return 0.0 if self.state == "serving" else self._ready_s
+
+
+def _req(rid, adapter=None, deadline=None, max_new=8, n_gen=0):
+    r = ServeRequest(rid, np.zeros(4, np.int64), max_new_tokens=max_new,
+                     adapter=adapter, deadline=deadline)
+    r.generated = [0] * n_gen
+    return r
+
+
+CCFG = ClusterConfig(n_slots=4)
+
+
+def test_least_loaded_reproduces_pre_refactor_choice():
+    """Regression gate: identical selection to the old inline loop —
+    FIFO request, min (load, sid) over admitting servers with capacity."""
+    servers = [
+        _FakeServer(0, srv=_FakeSrvEngine(active=[_req(10), _req(11)])),
+        _FakeServer(1, srv=_FakeSrvEngine(active=[_req(12)])),
+        _FakeServer(2, state="loading"),
+        _FakeServer(3, srv=_FakeSrvEngine(active=[_req(13)])),
+        _FakeServer(4, srv=_FakeSrvEngine(                 # full: no capacity
+            active=[_req(14), _req(15), _req(16), _req(17)], n_free=0)),
+    ]
+    queue = [_req(0), _req(1)]
+    # pre-refactor logic, verbatim
+    cands = [s for s in servers if s.admitting and s.load < CCFG.n_slots]
+    expected = min(cands, key=lambda s: (s.load, s.sid))
+    idx, got = LeastLoaded().select(queue, servers, 0.0, CCFG)
+    assert (idx, got.sid) == (0, expected.sid) == (0, 1)
+    # nothing admitting with capacity -> None (queue waits)
+    idx_none = LeastLoaded().select(queue, [servers[2], servers[4]], 0.0,
+                                    CCFG)
+    assert idx_none is None
+
+
+def test_dispatch_skips_unservable_head_of_line():
+    """A request whose adapter no current server preloads must not block
+    the queue: both policies skip it (it keeps feeding the autoscaler)
+    and dispatch the next servable request."""
+    servers = [_FakeServer(0, srv=_FakeSrvEngine(adapter_params=("a",)))]
+    queue = [_req(0, adapter="ghost"), _req(1, adapter="a")]
+    for pol in (LeastLoaded(), SloAware(step_cost_s=0.05)):
+        idx, s = pol.select(queue, servers, 0.0, CCFG)
+        assert (idx, s.sid) == (1, 0), type(pol).__name__
+    # out of capacity entirely -> None, regardless of the queue
+    full = _FakeServer(0, srv=_FakeSrvEngine(
+        active=[_req(9), _req(10), _req(11), _req(12)], n_free=0,
+        adapter_params=("a",)))
+    assert LeastLoaded().select(queue, [full], 0.0, CCFG) is None
+
+
+def test_slo_aware_deadline_priority():
+    servers = [_FakeServer(0)]
+    queue = [_req(0, deadline=None), _req(1, deadline=9.0),
+             _req(2, deadline=2.0)]
+    idx, s = SloAware(step_cost_s=0.05).select(queue, servers, 0.0, CCFG)
+    assert idx == 2 and s.sid == 0          # earliest deadline first
+    # equal deadlines: FIFO among equals
+    queue = [_req(0, deadline=2.0), _req(1, deadline=2.0)]
+    idx, _ = SloAware(step_cost_s=0.05).select(queue, servers, 0.0, CCFG)
+    assert idx == 0
+
+
+def test_slo_aware_avoids_epoch_drain_stall():
+    """A busy-on-another-adapter server predicts a full drain before the
+    request can admit; the emptier-looking server is the WRONG pick."""
+    long_b = _req(10, adapter="b", max_new=30, n_gen=2)     # 28 tokens left
+    busy = _FakeServer(0, srv=_FakeSrvEngine(
+        active=[long_b], active_adapter="b", adapter_params=("a", "b")))
+    idle = _FakeServer(1, srv=_FakeSrvEngine(
+        active=[_req(11, adapter="a", max_new=4, n_gen=2)],
+        active_adapter="a", adapter_params=("a", "b")))
+    idle.srv._queued = [_req(12, adapter="a")]  # MORE loaded than `busy`
+    pol = SloAware(step_cost_s=0.05)
+    req = _req(0, adapter="a")
+    assert busy.load < idle.load            # least-loaded would pick busy
+    _, ll = LeastLoaded().select([req], [busy, idle], 0.0, CCFG)
+    assert ll.sid == 0
+    _, sa = pol.select([req], [busy, idle], 0.0, CCFG)
+    assert sa.sid == 1                      # SLO-aware prices the drain
+    t_busy = pol.predicted_first_token_s(busy, req, 0.0, CCFG)
+    t_idle = pol.predicted_first_token_s(idle, req, 0.0, CCFG)
+    assert t_busy > t_idle > 0
+
+
+def test_slo_aware_scores_warming_servers():
+    """Mid-burst, a server one load-round from viable can beat queueing
+    behind a deep epoch on a serving one (cold-start progress term)."""
+    long_b = _req(10, adapter="b", max_new=40, n_gen=0)
+    busy = _FakeServer(0, srv=_FakeSrvEngine(active=[long_b],
+                                             active_adapter="b",
+                                             adapter_params=("b",)))
+    warming = _FakeServer(1, state="loading", ready_s=0.1)
+    _, s = SloAware(step_cost_s=0.05).select([_req(0)], [busy, warming],
+                                             0.0, CCFG)
+    assert s.sid == 1
+    # with warming excluded, the busy server is the only candidate
+    _, s = SloAware(step_cost_s=0.05, consider_warming=False).select(
+        [_req(0)], [busy, warming], 0.0, CCFG)
+    assert s.sid == 0
+
+
+def test_adapter_affine_prefers_resident_adapter():
+    a_srv = _FakeServer(0, srv=_FakeSrvEngine(
+        active=[_req(10, adapter="a", max_new=6, n_gen=2)],
+        active_adapter="a", adapter_params=("a", "b")))
+    b_srv = _FakeServer(1, srv=_FakeSrvEngine(active_adapter="b",
+                                              adapter_params=("a", "b")))
+    pol = AdapterAffine(slo=SloAware(step_cost_s=0.05))
+    _, s = pol.select([_req(0, adapter="a")], [a_srv, b_srv], 0.0, CCFG)
+    assert s.sid == 0                       # affinity beats lower load
+    # no affine server -> falls back to SLO-aware scoring
+    _, s = pol.select([_req(1, adapter="b")], [a_srv], 0.0, CCFG)
+    assert s.sid == 0
+
+
+def test_dispatch_registry():
+    for name in ("least_loaded", "slo_aware", "adapter_affine"):
+        assert type(make_dispatch(name)) is DISPATCH_POLICIES[name]
+    with pytest.raises(ValueError, match="unknown dispatch"):
+        make_dispatch("ghost")
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_placement_policies():
+    all_a = {f"l{i}": object() for i in range(6)}
+    assert PreloadAll().adapters_for(all_a, ["l0"]) == all_a
+    hot = HotAdapterPlacement(k=2)
+    recent = ["l1", "l2", "l1", "l3", "l3", "l3", "ghost"]
+    picked = hot.adapters_for(all_a, recent)
+    assert set(picked) == {"l3", "l1"}      # by count, unknown names ignored
+    assert hot.adapters_for(all_a, []) == all_a   # no history: preload all
+
+
+def test_hot_placement_limits_spawned_server_adapters(setup):
+    """A scale-up under HotAdapterPlacement preloads only the hot set;
+    requests for missing adapters never dispatch to it (can_serve)."""
+    from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+    cfg, params = setup
+    aps = {}
+    for i in range(3):
+        lora = randomize_lora(jax.random.fold_in(KEY, i),
+                              init_lora(KEY, cfg, rank=4))
+        aps[f"l{i}"] = merge_lora(params, lora)
+    router = ClusterRouter(cfg, params, n_servers=1,
+                           ccfg=ClusterConfig(n_devices=2, n_slots=2),
+                           adapter_params=aps,
+                           placement=HotAdapterPlacement(k=1))
+    # seed server spawned with no history -> preloads everything
+    assert set(router.servers[0].srv.adapter_params) == set(aps)
+    for t in (0.0, 0.01, 0.02):
+        router.submit(Arrival(t, adapter="l2"))
+    s = router.spawn_server()
+    assert set(s.srv.adapter_params) == {"l2"}
+    assert s.can_serve(_req(0, adapter="l2"))
+    assert not s.can_serve(_req(1, adapter="l0"))
+    assert s.can_serve(_req(2, adapter=None))
+
+
+def test_starved_request_surfaces_and_run_terminates(setup):
+    """Liveness: when no provisioned server preloads a request's adapter
+    (and none ever could), the router flags it (`unservable` event),
+    serves everything servable, and run() gives up with a `starved`
+    event instead of spinning to max_ticks."""
+    from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+    cfg, params = setup
+    aps = {}
+    for i, name in enumerate(("a", "b")):
+        lora = randomize_lora(jax.random.fold_in(KEY, 20 + i),
+                              init_lora(KEY, cfg, rank=4))
+        aps[name] = merge_lora(params, lora)
+    router = ClusterRouter(cfg, params, n_servers=1,
+                           ccfg=ClusterConfig(n_devices=2, n_slots=2),
+                           adapter_params=aps,
+                           placement=HotAdapterPlacement(k=1))
+    trace = [Arrival(0.0, adapter="a", max_new_tokens=2),
+             Arrival(0.01, adapter="b", max_new_tokens=2)]
+    router._recent_adapters.append("a")
+    router.spawn_server()                 # hot-set replacement: only "a"
+    router.servers[0].retire()            # ...and the full seed retires
+    done = router.run(trace)
+    assert len(done) == 1 and done[0].adapter == "a"   # servable part ran
+    kinds = [k for _, k, _ in router.metrics.events]
+    assert "unservable" in kinds and "starved" in kinds
+    # flagged exactly once despite hundreds of dispatch passes
+    assert sum(1 for k in kinds if k == "unservable") == 1
+
+
+# ---------------------------------------------------------------------------
+# autoscaler edge cases
+# ---------------------------------------------------------------------------
+
+class _ScaleSrv:
+    def __init__(self, sid, state="serving", idle_ticks=0):
+        self.sid, self.state, self.idle_ticks = sid, state, idle_ticks
+
+    @property
+    def admitting(self):
+        return self.state == "serving"
+
+
+def test_autoscaler_cooldown_suppresses_back_to_back_spawns():
+    cfg = AutoscalerConfig(target_queue_per_server=1.0, max_servers=8,
+                           scale_up_cooldown_ticks=3, max_warming=8)
+    sc = Autoscaler(cfg)
+    servers = [_ScaleSrv(0)]
+    d0 = sc.decide(0.0, pending=50, oldest_wait=0.0, servers=servers)
+    assert d0.spawn == 1
+    for tick in range(1, 3):                # still pressured, still cooling
+        d = sc.decide(tick * 0.05, 50, 0.0, servers)
+        assert d.spawn == 0, tick
+    d3 = sc.decide(0.15, 50, 0.0, servers)  # cooldown expired
+    assert d3.spawn == 1 and sc.n_scale_ups == 2
+
+
+def test_autoscaler_max_warming_with_loading_server():
+    cfg = AutoscalerConfig(target_queue_per_server=1.0, max_servers=8,
+                           scale_up_cooldown_ticks=0, max_warming=1)
+    sc = Autoscaler(cfg)
+    servers = [_ScaleSrv(0), _ScaleSrv(1, state="loading")]
+    d = sc.decide(0.0, pending=50, oldest_wait=9.0, servers=servers)
+    assert d.spawn == 0                     # one cold start already in flight
+    servers[1].state = "serving"
+    d = sc.decide(0.05, pending=50, oldest_wait=9.0, servers=servers)
+    assert d.spawn == 1
+
+
+def test_autoscaler_retire_respects_min_servers():
+    cfg = AutoscalerConfig(min_servers=2, idle_ticks_before_retire=10)
+    sc = Autoscaler(cfg)
+    servers = [_ScaleSrv(i, idle_ticks=99) for i in range(4)]
+    d = sc.decide(0.0, pending=0, oldest_wait=0.0, servers=servers)
+    # 4 idle candidates but the floor is 2: retire exactly 2, never more
+    assert len(d.retire) == 2
+    assert sc.n_retires == 2
+
+
+def test_scale_decision_lists_are_independent():
+    """The old ``retire: List = None`` + __post_init__ pattern is gone;
+    default instances must not share one list."""
+    from repro.cluster.autoscaler import ScaleDecision
+    import dataclasses
+    a, b = ScaleDecision(), ScaleDecision()
+    a.retire.append(7)
+    assert b.retire == []
+    f = {x.name: x for x in dataclasses.fields(ScaleDecision)}["retire"]
+    assert f.default is dataclasses.MISSING  # default_factory, not None
+
+
+# ---------------------------------------------------------------------------
+# traces: model/deadline threading, adapter_prob, azure ingestion
+# ---------------------------------------------------------------------------
+
+def test_trace_model_deadline_roundtrip(tmp_path):
+    tr = poisson_trace(8.0, 1.0, seed=3, model="chat", ttft_deadline_s=0.4,
+                       adapters=("x",), adapter_prob=1.0)
+    assert tr and all(a.model == "chat" and a.ttft_deadline_s == 0.4
+                      and a.adapter == "x" for a in tr)
+    path = str(tmp_path / "t.json")
+    save_trace(path, tr)
+    assert load_trace(path) == tr
+
+
+def test_adapter_prob_parameter():
+    always = poisson_trace(20.0, 2.0, seed=0, adapters=("x",),
+                           adapter_prob=1.0)
+    never = poisson_trace(20.0, 2.0, seed=0, adapters=("x",),
+                          adapter_prob=0.0)
+    assert all(a.adapter == "x" for a in always)
+    assert all(a.adapter is None for a in never)
+    half = poisson_trace(20.0, 4.0, seed=0, adapters=("x",))
+    frac = sum(1 for a in half if a.adapter) / len(half)
+    assert 0.25 < frac < 0.75               # default stays ~0.5
+
+
+def test_merge_traces_sorted_and_stable():
+    a = poisson_trace(5.0, 2.0, seed=1, model="a")
+    b = poisson_trace(5.0, 2.0, seed=2, model="b")
+    m = merge_traces(a, b)
+    assert len(m) == len(a) + len(b)
+    assert [x.time for x in m] == sorted(x.time for x in m)
+
+
+def test_load_azure_trace_fixture():
+    path = os.path.join(FIXTURES, "azure_sample.csv")
+    tr = load_azure_trace(path, models=("m0", "m1"), adapters=("x", None),
+                          seed=0)
+    # integer counts + rate_scale=1 -> arrival count == sum of the CSV
+    assert len(tr) == 42
+    assert tr == sorted(tr, key=lambda a: a.time)
+    assert all(0 <= a.time < 5 * 60.0 for a in tr)
+    # per-function -> (model, adapter) mapping is deterministic and
+    # consistent: every (model, adapter) pair observed is a valid
+    # round-robin cell and both models appear
+    pairs = {(a.model, a.adapter) for a in tr}
+    assert pairs <= {("m0", "x"), ("m1", None)}
+    assert {m for m, _ in pairs} == {"m0", "m1"}
+    assert load_azure_trace(path, models=("m0", "m1"),
+                            adapters=("x", None), seed=0) == tr
+    # time compression + scaling + truncation
+    fast = load_azure_trace(path, minute_s=1.0, seed=0)
+    assert all(a.time < 5.0 for a in fast)
+    assert len(load_azure_trace(path, rate_scale=0.25, seed=0)) < 42
+    assert len(load_azure_trace(path, max_requests=5, seed=0)) == 5
+
+
+def test_load_azure_trace_honors_minute_gaps(tmp_path):
+    """Minute columns are 1-based day minutes: a trimmed CSV with a gap
+    keeps each count in ITS minute, not squeezed onto the header index."""
+    p = tmp_path / "gap.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,Trigger,1,3\n"
+                 "o,a,f,http,2,3\n")
+    tr = load_azure_trace(str(p), seed=0)
+    assert len(tr) == 5
+    assert sum(1 for a in tr if 0 <= a.time < 60) == 2
+    assert sum(1 for a in tr if 120 <= a.time < 180) == 3
+
+
+def test_load_azure_trace_rejects_wrong_shape(tmp_path):
+    bad = tmp_path / "bad.csv"
+    bad.write_text("name,value\nf1,2\n")
+    with pytest.raises(ValueError, match="per-minute"):
+        load_azure_trace(str(bad))
+
+
+def test_azure_trace_replays_through_router(setup):
+    """The ingested trace drives the real cluster end to end."""
+    cfg, params = setup
+    tr = load_azure_trace(os.path.join(FIXTURES, "azure_sample.csv"),
+                          minute_s=0.4, max_new_tokens=3, max_requests=12,
+                          seed=0)
+    router = ClusterRouter(cfg, params, n_servers=2,
+                           ccfg=ClusterConfig(n_devices=2, n_slots=4))
+    done = router.run(tr)
+    assert len(done) == len(tr) == 12
+
+
+# ---------------------------------------------------------------------------
+# snapshot transfer cost model
+# ---------------------------------------------------------------------------
+
+def test_snapshot_transfer_cost_model(setup):
+    from repro.core.simulator import (GPU_PAPER, kv_snapshot_bytes,
+                                      snapshot_transfer_time)
+    cfg, _ = setup
+    b16 = kv_snapshot_bytes(cfg, 16, 96)
+    b64 = kv_snapshot_bytes(cfg, 64, 96)
+    assert 0 < b16 < b64                    # KV grows with position
+    assert kv_snapshot_bytes(cfg, 500, 96) == kv_snapshot_bytes(cfg, 96, 96)
+    t_nv = snapshot_transfer_time(b64, GPU_PAPER, "nvlink")
+    t_pc = snapshot_transfer_time(b64, GPU_PAPER, "pcie")
+    assert 0 < t_nv < t_pc                  # PCIe-class link is slower
+    with pytest.raises(ValueError, match="unknown link"):
+        snapshot_transfer_time(b64, GPU_PAPER, "carrier-pigeon")
+    # SSM states are position-independent
+    ssm = get_arch("mamba2-780m").reduced(n_layers=2)
+    assert kv_snapshot_bytes(ssm, 8, 96) == kv_snapshot_bytes(ssm, 64, 96)
+    # windowed attention: the ring holds at most attn_window rows, so the
+    # payload stops growing at the window (not max_len)
+    win = get_arch("recurrentgemma-2b").reduced(n_layers=4)
+    assert win.attn_window > 0
+    w = win.attn_window
+    assert kv_snapshot_bytes(win, w // 2, 96) \
+        < kv_snapshot_bytes(win, w, 96) \
+        == kv_snapshot_bytes(win, w + 20, 96)
+
+
+def test_snapshot_bytes_matches_real_export_order(setup):
+    """The modeled payload is the true-window lower bound of the
+    in-memory snapshot (which carries full max_len rows)."""
+    from repro.core.simulator import kv_snapshot_bytes
+    from repro.serving.engine import ServingEngine
+    cfg, params = setup
+    srv = ServingEngine(cfg, params, n_slots=2, max_len=96)
+    srv.batcher.sampler = quantized_greedy
+    req = ServeRequest(0, np.arange(8, dtype=np.int64) + 3,
+                       max_new_tokens=6)
+    srv.submit(req)
+    srv.step()
+    snap = srv.batcher.export_snapshot(req.slot)
+    modeled = kv_snapshot_bytes(cfg, snap.pos, 96)
+    assert 0 < modeled <= snap.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# engine hooks
+# ---------------------------------------------------------------------------
+
+def test_rounds_to_ready_progression(setup):
+    from repro.core.engine import PipeBoostEngine
+    cfg, params = setup
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    r0 = eng.rounds_to_ready()
+    assert r0 >= 1 and not eng.ready
+    eng.load_round()
+    assert eng.rounds_to_ready() == 0 and eng.ready
+    eng.crash([d.idx for d in eng.devices])
+    assert eng.rounds_to_ready() >= 1 << 20   # nothing alive: never ready
+
+
+def test_resident_adapters_and_step_cost(setup):
+    from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+    from repro.serving.engine import ServingEngine
+    cfg, params = setup
+    merged = merge_lora(params, randomize_lora(
+        KEY, init_lora(KEY, cfg, rank=4)))
+    srv = ServingEngine(cfg, params, n_slots=2, max_len=96,
+                        adapter_params={"a": merged})
+    assert srv.predicted_step_cost_s(default=0.123) == 0.123  # no steps yet
+    assert srv.resident_adapters() == {"a", None}   # idle: all switchable
+    srv.submit(ServeRequest(0, np.arange(6, dtype=np.int64),
+                            max_new_tokens=8, adapter="a"))
+    srv.step()
+    assert srv.resident_adapters() == {"a"}         # busy: epoch pinned
+    srv.step()
+    assert srv.predicted_step_cost_s() > 0
+
+
+# ---------------------------------------------------------------------------
+# router integration: policies + clocks end to end
+# ---------------------------------------------------------------------------
+
+def test_slo_aware_router_tokens_exact(setup):
+    """Dispatch policy choice changes WHERE requests run, never WHAT they
+    produce: SLO-aware routing (including dispatch to warming servers)
+    stays token-exact against the solo reference."""
+    from repro.lora.adapters import init_lora, merge_lora, randomize_lora
+    cfg, params = setup
+    merged = merge_lora(params, randomize_lora(
+        jax.random.fold_in(KEY, 9), init_lora(KEY, cfg, rank=4)))
+    trace = burst_wave_trace(12, base_rate=3.0, wave_rate=24.0, wave_at=0.3,
+                             wave_len=0.5, seed=5, max_new_tokens=4,
+                             adapters=("a",), ttft_deadline_s=0.5)
+    router = ClusterRouter(cfg, params, n_servers=2,
+                           ccfg=ClusterConfig(n_devices=4, n_slots=2),
+                           adapter_params={"a": merged},
+                           dispatch=SloAware(step_cost_s=0.05),
+                           autoscaler=Autoscaler(AutoscalerConfig(
+                               target_queue_per_server=2.0, ttft_slo_s=0.3,
+                               max_servers=3)))
+    done = router.run(trace)
+    assert len(done) == len(trace)
+    for r in done:
+        p = merged if r.adapter == "a" else params
+        assert r.generated == _solo(cfg, p, r.tokens, 4), r.rid
+    # deadlines were threaded through (absolute = arrival + budget)
+    assert all(r.deadline == pytest.approx(r.arrival + 0.5) for r in done)
+
+
+def test_wall_clock_runs_same_scheduler(setup):
+    """Acceptance: the SAME router/autoscaler/policy code runs off the
+    wall clock — only the injected Clock differs — and stays exact."""
+    cfg, params = setup
+    trace = poisson_trace(30.0, 0.25, seed=11, max_new_tokens=3)
+    assert len(trace) >= 3
+    router = ClusterRouter(cfg, params, n_servers=2,
+                           ccfg=ClusterConfig(n_devices=2, n_slots=2),
+                           dispatch=SloAware(),
+                           clock=WallClock(),
+                           autoscaler=Autoscaler(AutoscalerConfig(
+                               max_servers=3)))
+    t0 = router.clock
+    done = router.run(trace)
+    assert len(done) == len(trace)
+    assert router.clock > t0                # wall time actually elapsed
+    s = router.metrics.summary()
+    assert s["n_completed"] == len(trace)
+    assert s["ttft_p99"] > 0 and s["gpu_seconds"] > 0
+    for r in done:                          # same tokens as any clock
+        assert r.generated == _solo(cfg, params, r.tokens, 3), r.rid
+
+
+# ---------------------------------------------------------------------------
+# multi-model fleet
+# ---------------------------------------------------------------------------
+
+def test_fleet_multi_model_pools_exact(setup):
+    """Two pools over SHARED base params serve a mixed-model trace: every
+    request lands in its own pool, per-model metrics come out, global
+    rids never collide, and tokens equal the solo reference."""
+    cfg, params = setup
+    ccfg = ClusterConfig(n_devices=2, n_slots=2)
+    trace = merge_traces(
+        poisson_trace(5.0, 1.2, seed=1, model="chat", max_new_tokens=4),
+        poisson_trace(5.0, 1.2, seed=2, model="code", max_new_tokens=3))
+    assert {a.model for a in trace} == {"chat", "code"}
+    fleet = Fleet({
+        "chat": PoolSpec(cfg, params, n_servers=1, ccfg=ccfg),
+        "code": PoolSpec(cfg, params, n_servers=1, ccfg=ccfg,
+                         dispatch=SloAware(step_cost_s=0.05)),
+    })
+    done = fleet.run(trace)
+    assert len(done) == len(trace)
+    assert len({r.rid for r in done}) == len(done)     # fleet-global rids
+    by_model = fleet.metrics.summary_by_model()
+    assert set(by_model) == {"chat", "code"}
+    for m in ("chat", "code"):
+        want = sum(1 for a in trace if a.model == m)
+        assert by_model[m]["n_completed"] == want
+        assert by_model[m]["ttft_p99"] > 0
+    for r in done:
+        n = 4 if r.model == "chat" else 3
+        assert r.generated == _solo(cfg, params, r.tokens, n), r.rid
+    doc = json.loads(fleet.metrics.to_json())
+    assert set(doc["models"]) == {"chat", "code"}
+    # pool-qualified cold-start records (both pools reported)
+    assert {k.split("/")[0] for k in fleet.metrics.coldstart} \
+        == {"chat", "code"}
+
+
+def test_fleet_clock_advances_once_per_tick(setup):
+    """N pools tick against the shared clock, which advances ONCE per
+    fleet tick — not once per pool (same-tick semantics across pools)."""
+    cfg, params = setup
+    ccfg = ClusterConfig(n_devices=2, n_slots=2)
+    fleet = Fleet({"a": PoolSpec(cfg, params, n_servers=1, ccfg=ccfg),
+                   "b": PoolSpec(cfg, params, n_servers=1, ccfg=ccfg)})
+    assert fleet.clock == 0.0
+    fleet.tick()
+    assert fleet.clock == pytest.approx(ccfg.tick_s)
+    fleet.tick()
+    assert fleet.clock == pytest.approx(2 * ccfg.tick_s)
+    # every pool saw the same tick timestamps
+    ts = sorted({t for t, _ in fleet.metrics.queue_depth})
+    assert ts == pytest.approx([0.0, ccfg.tick_s])
+
+
+def test_gauge_max_sums_same_timestamp_samples():
+    """Fleet-wide gauges: per-pool samples at one shared tick timestamp
+    sum before the max, so queue_depth_max/servers_max are fleet-wide."""
+    from repro.cluster.metrics import ClusterMetrics
+    m = ClusterMetrics()
+    m.on_tick(0.0, 5, 2, 4, 0.05)    # pool A
+    m.on_tick(0.0, 5, 2, 4, 0.05)    # pool B, same fleet tick
+    m.on_tick(0.05, 1, 1, 2, 0.05)
+    s = m.summary()
+    assert s["queue_depth_max"] == 10.0
+    assert s["servers_max"] == 4.0
+
+
+def test_fleet_rejects_unknown_model(setup):
+    cfg, params = setup
+    fleet = Fleet({"chat": PoolSpec(cfg, params, n_servers=1,
+                                    ccfg=ClusterConfig(n_devices=2,
+                                                       n_slots=2))})
+    with pytest.raises(ValueError, match="ghost"):
+        fleet.submit(Arrival(0.0, model="ghost"))
+    # model-less arrivals ride the default pool
+    rid = fleet.submit(Arrival(0.0))
+    assert rid == 0
+
+
+def test_fleet_crash_migration_stays_in_pool(setup):
+    """A pool-level crash re-routes within the pool and the fleet still
+    completes everything exactly."""
+    cfg, params = setup
+    ccfg = ClusterConfig(n_devices=2, n_slots=4)
+    trace = merge_traces(
+        burst_wave_trace(8, base_rate=3.0, wave_rate=16.0, wave_at=0.2,
+                         wave_len=0.4, seed=3, model="chat",
+                         max_new_tokens=6),
+        poisson_trace(4.0, 1.0, seed=4, model="code", max_new_tokens=3))
+    fleet = Fleet({
+        "chat": PoolSpec(cfg, params, n_servers=2, ccfg=ccfg),
+        "code": PoolSpec(cfg, params, n_servers=1, ccfg=ccfg),
+    })
+    arrivals = sorted(trace, key=lambda a: a.time)
+    i, crashed, done = 0, False, []
+    for _ in range(200_000):
+        while i < len(arrivals) and arrivals[i].time <= fleet.clock:
+            fleet.submit(arrivals[i])
+            i += 1
+        done.extend(fleet.tick())
+        chat = fleet.pools["chat"]
+        if not crashed and chat.servers[1].srv.batcher.n_active >= 1:
+            fleet.crash_server("chat", 1)
+            crashed = True
+        if i >= len(arrivals) and fleet.pending == 0:
+            break
+    assert crashed and len(done) == len(trace)
+    kinds = [k for _, k, _ in fleet.metrics.events]
+    assert "crash" in kinds
+    for r in done:
+        n = 6 if r.model == "chat" else 3
+        assert r.generated == _solo(cfg, params, r.tokens, n), r.rid
