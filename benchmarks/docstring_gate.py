@@ -1,0 +1,129 @@
+"""Docstring-coverage gate (stdlib-only ``interrogate`` stand-in).
+
+Walks Python files, counts docstring-carrying definitions — modules,
+public classes, and public functions/methods — and fails (exit 1) when
+coverage drops below ``--fail-under``.  CI runs it over
+``src/repro/cluster/`` so the documentation layer added alongside the
+event engine cannot silently rot as the cluster code grows.
+
+"Public" means the name has no leading underscore.  Mirroring
+``interrogate``'s defaults: dunders (incl. ``__init__`` — constructors
+are documented by their class docstring), ``@property`` getters (their
+name is the doc), and functions nested inside functions (implementation
+detail) are all excluded.  No third-party deps — the container image has
+no ``interrogate``, and the gate must run in the fast CI lane.
+
+Usage::
+
+    python benchmarks/docstring_gate.py src/repro/cluster --fail-under 95
+    python benchmarks/docstring_gate.py src/repro --fail-under 80 -v
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+# (path, qualname, kind, has_docstring)
+Entry = Tuple[str, str, str, bool]
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _is_property(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        if isinstance(dec, ast.Name) and dec.id == "property":
+            return True
+        if isinstance(dec, ast.Attribute) and dec.attr in ("getter",
+                                                           "setter",
+                                                           "deleter"):
+            return True
+    return False
+
+
+def _walk_defs(tree: ast.Module, path: str) -> Iterator[Entry]:
+    """Yield one entry per checkable definition in a parsed module."""
+    yield path, "<module>", "module", ast.get_docstring(tree) is not None
+    stack: List[Tuple[ast.AST, str]] = [(tree, "")]
+    while stack:
+        node, prefix = stack.pop()
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}{child.name}"
+                if _is_public(child.name) and not _is_property(child):
+                    kind = ("class" if isinstance(child, ast.ClassDef)
+                            else "function")
+                    yield (path, qual, kind,
+                           ast.get_docstring(child) is not None)
+                # descend into classes only: functions nested inside
+                # functions are implementation detail, and anything under
+                # a private scope is private by construction
+                if isinstance(child, ast.ClassDef) \
+                        and _is_public(child.name):
+                    stack.append((child, f"{qual}."))
+
+
+def iter_python_files(roots: List[str]) -> Iterator[str]:
+    for root in roots:
+        if os.path.isfile(root):
+            yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def collect(roots: List[str]) -> List[Entry]:
+    entries: List[Entry] = []
+    for path in iter_python_files(roots):
+        with open(path, "rb") as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            raise SystemExit(f"{path}: not parseable: {e}")
+        entries.extend(_walk_defs(tree, path))
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when public-API docstring coverage drops")
+    ap.add_argument("roots", nargs="+",
+                    help="files or directories to scan (recursively)")
+    ap.add_argument("--fail-under", type=float, default=95.0,
+                    help="minimum coverage percent (default 95)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="list every missing docstring, not just the tally")
+    args = ap.parse_args(argv)
+
+    entries = collect(args.roots)
+    if not entries:
+        raise SystemExit(f"no Python definitions under {args.roots}")
+    missing = [e for e in entries if not e[3]]
+    covered = len(entries) - len(missing)
+    pct = 100.0 * covered / len(entries)
+
+    for path, qual, kind, _ in missing if args.verbose else missing[:20]:
+        print(f"MISSING {kind:8s} {path}:{qual}")
+    if not args.verbose and len(missing) > 20:
+        print(f"... and {len(missing) - 20} more (-v for all)")
+    print(f"docstring coverage: {covered}/{len(entries)} = {pct:.1f}% "
+          f"(gate: {args.fail_under:.1f}%)")
+    if pct < args.fail_under:
+        print("FAIL: coverage below gate")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

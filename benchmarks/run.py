@@ -888,6 +888,135 @@ def bench_fleet(small: bool = False):
     print(f"# wrote {path} ({n} entries)")
 
 
+def _synth_azure_day_csv(path: str, *, n_functions: int, total: int,
+                         n_minutes: int = 1440, seed: int = 0) -> int:
+    """Write a synthetic Azure-Functions-shape CSV (one row per function,
+    per-minute invocation counts over a day) whose counts sum to ~``total``.
+
+    Shape matches the public dataset's findings: heavy-tailed per-function
+    popularity (lognormal weights) and a diurnal curve — near-silent night,
+    morning ramp, two daytime peaks — so the replay exercises both the
+    dense daytime regime and the quiescent-gap jumps of the event engine.
+    Deterministic in ``seed``.  Returns the written total invocation count.
+    """
+    import csv
+
+    rng = np.random.default_rng(seed)
+    day = (np.arange(n_minutes) + 0.5) / n_minutes
+    gauss = lambda mu, sig: np.exp(-0.5 * ((day - mu) / sig) ** 2)
+    shape = gauss(0.42, 0.09) + 0.85 * gauss(0.78, 0.11) \
+        + 0.25 * gauss(0.60, 0.22)
+    weights = rng.lognormal(0.0, 1.0, size=n_functions)
+    jitter = rng.lognormal(0.0, 0.3, size=(n_functions, n_minutes))
+    raw = weights[:, None] * shape[None, :] * jitter
+    counts = np.rint(raw * (total / raw.sum())).astype(int)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["HashOwner", "HashApp", "HashFunction", "Trigger"]
+                   + [str(m) for m in range(1, n_minutes + 1)])
+        for fi in range(n_functions):
+            w.writerow([f"owner{fi:04d}", f"app{fi:04d}", f"fn{fi:04d}",
+                        "http"] + counts[fi].tolist())
+    return int(counts.sum())
+
+
+def bench_azure_day(small: bool = False):
+    """Full-day Azure-shape trace replay through the event engine.
+
+    The tentpole gate for the discrete-event refactor: synthesize a
+    deterministic day of Azure-Functions-shape arrivals (~10⁶ full /
+    ~5·10⁴ small), stream it through ``ClusterRouter.run`` (never
+    materialized — ``iter_azure_trace`` generates minute-by-minute) over
+    modeled ``SimServer`` backends, and demand the whole day replays in
+    under 5 minutes of CPU wall time.  Everything above the server —
+    dispatch, autoscaler, event engine, metrics — is the real code; only
+    token generation is modeled (see cluster/simserver.py).
+
+    Appends TTFT percentile curves and SLO attainment to
+    ``BENCH_fleet.json`` keyed by commit+config.  ``--small`` additionally
+    replays the same trace through the dense tick engine and reports the
+    event-engine speedup (small only: the tick oracle polls every tick of
+    the day, which at full scale is exactly the cost this refactor
+    removes).
+    """
+    import tempfile
+
+    from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                               ClusterMetrics, ClusterRouter, LeastLoaded,
+                               iter_azure_trace, sim_server_factory)
+
+    total = 50_000 if small else 1_000_000
+    n_functions = 16 if small else 64
+    minute_s = 3.0                  # time-compress: 1440 min day -> 4320 s
+    ccfg = ClusterConfig(n_devices=1, n_slots=16, tick_s=0.05)
+
+    def replay(csv_path: str, engine: str):
+        router = ClusterRouter(
+            None, None, n_servers=2, ccfg=ccfg,
+            autoscaler=Autoscaler(AutoscalerConfig(
+                target_queue_per_server=8.0, ttft_slo_s=0.6,
+                max_servers=24, min_servers=2, scale_up_cooldown_ticks=3,
+                max_warming=4, idle_seconds_before_retire=10.0)),
+            dispatch=LeastLoaded(), metrics=ClusterMetrics(),
+            server_factory=sim_server_factory(),
+            materialize_prompts=False)
+        trace = iter_azure_trace(csv_path, minute_s=minute_s,
+                                 ttft_deadline_s=0.5, seed=1)
+        t0 = time.perf_counter()
+        router.run(trace, max_ticks=200_000, engine=engine,
+                   collect_finished=False)
+        return router, time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        csv_path = os.path.join(td, "azure_day.csv")
+        written = _synth_azure_day_csv(csv_path, n_functions=n_functions,
+                                       total=total)
+        router, wall = replay(csv_path, "event")
+        m = router.metrics
+        s = m.summary()
+        curve = m.ttft_curve()
+        slo_att, slo_n = m.slo_stats()
+        n_req = int(s["n_requests"])
+        emit("azure_day_replay", wall * 1e6,
+             f"n={n_req} completed={s['n_completed']:.0f} "
+             f"ttft_p50={curve['ttft_p50']:.3f}s "
+             f"ttft_p99={curve['ttft_p99']:.3f}s slo={slo_att:.4f} "
+             f"gpu_s={s['gpu_seconds']:.0f}")
+        assert s["n_completed"] == n_req, (s["n_completed"], n_req)
+        if not small:
+            assert n_req >= 990_000, f"day synthesized only {n_req} arrivals"
+            assert wall < 300.0, (
+                f"full-day replay took {wall:.1f}s (gate: < 300 s CPU)")
+        tick_wall = None
+        if small:
+            router_t, tick_wall = replay(csv_path, "tick")
+            st = router_t.metrics.summary()
+            assert st["n_completed"] == s["n_completed"], (
+                st["n_completed"], s["n_completed"])
+            assert abs(st["ttft_p99"] - s["ttft_p99"]) < 1e-9, (
+                st["ttft_p99"], s["ttft_p99"])
+            emit("azure_day_tick_oracle", tick_wall * 1e6,
+                 f"event_speedup={tick_wall / max(wall, 1e-9):.2f}x")
+
+    path = "BENCH_fleet.json"
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"bench": "azure_day", "n_functions": n_functions,
+                   "total": total, "minute_s": minute_s,
+                   "n_slots": ccfg.n_slots, "small": small},
+        "ts": time.time(),
+        "n_requests": n_req,
+        "n_completed": int(s["n_completed"]),
+        "wall_s": wall,
+        "tick_wall_s": tick_wall,
+        "slo_attainment": slo_att,
+        "slo_n": int(slo_n),
+        "gpu_seconds": s["gpu_seconds"],
+        **curve,
+    })
+    print(f"# wrote {path} ({n} entries)")
+
+
 def bench_kernels():
     from repro.kernels import ops
     key = jax.random.PRNGKey(0)
@@ -920,7 +1049,7 @@ BENCHES = [
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
     bench_decode_hotpath, bench_recovery, bench_coldstart, bench_fleet,
-    bench_kernels,
+    bench_azure_day, bench_kernels,
 ]
 
 

@@ -6,15 +6,25 @@ the paper's end-to-end serverless scenario: bursty arrival traces routed
 across N server replicas, an autoscaler that cold-starts servers mid-burst
 and admits traffic the moment a viable pipeline chain exists, cross-server
 re-routing of in-flight requests on a crash, and a JSON metrics layer
-(TTFT/TBT percentiles, queue depth, GPU-seconds).
+(TTFT/TBT percentiles, SLO attainment, queue depth, GPU-seconds).
 
-Scheduling is pluggable (cluster/scheduler.py): dispatch policies
-(least-loaded / SLO-aware / adapter-affine), placement policies for what
-a spawned server preloads, and injected clocks (logical ticks vs wall
-time).  Multi-model fleets ride cluster/fleet.py: named per-model pools
-over shared base params with per-pool autoscalers and cross-pool metrics.
+Replay is discrete-event (cluster/router.py): dense, bit-exact ticks while
+any server has work, clock jumps across quiescent gaps to the next
+arrival / idle-retire deadline / rejoin — full-day Azure traces stream in
+(cluster/traces.py) and replay against modeled servers
+(cluster/simserver.py) in seconds.
+
+Scheduling is pluggable (cluster/scheduler.py): batched dispatch policies
+(least-loaded / SLO-aware / adapter-affine, all implementing
+``select_many``), placement policies for what a spawned server preloads,
+and injected clocks (logical ticks vs wall time).  Multi-model fleets
+ride cluster/fleet.py: named per-model pools over shared base params with
+per-pool autoscalers and cross-pool metrics.
+
+See ``docs/ARCHITECTURE.md`` § "Cluster" for the subsystem map.
 """
-from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      ScaleDecision)
 from repro.cluster.fleet import Fleet, PoolSpec
 from repro.cluster.metrics import ClusterMetrics, percentile
 from repro.cluster.router import ClusterConfig, ClusterRouter, ClusterServer
@@ -24,7 +34,10 @@ from repro.cluster.scheduler import (DISPATCH_POLICIES, AdapterAffine,
                                      LogicalClock, PlacementPolicy,
                                      PreloadAll, SloAware, WallClock,
                                      make_dispatch)
-from repro.cluster.traces import (Arrival, burst_wave_trace, gamma_trace,
+from repro.cluster.simserver import (SimProfile, SimServer,
+                                     sim_server_factory)
+from repro.cluster.traces import (Arrival, arrival_stream, burst_wave_trace,
+                                  gamma_trace, iter_azure_trace,
                                   load_azure_trace, load_trace,
                                   merge_traces, poisson_trace, save_trace)
 
@@ -33,7 +46,9 @@ __all__ = [
     "ClusterConfig", "ClusterMetrics", "ClusterRouter", "ClusterServer",
     "DISPATCH_POLICIES", "DispatchPolicy", "Fleet", "HotAdapterPlacement",
     "LeastLoaded", "LogicalClock", "PlacementPolicy", "PoolSpec",
-    "PreloadAll", "SloAware", "WallClock", "burst_wave_trace",
-    "gamma_trace", "load_azure_trace", "load_trace", "make_dispatch",
+    "PreloadAll", "ScaleDecision", "SimProfile", "SimServer", "SloAware",
+    "WallClock", "arrival_stream", "burst_wave_trace", "gamma_trace",
+    "iter_azure_trace", "load_azure_trace", "load_trace", "make_dispatch",
     "merge_traces", "percentile", "poisson_trace", "save_trace",
+    "sim_server_factory",
 ]

@@ -15,10 +15,17 @@ Pools over the *same* base model can share one params pytree (pass the
 same object to several specs) — the functional analogue of N pools of
 servers loading segments of one checkpoint, which is exactly the
 many-adapters-one-base fleet the paper's premise implies.
+
+``Fleet.run`` is discrete-event by default, like the router's: while any
+pool has work it ticks every pool densely against the shared clock; when
+EVERY pool is quiescent it jumps straight to the earliest next event
+across the fleet.  See ``docs/ARCHITECTURE.md`` § "Cluster: multi-model
+fleets".
 """
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -27,7 +34,7 @@ from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.router import ClusterConfig, ClusterRouter
 from repro.cluster.scheduler import (Clock, DispatchPolicy, LogicalClock,
                                      PlacementPolicy)
-from repro.cluster.traces import Arrival
+from repro.cluster.traces import Arrival, arrival_stream
 
 
 @dataclass
@@ -42,6 +49,8 @@ class PoolSpec:
     adapter_params: Optional[Dict[str, Any]] = None
     dispatch: Optional[DispatchPolicy] = None
     placement: Optional[PlacementPolicy] = None
+    server_factory: Any = None      # ClusterServer-like ctor (sim backends)
+    materialize_prompts: bool = True
 
 
 class Fleet:
@@ -68,13 +77,17 @@ class Fleet:
                 ccfg=spec.ccfg, autoscaler=spec.autoscaler,
                 adapter_params=spec.adapter_params, metrics=self.metrics,
                 dispatch=spec.dispatch, placement=spec.placement,
-                clock=self._clock, model=name, rid_counter=rid)
+                clock=self._clock, model=name, rid_counter=rid,
+                server_factory=spec.server_factory,
+                materialize_prompts=spec.materialize_prompts)
 
     @property
     def clock(self) -> float:
         return self._clock.now()
 
     def pool_for(self, arrival: Arrival) -> ClusterRouter:
+        """The pool an arrival routes to (``Arrival.model``, or the
+        fleet's default pool when the trace leaves it unset)."""
         name = arrival.model or self.default_model
         if name not in self.pools:
             raise ValueError(f"trace names model {name!r} but the fleet "
@@ -82,10 +95,13 @@ class Fleet:
         return self.pools[name]
 
     def submit(self, arrival: Arrival) -> int:
+        """Demux one arrival to its pool; returns the fleet-global rid."""
         return self.pool_for(arrival).submit(arrival)
 
     def crash_server(self, model: str, sid: int,
                      device_ids: Optional[Sequence[int]] = None) -> None:
+        """Crash server ``sid`` of pool ``model`` (all devices, or the
+        ``device_ids`` subset for a partial crash)."""
         self.pools[model].crash_server(sid, device_ids)
 
     @property
@@ -110,24 +126,56 @@ class Fleet:
             raise ValueError(f"pools disagree on tick_s: {sorted(ticks)}")
         return next(iter(ticks))
 
-    def run(self, trace: Sequence[Arrival], *,
-            max_ticks: int = 200_000) -> List:
-        """Replay a (multi-model) trace across the pools to completion."""
-        arrivals = sorted(trace, key=lambda a: a.time)
-        i = 0
+    def run(self, trace, *, max_ticks: int = 200_000,
+            engine: str = "event") -> List:
+        """Replay a (multi-model) trace across the pools to completion.
+
+        ``trace`` may be a sequence (sorted here) or a time-ordered
+        iterator.  ``engine="event"`` (default) jumps the shared clock
+        across fleet-wide quiescent gaps to the earliest next event of
+        any pool; ``engine="tick"`` polls every tick (the equivalence
+        oracle, identical token streams)."""
+        if engine not in ("event", "tick"):
+            raise ValueError(f"unknown engine {engine!r}; "
+                             "expected 'event' or 'tick'")
+        stream = arrival_stream(trace)
+        nxt = next(stream, None)
+        tick_s = self._tick_s()
         completed: List = []
-        for _ in range(max_ticks):
-            while i < len(arrivals) and arrivals[i].time <= self.clock:
-                self.submit(arrivals[i])
-                i += 1
+        t = 0
+        while t < max_ticks:
+            while nxt is not None and nxt.time <= self.clock:
+                self.submit(nxt)
+                nxt = next(stream, None)
+            if engine == "event" and all(p.quiescent
+                                         for p in self.pools.values()):
+                now = self.clock
+                cands = [c for p in self.pools.values()
+                         if (c := p.next_event_time()) is not None]
+                if nxt is not None:
+                    cands.append(nxt.time)
+                if not cands:
+                    break       # nothing can ever wake any pool again
+                t_evt = min(cands)
+                if t_evt - now > tick_s * 1e-6:
+                    k = max(1, math.ceil((t_evt - now) / tick_s - 1e-9))
+                    k = min(k, max_ticks - t)
+                    t_wake = now + k * tick_s
+                    for p in self.pools.values():
+                        p._settle_gap(t_wake)
+                    self._clock.sleep_until(t_wake)
+                    t += k
+                    continue
+                # earliest event is due now: process it as a dense tick
             completed.extend(self.tick())
-            if i >= len(arrivals) and self.pending == 0:
+            t += 1
+            if nxt is None and self.pending == 0:
                 break
             # liveness: stop when EVERY pool is either done or provably
             # stuck (see ClusterRouter.stalled) — a pool still making
             # progress keeps the fleet ticking.  Evaluate every pool
             # (no short-circuit): stalled() advances per-pool counters.
-            states = [(p, p.stalled(arrivals_left=i < len(arrivals)))
+            states = [(p, p.stalled(arrivals_left=nxt is not None))
                       for p in self.pools.values()]
             if self.pending and all(st or p.pending == 0
                                     for p, st in states):

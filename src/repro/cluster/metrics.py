@@ -4,6 +4,12 @@ One ``ClusterMetrics`` instance per router run accumulates per-request
 records and per-tick gauges, then summarizes to a flat dict / JSON blob so
 ``benchmarks/`` can track the trajectory across PRs.  Times are in router
 clock seconds (logical ticks × tick_s on CPU; wall seconds on real slices).
+Records carry the request's absolute TTFT deadline, so ``summary`` also
+reports SLO attainment and ``ttft_curve`` the percentile curves the
+full-day Azure replay benchmark appends to ``BENCH_fleet.json``.
+
+See ``docs/ARCHITECTURE.md`` § "Cluster: metrics" and
+``docs/BENCHMARKS.md`` for the recorded schema.
 """
 from __future__ import annotations
 
@@ -38,8 +44,10 @@ def _gauge_max(samples: List[Tuple[float, int]]) -> float:
     return float(max(agg.values(), default=0))
 
 
-@dataclass
+@dataclass(slots=True)
 class RequestRecord:
+    """Per-request latency record.  ``slots=True`` matters: a full-day
+    Azure replay holds ~10⁶ of these, and slots halve the footprint."""
     rid: int
     arrival: float
     first_token: Optional[float] = None
@@ -49,6 +57,7 @@ class RequestRecord:
     # server that completed it: sid, or "pool/sid" in a multi-model fleet
     server: object = -1
     model: Optional[str] = None  # fleet pool that served it (multi-model)
+    deadline: Optional[float] = None  # absolute TTFT deadline (SLO)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -66,6 +75,9 @@ class RequestRecord:
 
 @dataclass
 class ClusterMetrics:
+    """Shared metrics store: per-request records, per-tick gauges, event
+    log, and the recovery/cold-start/hot-path accounting a run folds in —
+    summarized to a flat dict (``summary``) or JSON (``to_json``)."""
     records: Dict[int, RequestRecord] = field(default_factory=dict)
     queue_depth: List[Tuple[float, int]] = field(default_factory=list)
     n_servers: List[Tuple[float, int]] = field(default_factory=list)
@@ -89,35 +101,49 @@ class ClusterMetrics:
     clock: Optional[object] = field(default=None, repr=False, compare=False)
 
     def now(self) -> float:
+        """The run's current time off the injected clock (0.0 unwired)."""
         return self.clock.now() if self.clock is not None else 0.0
 
     # ---- recording --------------------------------------------------------
     def on_submit(self, rid: int, arrival: float,
-                  model: Optional[str] = None) -> None:
-        self.records[rid] = RequestRecord(rid, arrival, model=model)
+                  model: Optional[str] = None,
+                  deadline: Optional[float] = None) -> None:
+        """Open a request's record at its arrival time (``deadline`` is
+        the absolute TTFT SLO instant, if the trace carries one)."""
+        self.records[rid] = RequestRecord(rid, arrival, model=model,
+                                          deadline=deadline)
 
     def on_first_token(self, rid: int, t: float) -> None:
+        """Stamp the first-token instant (idempotent: reroutes and
+        re-prefills after a crash must not move an already-set TTFT)."""
         r = self.records[rid]
         if r.first_token is None:
             r.first_token = t
 
     def on_finish(self, rid: int, t: float, n_tokens: int,
                   server) -> None:
+        """Close a request's record: finish time, length, serving server."""
         r = self.records[rid]
         r.finished = t
         r.n_tokens = n_tokens
         r.server = server
 
     def on_reroute(self, rid: int) -> None:
+        """Count one cross-server move (crash re-dispatch) for ``rid``."""
         self.records[rid].reroutes += 1
 
     def on_tick(self, t: float, queue_depth: int, n_servers: int,
                 gpu_busy: int, tick_s: float) -> None:
+        """One dense-tick gauge sample; accrues ``gpu_busy * tick_s``
+        GPU-seconds (the event engine settles quiescent gaps separately —
+        see ``ClusterRouter._settle_gap``)."""
         self.queue_depth.append((t, queue_depth))
         self.n_servers.append((t, n_servers))
         self.gpu_seconds += gpu_busy * tick_s
 
     def on_event(self, t: float, kind: str, detail: str = "") -> None:
+        """Append to the free-form event log (spawns, crashes, retires,
+        unservable requests, ...)."""
         self.events.append((t, kind, detail))
 
     def on_recovery(self, mode: str, rid: int, n_tokens: int) -> None:
@@ -164,18 +190,56 @@ class ClusterMetrics:
         self.coldstart[sid] = rec
 
     # ---- summary ----------------------------------------------------------
+    def ttft_curve(self, qs: Tuple[float, ...] = (50, 90, 95, 99, 99.9)
+                   ) -> Dict[str, float]:
+        """TTFT percentile curve over completed requests — the shape the
+        full-day replay benchmark records (one sort, many quantiles)."""
+        ttfts = sorted(r.ttft for r in self.records.values()
+                       if r.finished is not None and r.ttft is not None)
+        out: Dict[str, float] = {}
+        for q in qs:
+            if not ttfts:
+                out[f"ttft_p{q:g}"] = 0.0
+                continue
+            k = min(len(ttfts) - 1,
+                    max(0, math.ceil(q / 100.0 * len(ttfts)) - 1))
+            out[f"ttft_p{q:g}"] = ttfts[k]
+        return out
+
+    def slo_stats(self) -> Tuple[float, float]:
+        """(attainment, n) over deadline-carrying requests: the fraction
+        whose first token beat its absolute TTFT deadline.  A request that
+        never produced a first token counts as a miss; requests without
+        deadlines are excluded entirely."""
+        with_slo = [r for r in self.records.values()
+                    if r.deadline is not None]
+        if not with_slo:
+            return 0.0, 0.0
+        hit = sum(1 for r in with_slo
+                  if r.first_token is not None
+                  and r.first_token <= r.deadline + 1e-9)
+        return hit / len(with_slo), float(len(with_slo))
+
     def summary(self) -> Dict[str, float]:
+        """Flatten the run to stable scalar keys: request counts, TTFT /
+        TBT percentiles, SLO attainment, gauge maxima, GPU-seconds,
+        throughput, plus always-present recovery and cold-start keys (so
+        trajectory diffs line up across runs with and without crashes)."""
         done = [r for r in self.records.values() if r.finished is not None]
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tbts = [r.tbt for r in done if r.tbt is not None]
         horizon = max((r.finished for r in done), default=0.0)
+        slo_att, slo_n = self.slo_stats()
         out = {
             "n_requests": float(len(self.records)),
             "n_completed": float(len(done)),
             "n_rerouted": float(sum(1 for r in done if r.reroutes)),
             "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "ttft_p50": percentile(ttfts, 50),
+            "ttft_p90": percentile(ttfts, 90),
             "ttft_p99": percentile(ttfts, 99),
+            "slo_attainment": slo_att,
+            "slo_n": slo_n,
             "tbt_mean": sum(tbts) / len(tbts) if tbts else 0.0,
             "tbt_p50": percentile(tbts, 50),
             "tbt_p99": percentile(tbts, 99),
@@ -243,6 +307,9 @@ class ClusterMetrics:
         return out
 
     def to_json(self, path: Optional[str] = None) -> str:
+        """Full dump — summary, per-model summaries, every request
+        record, gauges, events — as a JSON string (also written to
+        ``path`` when given)."""
         doc = {
             "summary": self.summary(),
             "models": self.summary_by_model(),

@@ -30,6 +30,17 @@ Server lifecycle::
 Time: one router tick = ``tick_s`` clock seconds; per tick a loading
 server advances ``load_rounds_per_tick`` rounds and a serving server runs
 one continuous-batching decode step.
+
+``run`` is a *discrete-event* loop (``engine="event"``, the default):
+while any server has work (loading, recovering, decoding, background
+fill) or the queue is non-empty, it processes every tick densely —
+bit-identical to the legacy polling loop (``engine="tick"``, kept as the
+equivalence oracle).  The moment the fleet goes quiescent it jumps the
+clock straight to the next lifecycle event — next arrival, idle-retire
+deadline, scheduled rejoin — aligned to the tick grid, so a full-day
+trace with million-row gaps replays in seconds instead of polling every
+server every ``tick_s``.  See ``docs/ARCHITECTURE.md`` § "Cluster: the
+event engine".
 """
 from __future__ import annotations
 
@@ -46,7 +57,7 @@ from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.scheduler import (Clock, DispatchPolicy, LeastLoaded,
                                      LogicalClock, PlacementPolicy,
                                      PreloadAll)
-from repro.cluster.traces import Arrival, prompt_tokens
+from repro.cluster.traces import Arrival, arrival_stream, prompt_tokens
 from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.core.engine import PipeBoostEngine
@@ -54,8 +65,23 @@ from repro.serving.engine import (ServeRequest, ServingEngine,
                                   quantized_greedy)
 
 
+_PROMPT_STUBS: Dict[int, np.ndarray] = {}
+
+
+def _prompt_stub(n: int) -> np.ndarray:
+    """Shared zero prompt of length ``n`` for routers running with
+    ``materialize_prompts=False`` (modeled backends never read the token
+    values; ``len(req.tokens)`` stays truthful for accounting)."""
+    arr = _PROMPT_STUBS.get(n)
+    if arr is None:
+        arr = _PROMPT_STUBS[n] = np.zeros(n, dtype=np.int32)
+    return arr
+
+
 @dataclass
 class ClusterConfig:
+    """Per-server shape + per-tick budgets shared by every server the
+    router spawns (the field comments are the documentation)."""
     n_devices: int = 2             # logical devices per server
     n_slots: int = 4               # continuous-batching slots per server
     max_len: int = 96
@@ -97,6 +123,7 @@ class ClusterServer:
                 else "single")
         self.state = "loading"
         self.idle_ticks = 0
+        self.idle_since: Optional[float] = None  # clock time idleness began
         self.served_while_loading = False   # admitted before fully loaded
         self.spawned_at = 0.0               # router stamps these in router
         self.ready_at: Optional[float] = None       # clock seconds
@@ -115,6 +142,20 @@ class ClusterServer:
     @property
     def load(self) -> int:
         return self.srv.n_pending
+
+    @property
+    def needs_tick(self) -> bool:
+        """Would a tick do real work on this server?  False == quiescent:
+        the event engine may jump the clock past it.  Loading/recovering
+        servers always progress per tick; a serving server progresses
+        while it has pending/in-flight requests or background fill left.
+        (A fully-loaded idle server's tick only bumps idle counters — the
+        idle-retire *deadline* replaces that under the event engine.)"""
+        if self.state in ("down", "retired"):
+            return False
+        if self.state in ("loading", "recovering"):
+            return True
+        return bool(self.srv.n_pending) or not self.engine.fully_loaded
 
     def can_serve(self, req: ServeRequest) -> bool:
         """Does this server hold the weights the request needs?  Placement
@@ -156,6 +197,7 @@ class ClusterServer:
         return min(waiting) if waiting else None
 
     def submit(self, req: ServeRequest) -> None:
+        """Hand a dispatched request to this server's serving engine."""
         self.srv.submit(req)
 
     # ---- lifecycle --------------------------------------------------------
@@ -191,7 +233,13 @@ class ClusterServer:
         if self.fully_loaded_at is None and self.engine.fully_loaded:
             self.fully_loaded_at = now
         done = self.srv.step(now=now)
-        self.idle_ticks = 0 if self.srv.n_pending else self.idle_ticks + 1
+        if self.srv.n_pending:
+            self.idle_ticks = 0
+            self.idle_since = None
+        else:
+            self.idle_ticks += 1
+            if self.idle_since is None:
+                self.idle_since = now  # retire deadline = idle_since + idle_s
         return done
 
     def cold_start_record(self) -> Dict[str, Any]:
@@ -232,6 +280,10 @@ class ClusterServer:
         """
         ids = (list(device_ids) if device_ids is not None
                else [d.idx for d in self.engine.devices])
+        # the cached rounds-to-ready estimate described the pre-crash load
+        # plan; scoring a post-crash server with it would let SloAware
+        # route onto a chain that no longer exists
+        self._ready_est = None
         dead = set(ids)
         survivors = [d.idx for d in self.engine.devices
                      if d.alive and d.idx not in dead]
@@ -259,9 +311,11 @@ class ClusterServer:
         self.ready_at = None
         self.fully_loaded_at = None
         self.served_while_loading = False
+        self._ready_est = None   # estimate belongs to the pre-crash plan
 
     def retire(self) -> List[ServeRequest]:
-        # scale-down is voluntary: leftovers re-queue through dispatch
+        """Voluntary scale-down: drain and hand back any leftovers (they
+        re-queue through dispatch), then leave the fleet for good."""
         leftovers = self.srv.drain_inflight(export_state=False)
         self.state = "retired"
         return leftovers
@@ -280,7 +334,9 @@ class ClusterRouter:
                  placement: Optional[PlacementPolicy] = None,
                  clock: Optional[Clock] = None,
                  model: Optional[str] = None,
-                 rid_counter: Optional[itertools.count] = None):
+                 rid_counter: Optional[itertools.count] = None,
+                 server_factory=None,
+                 materialize_prompts: bool = True):
         self.cfg = cfg
         self.params = params
         self.ccfg = ccfg or ClusterConfig()
@@ -292,12 +348,21 @@ class ClusterRouter:
         self._clock: Clock = clock or LogicalClock()
         self.metrics.clock = self._clock
         self.model = model                  # pool name in a multi-model fleet
+        # pluggable backend: ``server_factory(sid, cfg, params, ccfg,
+        # adapters) -> ClusterServer-like`` swaps the JAX-backed server for
+        # a modeled one (cluster/simserver.py) in full-day trace replays
+        self.server_factory = server_factory or ClusterServer
+        # False skips per-request prompt RNG materialization (a modeled
+        # backend never reads the token values; million-row replays skip
+        # one rng construction per arrival)
+        self.materialize_prompts = materialize_prompts
         self.servers: List[ClusterServer] = []
         self.queue: Deque[ServeRequest] = deque()
-        self._arrival_time: Dict[int, float] = {}
         self._recent_adapters: Deque[str] = deque(maxlen=256)
         self._prev_tick_t: Optional[float] = None
         self._unservable_flagged: set = set()   # rids already evented
+        self._unchecked: List[ServeRequest] = []  # new since last scan
+        self._recheck_unservable = False        # fleet changed: rescan all
         self._stuck_ticks = 0                   # liveness: no-progress run
         # a fleet shares one rid counter across pools so metrics keys are
         # globally unique; standalone routers own theirs
@@ -317,12 +382,15 @@ class ClusterRouter:
 
     # ---- fleet ops --------------------------------------------------------
     def spawn_server(self) -> ClusterServer:
+        """Cold-start one server via ``server_factory``, preloading the
+        adapter subset the placement policy picks from recent traffic."""
         aps = self.placement.adapters_for(self.adapter_params or {},
                                           list(self._recent_adapters))
-        s = ClusterServer(len(self.servers), self.cfg, self.params,
-                          self.ccfg, aps)
+        s = self.server_factory(len(self.servers), self.cfg, self.params,
+                                self.ccfg, aps)
         s.spawned_at = self.clock
         self.servers.append(s)
+        self._recheck_unservable = True
         self.metrics.on_event(self.clock, "spawn",
                               f"server{self._metrics_sid(s.sid)} "
                               f"adapters={sorted(aps)}")
@@ -401,33 +469,45 @@ class ClusterRouter:
                               f"requeued={len(leftovers) - reprefilled}")
         for req in reversed(leftovers):
             self.queue.appendleft(req)
+        self._recheck_unservable = True
 
     def rejoin_server(self, sid: int) -> None:
+        """Reboot a downed server into the fleet (fresh cold start; its
+        spawn stamp resets so cold-start metrics track the reboot)."""
         self.servers[sid].rejoin()
         self.servers[sid].spawned_at = self.clock
+        self._recheck_unservable = True
         self.metrics.on_event(self.clock, "rejoin",
                               f"server{self._metrics_sid(sid)}")
 
     # ---- request path -----------------------------------------------------
     def submit(self, arrival: Arrival) -> int:
+        """Turn one trace ``Arrival`` into a queued ``ServeRequest``
+        (prompt materialized or stubbed, absolute deadline stamped) and
+        open its metrics record; returns the assigned rid."""
         if arrival.adapter and arrival.adapter not in (
                 self.adapter_params or {}):
             raise ValueError(
                 f"trace names adapter {arrival.adapter!r} but the router "
                 f"has adapter_params for {sorted(self.adapter_params or {})}")
         rid = next(self._rid)
-        req = ServeRequest(rid, prompt_tokens(arrival, self.cfg.vocab_size),
+        if self.materialize_prompts:
+            toks = prompt_tokens(arrival, self.cfg.vocab_size)
+        else:
+            toks = _prompt_stub(arrival.prompt_len)
+        req = ServeRequest(rid, toks,
                            max_new_tokens=arrival.max_new_tokens,
                            adapter=arrival.adapter, arrival=arrival.time,
                            model=arrival.model or self.model,
                            deadline=(None if arrival.ttft_deadline_s is None
                                      else arrival.time
                                      + arrival.ttft_deadline_s))
-        self._arrival_time[rid] = arrival.time
         if arrival.adapter:
             self._recent_adapters.append(arrival.adapter)
-        self.metrics.on_submit(rid, arrival.time, model=req.model)
+        self.metrics.on_submit(rid, arrival.time, model=req.model,
+                               deadline=req.deadline)
         self.queue.append(req)
+        self._unchecked.append(req)
         return rid
 
     def _dispatch(self, now: Optional[float] = None) -> None:
@@ -440,10 +520,14 @@ class ClusterRouter:
             now = self.clock
         # visibility: a request no provisioned server can serve (placement
         # preloaded subsets) is skipped by the policies, not dispatched —
-        # surface that once per request so a starved adapter is diagnosable
+        # surface that once per request so a starved adapter is diagnosable.
+        # Lazy: only requests queued since the last scan are checked, plus
+        # one full rescan whenever the fleet composition changes (spawn /
+        # crash / rejoin / retire) — not O(queue) every tick.
         live = [s for s in self.servers
                 if s.state not in ("down", "retired")]
-        for req in self.queue:
+        to_check = self.queue if self._recheck_unservable else self._unchecked
+        for req in to_check:
             if req.rid not in self._unservable_flagged \
                     and not any(s.can_serve(req) for s in live):
                 self._unservable_flagged.add(req.rid)
@@ -451,17 +535,43 @@ class ClusterRouter:
                     now, "unservable",
                     f"req{req.rid} adapter={req.adapter!r}: no live server "
                     "preloads it (placement)")
+        self._unchecked = []
+        self._recheck_unservable = False
+        if not hasattr(self.dispatch, "select_many"):
+            # compatibility: a select-only third-party policy dispatches
+            # one request per call, exactly the pre-batching loop
+            while self.queue:
+                picked = self.dispatch.select(self.queue, self.servers, now,
+                                              self.ccfg)
+                if picked is None:
+                    return
+                idx, target = picked
+                req = self.queue[idx]
+                del self.queue[idx]
+                target.srv.clock = max(target.srv.clock, now)
+                target.submit(req)
+            return
         while self.queue:
-            picked = self.dispatch.select(self.queue, self.servers, now,
-                                          self.ccfg)
-            if picked is None:
+            # one batched round: the policy pairs every placeable request
+            # in a single queue sort + scoring sweep (virtual load
+            # accounting keeps it equivalent to the repeated-select loop)
+            picks = self.dispatch.select_many(self.queue, self.servers, now,
+                                              self.ccfg)
+            if not picks:
                 return
-            idx, target = picked
-            req = self.queue[idx]
-            del self.queue[idx]
-            # sync the server clock so dispatch-time stamps are router time
-            target.srv.clock = max(target.srv.clock, now)
-            target.submit(req)
+            reqs = list(self.queue)
+            taken = set()
+            for idx, target in picks:
+                req = reqs[idx]
+                taken.add(idx)
+                # sync the server clock so dispatch stamps are router time
+                target.srv.clock = max(target.srv.clock, now)
+                target.submit(req)
+            if len(taken) == len(reqs):
+                self.queue.clear()
+            else:
+                self.queue = deque(r for j, r in enumerate(reqs)
+                                   if j not in taken)
 
     @property
     def pending(self) -> int:
@@ -503,13 +613,13 @@ class ClusterRouter:
             # head-of-line wait spans the router queue AND requests still
             # queued inside servers (dispatch drains the router queue every
             # tick, so server-side waiters carry the TTFT-SLO signal)
-            waits = [self._arrival_time[r.rid] for r in self.queue]
+            waits = [r.arrival for r in self.queue]
             waits += [a for s in self.servers
                       if s.state not in ("down", "retired")
                       and (a := s.oldest_queued_arrival) is not None]
             oldest = now - min(waits) if waits else 0.0
             d = self.autoscaler.decide(now, self.pending, oldest,
-                                       self.servers)
+                                       self.servers, tick_s=self.ccfg.tick_s)
             for _ in range(d.spawn):
                 self.metrics.on_event(now, "scale_up", "")
                 self.spawn_server()
@@ -517,6 +627,7 @@ class ClusterRouter:
                 self.metrics.on_event(now, "retire",
                                       f"server{self._metrics_sid(sid)}")
                 self.queue.extend(self.servers[sid].retire())
+                self._recheck_unservable = True
         self._dispatch(now)
         finished: List[ServeRequest] = []
         for s in self.servers:
@@ -551,41 +662,140 @@ class ClusterRouter:
             self._clock.advance(self.ccfg.tick_s)
         return finished
 
-    def run(self, trace: Sequence[Arrival], *, max_ticks: int = 200_000,
+    @property
+    def quiescent(self) -> bool:
+        """True when no tick would do any work: empty router queue and no
+        server mid-load/-recovery/-decode/-fill.  The event engine only
+        jumps the clock while this holds (a dense tick is a provable no-op
+        then, so skipping it cannot change any token stream)."""
+        return not self.queue and not any(s.needs_tick for s in self.servers)
+
+    def next_event_time(self, next_arrival: Optional[float] = None,
+                        extra: Sequence[float] = ()) -> Optional[float]:
+        """Earliest lifecycle event that can wake a quiescent fleet: the
+        next trace arrival, the autoscaler's idle-retire deadline, or a
+        caller-scheduled instant (e.g. a crash-rejoin time).  ``None``
+        means nothing will ever happen again."""
+        cands = [t for t in extra if t is not None]
+        if next_arrival is not None:
+            cands.append(next_arrival)
+        if self.autoscaler is not None:
+            t = self.autoscaler.next_retire_time(self.servers,
+                                                 self.ccfg.tick_s)
+            if t is not None:
+                cands.append(t)
+        return min(cands) if cands else None
+
+    def _settle_gap(self, t_wake: float) -> None:
+        """Account a quiescent gap as if its idle ticks had run: GPU-
+        seconds accrue at the current fleet composition up to the tick
+        *before* the wake tick (the wake tick accrues its own ``tick_s``
+        normally, exactly as under the polling loop)."""
+        busy = sum(self.ccfg.n_devices for s in self.servers
+                   if s.state not in ("down", "retired"))
+        lead = t_wake - self.ccfg.tick_s
+        if self._prev_tick_t is not None and lead > self._prev_tick_t:
+            self.metrics.gpu_seconds += busy * (lead - self._prev_tick_t)
+            self._prev_tick_t = lead
+
+    def _jump_to(self, t_wake: float) -> None:
+        """Event-engine clock jump across a quiescent gap: settle the
+        skipped ticks' accounting, then move the clock — logical clocks
+        teleport, wall clocks sleep instead of hot-polling."""
+        self._settle_gap(t_wake)
+        self._clock.sleep_until(t_wake)
+
+    def run(self, trace, *, max_ticks: int = 200_000,
             crash_after_completions: Optional[int] = None,
             crash_server_id: int = 1,
             crash_devices: Optional[Sequence[int]] = None,
-            rejoin_after_ticks: Optional[int] = None
-            ) -> List[ServeRequest]:
+            rejoin_after_ticks: Optional[int] = None,
+            engine: str = "event",
+            collect_finished: bool = True) -> List[ServeRequest]:
         """Replay ``trace`` to completion; returns finished requests.
+
+        ``trace`` may be a sequence of :class:`Arrival` (sorted here) or a
+        time-ordered iterator (``traces.arrival_stream`` /
+        ``iter_azure_trace``) — streamed arrivals are never materialized.
+
+        ``engine="event"`` (default) jumps the clock across quiescent gaps
+        to the next arrival / retire deadline / rejoin instant; while any
+        work is in flight it processes every tick densely, so its token
+        streams are identical to ``engine="tick"`` (the legacy poll-every-
+        tick loop, kept as the equivalence oracle).
 
         ``crash_after_completions``: once that many requests completed,
         crash ``crash_server_id`` (all its devices unless ``crash_devices``
         narrows it) and re-route its work; with ``rejoin_after_ticks`` the
         downed server reboots into the fleet that many ticks later.
+
+        ``collect_finished=False`` drops finished requests instead of
+        returning them (million-row replays keep metrics, not payloads).
         """
-        arrivals = sorted(trace, key=lambda a: a.time)
-        i = 0
+        if engine not in ("event", "tick"):
+            raise ValueError(f"unknown engine {engine!r}; "
+                             "expected 'event' or 'tick'")
+        stream = arrival_stream(trace)
+        nxt = next(stream, None)
+        tick_s = self.ccfg.tick_s
         completed: List[ServeRequest] = []
-        crashed_at_tick: Optional[int] = None
-        for t in range(max_ticks):
-            while i < len(arrivals) and arrivals[i].time <= self.clock:
-                self.submit(arrivals[i])
-                i += 1
-            completed.extend(self.tick())
-            if (crash_after_completions is not None
-                    and crashed_at_tick is None
-                    and len(completed) >= crash_after_completions
+        n_completed = 0
+        crashed = False
+        # tick engine counts iterations; event engine schedules clock time
+        rejoin_at: Optional[float] = None
+        t = 0
+        while t < max_ticks:
+            while nxt is not None and nxt.time <= self.clock:
+                self.submit(nxt)
+                nxt = next(stream, None)
+            if engine == "event" and self.quiescent:
+                pending_rejoin = (rejoin_at is not None
+                                  and self.servers[crash_server_id].state
+                                  == "down")
+                now = self.clock
+                # the rejoin check below fires once the POST-advance clock
+                # reaches rejoin_at (matching the tick engine's iteration
+                # count), so the last dense tick it needs is the one AT
+                # rejoin_at - tick_s — waking at rejoin_at itself would
+                # reboot the server one tick late
+                t_evt = self.next_event_time(
+                    next_arrival=None if nxt is None else nxt.time,
+                    extra=(rejoin_at - tick_s,) if pending_rejoin else ())
+                if t_evt is None:
+                    break           # nothing can ever wake the fleet again
+                if t_evt - now > tick_s * 1e-6:
+                    # jump to the first tick-grid point at/after the event
+                    # (grid-aligned so the wake tick lands exactly where
+                    # the polling loop would have processed the event)
+                    k = max(1, math.ceil((t_evt - now) / tick_s - 1e-9))
+                    k = min(k, max_ticks - t)
+                    self._jump_to(now + k * tick_s)
+                    t += k
+                    continue
+                # event is due now: process it as a normal dense tick
+            done = self.tick()
+            n_completed += len(done)
+            if collect_finished:
+                completed.extend(done)
+            t += 1
+            if (crash_after_completions is not None and not crashed
+                    and n_completed >= crash_after_completions
                     and crash_server_id < len(self.servers)):
                 self.crash_server(crash_server_id, crash_devices)
-                crashed_at_tick = t
-            if (crashed_at_tick is not None and rejoin_after_ticks is not None
-                    and t == crashed_at_tick + rejoin_after_ticks
-                    and self.servers[crash_server_id].state == "down"):
+                crashed = True
+                if rejoin_after_ticks is not None:
+                    rejoin_at = (t - 1 + rejoin_after_ticks
+                                 if engine == "tick"
+                                 else self.clock + rejoin_after_ticks
+                                 * tick_s)
+            if (crashed and rejoin_at is not None
+                    and self.servers[crash_server_id].state == "down"
+                    and ((t - 1 == rejoin_at) if engine == "tick"
+                         else self.clock >= rejoin_at - 1e-9)):
                 self.rejoin_server(crash_server_id)
-            if i >= len(arrivals) and self.pending == 0:
+            if nxt is None and self.pending == 0:
                 break
-            if self.stalled(arrivals_left=i < len(arrivals)):
+            if self.stalled(arrivals_left=nxt is not None):
                 break
         self.finalize_metrics()
         return completed

@@ -31,11 +31,22 @@ hard-code into three separable pieces:
 * ``Clock`` — ``LogicalClock`` (discrete ticks, deterministic CI) vs
   ``WallClock`` (``time.monotonic``, real slices).  The router/autoscaler
   take ``now`` from the injected clock and never branch on its type: the
-  same scheduler code runs simulation and real time.
+  same scheduler code runs simulation and real time.  ``sleep_until``
+  lets the discrete-event replay loop jump a quiescent gap: logical
+  clocks teleport, wall clocks actually sleep instead of hot-polling.
+
+Dispatch is *batched*: ``select_many`` dispatches every placeable queued
+request in one pass (one queue sort, one scoring sweep with virtual
+load accounting), which is what lets a full-day trace replay run one
+dispatch round per event instead of one O(Q log Q) ``select`` per
+request.  ``select`` remains as a single-pick compatibility shim.
 
 Pure host-side policy — no JAX.  Scoring peeks only at cheap scheduling
 surfaces (queue depths, remaining-token counts, adapter residency,
 load-plan progress), never at device state.
+
+See ``docs/ARCHITECTURE.md`` § "Cluster: scheduling policies" for how
+these pieces slot into the event engine.
 """
 from __future__ import annotations
 
@@ -55,11 +66,20 @@ from typing import (Any, Dict, Optional, Protocol, Sequence, Tuple,
 class Clock(Protocol):
     """Router time source.  ``now`` is seconds since the run started;
     ``advance`` is called once per router tick with the tick's nominal
-    duration."""
+    duration; ``sleep_until`` is how the discrete-event replay loop
+    crosses a quiescent gap in one hop (see ``ClusterRouter.run``)."""
 
-    def now(self) -> float: ...
+    def now(self) -> float:
+        """Current time in seconds since the run started."""
+        ...
 
-    def advance(self, dt: float) -> None: ...
+    def advance(self, dt: float) -> None:
+        """Account one router tick of nominal duration ``dt``."""
+        ...
+
+    def sleep_until(self, t: float) -> None:
+        """Block (wall) or teleport (logical) until time ``t``."""
+        ...
 
 
 @dataclass
@@ -69,29 +89,45 @@ class LogicalClock:
     t: float = 0.0
 
     def now(self) -> float:
+        """Current logical time (sum of advances and jumps)."""
         return self.t
 
     def advance(self, dt: float) -> None:
+        """Step logical time forward by one tick of ``dt`` seconds."""
         self.t += dt
+
+    def sleep_until(self, t: float) -> None:
+        """Event-engine jump: teleport to ``t`` (never backwards)."""
+        self.t = max(self.t, t)
 
 
 class WallClock:
     """Real time off ``time.monotonic`` (zeroed at construction).
 
     ``advance`` is a no-op: wall time flows on its own while the tick does
-    real work.  Injecting this instead of ``LogicalClock`` is the ONLY
-    change needed to run the same router/autoscaler/policies on a real
-    slice — no code forks anywhere downstream.
+    real work.  ``sleep_until`` really sleeps — under the event engine a
+    quiescent fleet blocks until its next scheduled transition instead of
+    hot-polling the tick loop.  Injecting this instead of ``LogicalClock``
+    is the ONLY change needed to run the same router/autoscaler/policies
+    on a real slice — no code forks anywhere downstream.
     """
 
     def __init__(self) -> None:
         self._t0 = time.monotonic()
 
     def now(self) -> float:
+        """Seconds of real time since this clock was constructed."""
         return time.monotonic() - self._t0
 
-    def advance(self, dt: float) -> None:  # real time advances itself
+    def advance(self, dt: float) -> None:
+        """No-op: real time advances itself while the tick does work."""
         return None
+
+    def sleep_until(self, t: float) -> None:
+        """Really sleep until ``t`` (no-op if ``t`` already passed)."""
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
 
 
 # ---------------------------------------------------------------------------
@@ -107,18 +143,32 @@ def _capacity(server, n_slots: int) -> bool:
 
 
 class DispatchPolicy(Protocol):
-    """One dispatch decision: which queued request goes to which server.
+    """One dispatch round: which queued requests go to which servers.
 
-    ``select`` returns ``(queue_index, server)`` or ``None`` when nothing
-    can be dispatched this tick (the router stops pulling and the backlog
-    keeps feeding the autoscaler's SLO signal).  The router pops the
-    request and submits it; ``select`` must not mutate the queue.
+    ``select_many`` returns ``[(queue_index, server), ...]`` — every
+    request placeable this round, indices into the *unmutated* queue, in
+    dispatch order.  It must be equivalent to calling ``select``
+    repeatedly with the router popping and submitting between calls;
+    policies achieve that in one pass with *virtual load accounting*
+    (each pick counts against its server's capacity and queue-wait score
+    for subsequent picks).  An empty list means nothing can be dispatched
+    (the backlog keeps feeding the autoscaler's SLO signal).
+
+    ``select`` is the single-pick compatibility shim: first element of
+    ``select_many`` or ``None``.  Neither may mutate the queue.
     """
 
     name: str
 
     def select(self, queue: Sequence, servers: Sequence, now: float,
-               ccfg) -> Optional[Tuple[int, Any]]: ...
+               ccfg) -> Optional[Tuple[int, Any]]:
+        """Pick ONE ``(queue_index, server)`` pair, or None."""
+        ...
+
+    def select_many(self, queue: Sequence, servers: Sequence, now: float,
+                    ccfg) -> list:
+        """Pick every placeable ``(queue_index, server)`` this round."""
+        ...
 
 
 @dataclass
@@ -134,18 +184,32 @@ class LeastLoaded:
     """
     name: str = "least_loaded"
 
-    def select(self, queue, servers, now, ccfg):
+    def select_many(self, queue, servers, now, ccfg):
+        """Batched FIFO dispatch: every placeable request in one pass."""
+        # one FIFO pass; `extra` counts this round's virtual assignments so
+        # each pick sees the load the repeated-select loop would have seen
+        extra = {s.sid: 0 for s in servers}
+        out = []
         for idx, req in enumerate(queue):
             cands = [s for s in servers
-                     if s.admitting and _capacity(s, ccfg.n_slots)
+                     if s.admitting and s.load + extra[s.sid] < ccfg.n_slots
                      and s.can_serve(req)]
             if cands:
-                return idx, min(cands, key=lambda s: (s.load, s.sid))
-            if any(s.admitting and _capacity(s, ccfg.n_slots)
+                best = min(cands,
+                           key=lambda s: (s.load + extra[s.sid], s.sid))
+                extra[best.sid] += 1
+                out.append((idx, best))
+                continue
+            if any(s.admitting and s.load + extra[s.sid] < ccfg.n_slots
                    for s in servers):
                 continue          # only THIS request is unservable: skip it
-            return None           # fleet out of capacity: stop dispatching
-        return None
+            break                 # fleet out of capacity: stop dispatching
+        return out
+
+    def select(self, queue, servers, now, ccfg):
+        """Single-pick shim: first ``select_many`` pick or None."""
+        picks = self.select_many(queue, servers, now, ccfg)
+        return picks[0] if picks else None
 
 
 @dataclass
@@ -182,6 +246,9 @@ class SloAware:
         return server.srv.predicted_step_cost_s(default=ccfg.tick_s)
 
     def predicted_first_token_s(self, server, req, now, ccfg) -> float:
+        """Predicted seconds until ``server`` emits ``req``'s first
+        token: readiness + epoch-drain stall + slot wait + queued-ahead
+        work (the scoring model in the class docstring)."""
         cost = self._step_cost(server, ccfg)
         # predicted_ready_s counts ticks at nominal tick_s; convert to the
         # same per-tick cost unit as the drain/queue terms (under a wall
@@ -207,34 +274,69 @@ class SloAware:
                 t += max(1, q.max_new_tokens - len(q.generated)) * cost
         return t
 
-    def _candidates(self, req, servers, ccfg):
+    def _virtual_wait_s(self, server, assigned, req, ccfg) -> float:
+        """Queue-wait contribution of this round's earlier virtual
+        assignments to ``server`` — priced exactly like the real queued
+        requests in ``predicted_first_token_s`` so one batched pass scores
+        what a repeated single-select loop would have seen."""
+        if not assigned:
+            return 0.0
+        cost = self._step_cost(server, ccfg)
+        t = 0.0
+        for q in assigned:
+            if q.adapter == req.adapter:
+                t += cost
+            else:
+                t += max(1, q.max_new_tokens - len(q.generated)) * cost
+        return t
+
+    def _candidates(self, req, servers, ccfg, extra=None):
         states = ("serving", "loading", "recovering") if self.consider_warming \
             else ("serving",)
+        vload = (lambda s: len(extra[s.sid])) if extra is not None \
+            else (lambda s: 0)
         return [s for s in servers
-                if s.state in states and _capacity(s, ccfg.n_slots)
+                if s.state in states and s.load + vload(s) < ccfg.n_slots
                 and s.can_serve(req)]
 
-    def select(self, queue, servers, now, ccfg):
-        # earliest-deadline-first over the queue; a request no current
-        # server can serve is skipped, never left blocking the rest.
+    def _edf_order(self, reqs):
+        # earliest-deadline-first; FIFO among equals (stable index tiebreak)
+        return sorted(range(len(reqs)),
+                      key=lambda i: (getattr(reqs[i], "deadline", None)
+                                     if getattr(reqs[i], "deadline", None)
+                                     is not None else math.inf, i))
+
+    def select_many(self, queue, servers, now, ccfg):
+        """Batched EDF dispatch: deadline-ordered sweep with virtual
+        load/wait accounting per server."""
+        # one EDF sort + one scoring sweep; a request no current server
+        # can serve is skipped, never left blocking the rest.
         # (materialize once: the router hands us a deque, and O(n)
         # deque indexing inside the sort would make burst dispatch cubic)
         reqs = list(queue)
-        order = sorted(range(len(reqs)),
-                       key=lambda i: (getattr(reqs[i], "deadline", None)
-                                      if getattr(reqs[i], "deadline", None)
-                                      is not None else math.inf, i))
-        for idx in order:
+        extra = {s.sid: [] for s in servers}
+        out = []
+        for idx in self._edf_order(reqs):
             req = reqs[idx]
-            cands = self._candidates(req, servers, ccfg)
+            cands = self._candidates(req, servers, ccfg, extra)
             if cands:
                 best = min(cands, key=lambda s: (
-                    self.predicted_first_token_s(s, req, now, ccfg), s.sid))
-                return idx, best
+                    self.predicted_first_token_s(s, req, now, ccfg)
+                    + self._virtual_wait_s(s, extra[s.sid], req, ccfg),
+                    s.sid))
+                extra[best.sid].append(req)
+                out.append((idx, best))
+                continue
             if not any(s.state in ("serving", "loading", "recovering")
-                       and _capacity(s, ccfg.n_slots) for s in servers):
-                return None       # fleet out of capacity: stop dispatching
-        return None
+                       and s.load + len(extra[s.sid]) < ccfg.n_slots
+                       for s in servers):
+                break             # fleet out of capacity: stop dispatching
+        return out
+
+    def select(self, queue, servers, now, ccfg):
+        """Single-pick shim: first ``select_many`` pick or None."""
+        picks = self.select_many(queue, servers, now, ccfg)
+        return picks[0] if picks else None
 
 
 @dataclass
@@ -251,23 +353,44 @@ class AdapterAffine:
     name: str = "adapter_affine"
     slo: SloAware = field(default_factory=SloAware)
 
+    def select_many(self, queue, servers, now, ccfg):
+        """Batched dispatch: the SLO-aware sweep with a per-pick
+        affinity override toward adapter-resident servers."""
+        # the SLO-aware sweep, with an affinity override per pick: among
+        # admitting servers holding the request's adapter resident, take
+        # the best-scored one; virtual load lands on the FINAL choice
+        slo = self.slo
+        reqs = list(queue)
+        extra = {s.sid: [] for s in servers}
+        out = []
+        for idx in slo._edf_order(reqs):
+            req = reqs[idx]
+            cands = slo._candidates(req, servers, ccfg, extra)
+            if cands:
+                score = lambda s: (
+                    slo.predicted_first_token_s(s, req, now, ccfg)
+                    + slo._virtual_wait_s(s, extra[s.sid], req, ccfg), s.sid)
+                best = min(cands, key=score)
+                affine = [s for s in servers
+                          if s.admitting
+                          and s.load + len(extra[s.sid]) < ccfg.n_slots
+                          and s.can_serve(req)
+                          and req.adapter in s.srv.resident_adapters()]
+                if affine:
+                    best = min(affine, key=score)
+                extra[best.sid].append(req)
+                out.append((idx, best))
+                continue
+            if not any(s.state in ("serving", "loading", "recovering")
+                       and s.load + len(extra[s.sid]) < ccfg.n_slots
+                       for s in servers):
+                break             # fleet out of capacity: stop dispatching
+        return out
+
     def select(self, queue, servers, now, ccfg):
-        if not queue:
-            return None
-        picked = self.slo.select(queue, servers, now, ccfg)
-        if picked is None:
-            return None
-        idx, fallback = picked
-        req = queue[idx]
-        affine = [s for s in servers
-                  if s.admitting and _capacity(s, ccfg.n_slots)
-                  and s.can_serve(req)
-                  and req.adapter in s.srv.resident_adapters()]
-        if not affine:
-            return idx, fallback
-        best = min(affine, key=lambda s: (
-            self.slo.predicted_first_token_s(s, req, now, ccfg), s.sid))
-        return idx, best
+        """Single-pick shim: first ``select_many`` pick or None."""
+        picks = self.select_many(queue, servers, now, ccfg)
+        return picks[0] if picks else None
 
 
 DISPATCH_POLICIES = {
@@ -302,7 +425,9 @@ class PlacementPolicy(Protocol):
     name: str
 
     def adapters_for(self, all_adapters: Dict[str, Any],
-                     recent: Sequence[str]) -> Dict[str, Any]: ...
+                     recent: Sequence[str]) -> Dict[str, Any]:
+        """The adapter subset the new server should merge-load."""
+        ...
 
 
 @dataclass
@@ -312,6 +437,7 @@ class PreloadAll:
     name: str = "preload_all"
 
     def adapters_for(self, all_adapters, recent):
+        """Everything the pool knows, history ignored."""
         return dict(all_adapters)
 
 
@@ -326,6 +452,8 @@ class HotAdapterPlacement:
     name: str = "hot_adapters"
 
     def adapters_for(self, all_adapters, recent):
+        """Top-``k`` adapters by recent request count (ties by recency);
+        no history yet behaves like ``PreloadAll``."""
         seen = [a for a in recent if a in all_adapters]
         counts = Counter(seen)
         last_pos = {a: i for i, a in enumerate(seen)}

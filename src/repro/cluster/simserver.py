@@ -1,0 +1,314 @@
+"""Modeled (JAX-free) cluster server for full-day trace replay.
+
+The real ``ClusterServer`` runs an actual pipelined cold start and a real
+continuous-batching decode per tick — exactly right for correctness tests
+and small benches, and exactly wrong for replaying the ~10⁶ arrivals in a
+full Azure Functions day on CPU.  ``SimServer`` keeps the *scheduling
+surface* bit-compatible (state machine, ``load``/``admitting``/
+``can_serve``/``predicted_ready_s``/``needs_tick``, a batcher facade with
+``active``/``free``, resident adapters, queued requests) while modeling
+the data plane:
+
+* cold start: ready after ``SimProfile.ready_ticks`` ticks, fully loaded
+  after ``full_ticks`` — the tick-count shape of the pipelined loader;
+* decode: one token per active request per tick; admission emits the
+  first token and the same tick's decode step emits the next, matching
+  ``ServingEngine.step`` (admission prefill + batch decode per call);
+* adapter epochs: the active batch shares one adapter (the merged-LoRA
+  epoch barrier) — a queued request for a different adapter waits for a
+  full drain.  FIFO with head-of-line barrier; a documented
+  approximation of the epoch scheduler's budgeted rotation.
+
+Because it plugs into ``ClusterRouter`` via ``server_factory``, every
+piece above the server — dispatch policies, autoscaler, event engine,
+metrics, traces — is the REAL code under test; only the token generation
+is synthetic.  ``benchmarks/run.py``'s ``azure_day`` bench replays a
+million-arrival day this way in seconds.
+
+See ``docs/ARCHITECTURE.md`` § "Cluster: the modeled backend".
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.serving.engine import ServeRequest
+
+
+@dataclass
+class SimProfile:
+    """Tick-count shape of the modeled server's cold start."""
+    ready_ticks: int = 2        # spawn -> admitting (1/N of the model in)
+    full_ticks: int = 10        # spawn -> fully loaded (background fill)
+    bytes_total: int = 1 << 30  # pretend checkpoint size (accounting only)
+
+
+class _SimBatcher:
+    """Slot accounting shaped like ``serving.engine.ContinuousBatcher``:
+    policies read ``.active`` (rid -> request) and ``.free`` (open slot
+    ids) to price slot waits and epoch drains."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.active: Dict[int, ServeRequest] = {}
+        self.free: List[int] = list(range(n_slots - 1, -1, -1))
+
+
+class _SimServing:
+    """``ServingEngine`` facade over modeled decode (the ``srv`` the
+    scheduling policies introspect)."""
+
+    def __init__(self, n_slots: int, adapter_params: Dict[str, Any]):
+        self.adapter_params = adapter_params
+        self.batcher = _SimBatcher(n_slots)
+        self.pending: deque = deque()
+        self.clock = 0.0
+        self.epoch_adapter: Optional[str] = None
+        self.n_steps = 0
+
+    # ---- scheduling surface (mirrors ServingEngine) -----------------------
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending) + len(self.batcher.active)
+
+    def queued_requests(self) -> List[ServeRequest]:
+        return list(self.pending)
+
+    def resident_adapters(self) -> set:
+        if self.batcher.active:
+            return {self.epoch_adapter}
+        return set(self.adapter_params) | {None}
+
+    def predicted_step_cost_s(self, default: float = 0.05) -> float:
+        return default            # modeled: a decode step costs one tick
+
+    def hotpath_stats(self) -> Dict[str, float]:
+        return {"n_decode_steps": float(self.n_steps)}
+
+    # ---- data plane (modeled) ---------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.pending.append(req)
+
+    def step(self, now: Optional[float] = None) -> List[ServeRequest]:
+        """One modeled engine step: admit (first token), then decode one
+        token for every active request — the call shape of
+        ``ServingEngine.step``."""
+        if now is not None:
+            self.clock = max(self.clock, now)
+        b = self.batcher
+        # admission: FIFO under the epoch barrier (active batch shares one
+        # adapter); the head blocking on an epoch switch waits for drain
+        while self.pending and b.free:
+            req = self.pending[0]
+            if b.active and req.adapter != self.epoch_adapter:
+                break
+            self.pending.popleft()
+            if not b.active:
+                self.epoch_adapter = req.adapter
+            req.slot = b.free.pop()
+            b.active[req.rid] = req
+            if req.first_token_at is None:
+                req.first_token_at = self.clock
+            req.generated.append((req.rid + len(req.generated)) % 250)
+        # decode: every active request (including just-admitted — same as
+        # the real engine, where admission prefill precedes the batch step)
+        done: List[ServeRequest] = []
+        for rid in list(b.active):
+            req = b.active[rid]
+            req.generated.append((req.rid + len(req.generated)) % 250)
+            if len(req.generated) >= req.max_new_tokens:
+                req.finished_at = self.clock
+                req.done = True
+                b.free.append(req.slot)
+                del b.active[rid]
+                done.append(req)
+        self.n_steps += 1
+        return done
+
+    def drain_inflight(self, export_state: bool = False
+                       ) -> List[ServeRequest]:
+        out = list(self.batcher.active.values()) + list(self.pending)
+        for r in out:
+            r.snapshot = None     # modeled backend has no KV to export
+            r.slot = None
+        self.batcher = _SimBatcher(self.batcher.n_slots)
+        self.pending.clear()
+        self.epoch_adapter = None
+        return out
+
+
+class SimServer:
+    """Drop-in ``ClusterServer`` replacement with a modeled data plane.
+
+    Pass ``sim_server_factory(profile)`` as ``ClusterRouter``'s
+    ``server_factory`` — the router, autoscaler, and dispatch policies
+    cannot tell the difference (same lifecycle states, same scheduling
+    surface), but a tick costs ~microseconds instead of a JAX dispatch.
+    """
+
+    def __init__(self, sid: int, cfg, params, ccfg,
+                 adapter_params: Optional[Dict[str, Any]] = None,
+                 profile: Optional[SimProfile] = None):
+        self.sid = sid
+        self.ccfg = ccfg
+        self.profile = profile or SimProfile()
+        self.srv = _SimServing(ccfg.n_slots, dict(adapter_params or {}))
+        self.state = "loading"
+        self.idle_ticks = 0
+        self.idle_since: Optional[float] = None
+        self.served_while_loading = False
+        self.spawned_at = 0.0
+        self.ready_at: Optional[float] = None
+        self.fully_loaded_at: Optional[float] = None
+        self._recover_left = 0
+        self._load_ticks = 0
+        self.last_recovery: Dict[str, float] = {}
+        self.engine = self            # router reads s.engine.loaded_bytes()
+
+    # ---- engine facade ----------------------------------------------------
+    @property
+    def fully_loaded(self) -> bool:
+        return self._load_ticks >= self.profile.full_ticks
+
+    def loaded_bytes(self) -> int:
+        """Modeled fill progress in bytes (linear in load ticks)."""
+        frac = min(1.0, self._load_ticks / max(1, self.profile.full_ticks))
+        return int(self.profile.bytes_total * frac)
+
+    def cold_start_stats(self) -> Dict[str, Any]:
+        """Engine-facade stats (no wall-clock accounting: modeled)."""
+        return {"time_to_ready": None, "time_to_fully_loaded": None,
+                "loaded_bytes": self.loaded_bytes(),
+                "total_bytes": self.profile.bytes_total,
+                "n_rounds": self._load_ticks}
+
+    # ---- scheduling surface -----------------------------------------------
+    @property
+    def admitting(self) -> bool:
+        return self.state == "serving"
+
+    @property
+    def load(self) -> int:
+        return self.srv.n_pending
+
+    @property
+    def needs_tick(self) -> bool:
+        if self.state in ("down", "retired"):
+            return False
+        if self.state in ("loading", "recovering"):
+            return True
+        return bool(self.srv.n_pending) or not self.fully_loaded
+
+    def can_serve(self, req: ServeRequest) -> bool:
+        """Whether this server preloaded the request's adapter."""
+        return req.adapter is None or req.adapter in self.srv.adapter_params
+
+    def predicted_ready_s(self, now: float) -> float:
+        """Seconds until admitting: remaining load/recovery ticks at
+        nominal ``tick_s`` (0 serving, +inf down/retired)."""
+        if self.state == "serving":
+            return 0.0
+        if self.state == "loading":
+            left = max(0, self.profile.ready_ticks - self._load_ticks)
+            return left * self.ccfg.tick_s
+        if self.state == "recovering":
+            return max(0, self._recover_left) * self.ccfg.tick_s
+        return math.inf
+
+    @property
+    def oldest_queued_arrival(self) -> Optional[float]:
+        waiting = [r.arrival for r in self.srv.pending
+                   if r.first_token_at is None]
+        return min(waiting) if waiting else None
+
+    def submit(self, req: ServeRequest) -> None:
+        """Queue a dispatched request on the modeled serving engine."""
+        self.srv.submit(req)
+
+    # ---- lifecycle (mirrors ClusterServer.tick) ---------------------------
+    def tick(self, now: float) -> List[ServeRequest]:
+        """One lifecycle tick, mirroring ``ClusterServer.tick``: load
+        progress (ready flip serves the SAME tick), recovery countdown,
+        background fill, one modeled engine step, idle bookkeeping."""
+        if self.state == "loading":
+            self._load_ticks += 1
+            if self._load_ticks < self.profile.ready_ticks:
+                return []
+            self.state = "serving"
+            if self.ready_at is None:
+                self.ready_at = now
+        if self.state == "recovering":
+            self._recover_left -= 1
+            if self._recover_left <= 0:
+                self.state = "serving"
+            return []
+        if self.state in ("down", "retired"):
+            return []
+        if not self.fully_loaded:
+            self._load_ticks += 1       # background fill
+            if self.srv.n_pending:
+                self.served_while_loading = True
+            if self.fully_loaded and self.fully_loaded_at is None:
+                self.fully_loaded_at = now
+        done = self.srv.step(now=now)
+        if self.srv.n_pending:
+            self.idle_ticks = 0
+            self.idle_since = None
+        else:
+            self.idle_ticks += 1
+            if self.idle_since is None:
+                self.idle_since = now
+        return done
+
+    def cold_start_record(self) -> Dict[str, Any]:
+        """Cold-start accounting in ``ClusterServer.cold_start_record``'s
+        exact shape (wall fields None: modeled)."""
+        eng = self.cold_start_stats()
+        rdy, ful = self.ready_at, self.fully_loaded_at
+        return {
+            "server": self.sid,
+            "time_to_ready": (None if rdy is None
+                              else max(0.0, rdy - self.spawned_at)),
+            "time_to_fully_loaded": (None if ful is None
+                                     else max(0.0, ful - self.spawned_at)),
+            "served_while_loading": self.served_while_loading,
+            "wall_time_to_ready": eng["time_to_ready"],
+            "wall_time_to_fully_loaded": eng["time_to_fully_loaded"],
+            "loaded_bytes": eng["loaded_bytes"],
+            "total_bytes": eng["total_bytes"],
+            "n_rounds": eng["n_rounds"],
+        }
+
+    def crash(self, device_ids: Optional[Sequence[int]] = None
+              ) -> List[ServeRequest]:
+        """Whole-server crash only (the modeled backend has no per-device
+        KV state to partially lose): drains everything for re-dispatch."""
+        self.last_recovery = {}
+        drained = self.srv.drain_inflight()
+        self.state = "down"
+        return drained
+
+    def rejoin(self) -> None:
+        """Reboot after a crash: full cold start from zero load ticks."""
+        self.state = "loading"
+        self._load_ticks = 0
+        self.ready_at = None
+        self.fully_loaded_at = None
+        self.served_while_loading = False
+
+    def retire(self) -> List[ServeRequest]:
+        """Voluntary scale-down; leftovers re-queue through dispatch."""
+        leftovers = self.srv.drain_inflight()
+        self.state = "retired"
+        return leftovers
+
+
+def sim_server_factory(profile: Optional[SimProfile] = None):
+    """A ``server_factory`` for ``ClusterRouter``: every spawned server is
+    a ``SimServer`` with the given cold-start profile."""
+    def factory(sid, cfg, params, ccfg, adapter_params=None):
+        return SimServer(sid, cfg, params, ccfg, adapter_params,
+                         profile=profile)
+    return factory

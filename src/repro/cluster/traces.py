@@ -14,6 +14,11 @@ Traces are plain ``Arrival`` records, replayable and JSON round-trippable
 (``save_trace`` / ``load_trace``) so benchmark runs are reproducible and
 real traces (e.g. Azure Functions) can be dropped in the same format.
 All generators are deterministic in ``seed``.
+
+Full-day replays *stream*: ``arrival_stream`` feeds the router's event
+engine one arrival at a time, and ``iter_azure_trace`` synthesizes an
+Azure-shape day minute-by-minute — a million-row trace is never resident
+as a list.  See ``docs/ARCHITECTURE.md`` § "Cluster: traces".
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import csv
 import heapq
 import json
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -133,6 +138,19 @@ def merge_traces(*traces: Sequence[Arrival]) -> List[Arrival]:
     return list(heapq.merge(*traces, key=lambda a: a.time))
 
 
+def arrival_stream(trace: Iterable[Arrival]) -> Iterator[Arrival]:
+    """Time-ordered arrival iterator for ``ClusterRouter.run``.
+
+    Lists/tuples are sorted here (the semantics ``run`` always had); any
+    other iterable is assumed already time-ordered and passed through
+    lazily — the streaming contract that lets ``iter_azure_trace`` replay
+    a million-row day without ever materializing it.
+    """
+    if isinstance(trace, (list, tuple)):
+        return iter(sorted(trace, key=lambda a: a.time))
+    return iter(trace)
+
+
 # ---------------------------------------------------------------------------
 # Azure Functions trace ingestion
 # ---------------------------------------------------------------------------
@@ -204,17 +222,80 @@ def load_azure_trace(path: str, *, minute_s: float = 60.0,
     return out[:max_requests] if max_requests is not None else out
 
 
+def iter_azure_trace(path: str, *, minute_s: float = 60.0,
+                     rate_scale: float = 1.0, prompt_len: int = 8,
+                     max_new_tokens: int = 6,
+                     models: Sequence[str] = (),
+                     adapters: Sequence[Optional[str]] = (None,),
+                     ttft_deadline_s: Optional[float] = None,
+                     max_requests: Optional[int] = None,
+                     seed: int = 0) -> Iterator[Arrival]:
+    """Streaming, minute-major counterpart of :func:`load_azure_trace`.
+
+    Same CSV shape and same per-minute model (scaled counts, stochastic
+    rounding, uniform placement, deterministic function→model/adapter
+    round-robin), but generated one *day minute* at a time and yielded in
+    time order — a full day ``rate_scale``-d to a million arrivals is
+    never resident as a list.  Feed it straight to ``ClusterRouter.run``
+    (the event engine consumes arrivals lazily).
+
+    Note: a distinct generator, not a drop-in RNG-replay of
+    ``load_azure_trace`` — the minute-major draw order yields different
+    (equally distributed) jitter for the same seed.
+    """
+    rng = np.random.default_rng(seed)
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))     # one row per FUNCTION: small
+    if not rows:
+        return
+    minute_cols = sorted((c for c in rows[0] if c and c.strip().isdigit()),
+                         key=int)
+    if not minute_cols:
+        raise ValueError(f"{path}: no per-minute count columns "
+                         "(expected the Azure Functions CSV shape)")
+    rows.sort(key=lambda r: (r.get("HashOwner", ""), r.get("HashApp", ""),
+                             r.get("HashFunction", "")))
+    fns = [(models[fi % len(models)] if models else None,
+            adapters[fi % len(adapters)] if adapters else None, row)
+           for fi, row in enumerate(rows)]
+    emitted = 0
+    for col in minute_cols:
+        t0 = (int(col) - 1) * minute_s
+        batch: List[Arrival] = []
+        for model, adapter, row in fns:
+            raw = (row.get(col) or "0").strip()
+            scaled = float(raw or 0) * rate_scale
+            n = int(scaled) + (1 if rng.random() < scaled - int(scaled)
+                               else 0)
+            if n <= 0:
+                continue
+            times = t0 + rng.random(n) * minute_s
+            seeds = rng.integers(2**31 - 1, size=n)
+            batch.extend(Arrival(float(t), prompt_len, max_new_tokens,
+                                 adapter, seed=int(s), model=model,
+                                 ttft_deadline_s=ttft_deadline_s)
+                         for t, s in zip(times, seeds))
+        batch.sort(key=lambda a: a.time)
+        for a in batch:
+            if max_requests is not None and emitted >= max_requests:
+                return
+            emitted += 1
+            yield a
+
+
 # ---------------------------------------------------------------------------
 # Replayable trace format
 # ---------------------------------------------------------------------------
 
 def save_trace(path: str, trace: Sequence[Arrival]) -> None:
+    """Write a trace as versioned JSON (replayable, diffable)."""
     with open(path, "w") as f:
         json.dump({"version": 1, "arrivals": [asdict(a) for a in trace]},
                   f, indent=1)
 
 
 def load_trace(path: str) -> List[Arrival]:
+    """Read a ``save_trace`` JSON file back into ``Arrival``s."""
     with open(path) as f:
         doc = json.load(f)
     if doc.get("version") != 1:

@@ -10,6 +10,8 @@ flip, which is what Fig. 14 shows blowing up at high request rates.
 Implemented as a deterministic discrete-event simulation so benchmarks are
 reproducible; the same policy object drives the real serving engine
 (repro/serving/engine.py) through its ``next_batch`` interface.
+
+See ``docs/ARCHITECTURE.md`` § "Core: the PipeBoost engine".
 """
 from __future__ import annotations
 

@@ -12,6 +12,8 @@ comes from core/simulator.py; this module owns *correctness*:
   * a request admitted before full load produces EXACTLY the same tokens as
     a fully-loaded model (pipeline math is the same math);
   * a crash + recovery produces the same KV/state as a fresh prefill.
+
+See ``docs/ARCHITECTURE.md`` § "Core: the PipeBoost engine".
 """
 from __future__ import annotations
 

@@ -18,6 +18,8 @@ per-layer "has state" mask, rebuild the missing per-layer caches:
 Reconstruction stops at the deepest missing layer: everything above it kept
 its state, so the decode queue can resume immediately after
 (paper Fig. 7b: decode requests detour through the prefill queue and return).
+
+See ``docs/ARCHITECTURE.md`` § "Core: the PipeBoost engine".
 """
 from __future__ import annotations
 

@@ -15,6 +15,8 @@ The planner is pure algorithm — no JAX — and is the heart of PipeBoost:
 * ``viable_chain``        — find a pipeline chain over the currently loaded
                             segments (used to decide whether inference can
                             continue after a crash without re-loading).
+
+See ``docs/ARCHITECTURE.md`` § "Core: the PipeBoost engine".
 """
 from __future__ import annotations
 

@@ -10,6 +10,8 @@ Two hardware presets:
   * ``GPU_PAPER``  — calibrated to the paper's A100 testbed (Table 1).
   * ``TPU_V5E``    — the repo's TPU target (197 TF bf16, 819 GB/s HBM,
                      ~50 GB/s/link ICI), used for the beyond-paper analysis.
+
+See ``docs/ARCHITECTURE.md`` § "Core: the PipeBoost engine".
 """
 from __future__ import annotations
 

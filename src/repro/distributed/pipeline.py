@@ -15,6 +15,8 @@ Used for the TTFT-critical cold-start prefill (after strategy switching the
 engine serves per-replica, so decode rides the standard lowering).  Uniform
 layer stacks only (dense/GQA/MoE/SSM/encoder); the hybrid arch pipelines in
 the functional engine but is excluded from this lowering (DESIGN.md §5).
+
+See ``docs/ARCHITECTURE.md`` § "Distributed: the pipeline belt".
 """
 from __future__ import annotations
 

@@ -4,6 +4,8 @@ On this CPU container kernels execute in interpret mode (Python semantics,
 exact math); on TPU the same calls compile to Mosaic.  ``interpret`` is
 resolved from the backend unless forced.  Layout adapters translate from
 the model zoo's (B, S, H, d) convention to the kernels' (B, H, S, d).
+
+See ``docs/ARCHITECTURE.md`` § "Models and kernels".
 """
 from __future__ import annotations
 

@@ -2,6 +2,8 @@
 
 Each reference is the naive O(everything-in-memory) math — no tiling, no
 online softmax — so a kernel bug cannot be hidden by shared structure.
+
+See ``docs/ARCHITECTURE.md`` § "Models and kernels".
 """
 from __future__ import annotations
 

@@ -17,6 +17,8 @@ completions (its in-flight requests re-route to survivors and it rejoins
 via a fresh pipelined cold start), and prints TTFT/TBT percentiles, queue
 depth, and GPU-seconds.  CPU runs use reduced configs (functional path);
 the same engines drive device_put-sharded weights on a real slice.
+
+See ``docs/ARCHITECTURE.md`` § "Launch".
 """
 from __future__ import annotations
 
@@ -67,7 +69,8 @@ def run_cluster(cfg, params, args):
     crash = args.crash_at if args.crash_at >= 0 else None
     done = router.run(trace, crash_after_completions=crash,
                       crash_server_id=min(1, args.servers - 1),
-                      rejoin_after_ticks=20 if crash is not None else None)
+                      rejoin_after_ticks=20 if crash is not None else None,
+                      engine=args.engine)
     wall = time.perf_counter() - t0
     s = router.metrics.summary()
     print(f"cluster: {int(s['n_completed'])}/{len(trace)} requests completed "
@@ -114,6 +117,11 @@ def main(argv=None):
     ap.add_argument("--wall-clock", action="store_true",
                     help="--cluster: run the router off time.monotonic "
                          "instead of logical ticks (real-slice mode)")
+    ap.add_argument("--engine", default="event", choices=("event", "tick"),
+                    help="--cluster: replay loop — 'event' jumps the "
+                         "clock across quiescent gaps (default), 'tick' "
+                         "polls every tick (the equivalence oracle; "
+                         "identical token streams)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-json", default="",
                     help="--cluster: also dump ClusterMetrics JSON here")

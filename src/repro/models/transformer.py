@@ -11,6 +11,8 @@ Three entry points (pure functions of (cfg, params, batch)):
   * ``forward(..., mode="train")``   -> (logits (B,S,V), aux)
   * ``forward(..., mode="prefill")`` -> (last-token logits (B,V), cache)
   * ``decode_step(...)``             -> (logits (B,V), cache)
+
+See ``docs/ARCHITECTURE.md`` § "Models and kernels".
 """
 from __future__ import annotations
 

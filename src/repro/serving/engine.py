@@ -32,6 +32,8 @@ Hot-path design (the zero-copy decode loop)
 ``compile_stats()`` / ``hotpath_stats()`` surface compile counts and
 decode throughput for benchmarks, the cluster metrics, and the CI
 compile-count regression guard.
+
+See ``docs/ARCHITECTURE.md`` § "Serving: continuous batching".
 """
 from __future__ import annotations
 

@@ -21,6 +21,8 @@ Layout notes
   ring exactly.
 * Rows are host numpy (the "wire format"): a snapshot can cross process
   boundaries; re-upload happens once, inside the importer's donated jit.
+
+See ``docs/ARCHITECTURE.md`` § "Serving: continuous batching".
 """
 from __future__ import annotations
 

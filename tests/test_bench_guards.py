@@ -1,10 +1,13 @@
-"""Benchmark tooling guards: the compile-count verdict logic and the
-keyed trajectory-JSON writer (re-runs replace, never duplicate)."""
+"""Benchmark tooling guards: the compile-count verdict logic, the keyed
+trajectory-JSON writer (re-runs replace, never duplicate), and the
+docstring-coverage gate CI runs over the cluster layer."""
 import json
 
 import pytest
 
 from benchmarks.compile_guard import evaluate
+from benchmarks.docstring_gate import collect
+from benchmarks.docstring_gate import main as gate_main
 from benchmarks.run import append_keyed_entry
 
 
@@ -96,3 +99,108 @@ def test_keyed_entry_preserves_legacy_unkeyed_rows(tmp_path):
     with open(path) as f:
         entries = json.load(f)["entries"]
     assert len(entries) == 2 and entries[0]["value"] == 5
+
+# ---------------------------------------------------------------------------
+# docstring-coverage gate (benchmarks/docstring_gate.py)
+# ---------------------------------------------------------------------------
+
+_SAMPLE = '''"""Module doc."""
+
+
+class Public:
+    """Class doc."""
+
+    def __init__(self, x):          # dunder: excluded (class doc covers it)
+        self.x = x
+
+    @property
+    def value(self):                # property getter: excluded
+        return self.x
+
+    @value.setter
+    def value(self, v):             # setter: excluded
+        self.x = v
+
+    def documented(self):
+        """Has one."""
+
+    def bare(self):                 # counted, missing
+        return self.x
+
+    def _helper(self):              # private: excluded
+        return None
+
+
+class _Private:
+    def anything_inside(self):      # private scope: excluded entirely
+        return 1
+
+
+def documented_fn():
+    """Has one."""
+    def nested():                   # nested in function: excluded
+        return 2
+    return nested
+
+
+def bare_fn():                      # counted, missing
+    return 3
+'''
+
+
+def _write_sample(tmp_path, name="mod.py", text=_SAMPLE):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_gate_exclusions_mirror_interrogate(tmp_path):
+    """Only module + public class + public non-property defs count:
+    dunders, properties/setters, private names, private scopes, and
+    function-nested functions are all invisible to the gate."""
+    entries = collect([_write_sample(tmp_path)])
+    quals = {q: ok for _, q, _, ok in entries}
+    assert set(quals) == {"<module>", "Public", "Public.documented",
+                          "Public.bare", "documented_fn", "bare_fn"}
+    assert [q for q, ok in sorted(quals.items()) if not ok] == \
+        ["Public.bare", "bare_fn"]
+
+
+def test_gate_pass_and_fail_thresholds(tmp_path, capsys):
+    path = _write_sample(tmp_path)
+    # 4/6 documented = 66.7%: below 95 fails, below-threshold 50 passes
+    assert gate_main([path, "--fail-under", "95"]) == 1
+    assert "FAIL" in capsys.readouterr().out
+    assert gate_main([path, "--fail-under", "50"]) == 0
+    out = capsys.readouterr().out
+    assert "4/6 = 66.7%" in out and "OK" in out
+
+
+def test_gate_reports_missing_names(tmp_path, capsys):
+    gate_main([_write_sample(tmp_path), "--fail-under", "0", "-v"])
+    out = capsys.readouterr().out
+    assert "Public.bare" in out and "bare_fn" in out
+    assert "Public.documented" not in out
+
+
+def test_gate_walks_directories_and_skips_pycache(tmp_path):
+    _write_sample(tmp_path, "a.py")
+    (tmp_path / "__pycache__").mkdir()
+    _write_sample(tmp_path / "__pycache__", "b.py",
+                  text="def junk():\n    return 0\n")
+    entries = collect([str(tmp_path)])
+    assert all("__pycache__" not in p for p, _, _, _ in entries)
+    assert len(entries) == 6
+
+
+def test_gate_rejects_unparseable_source(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n")
+    with pytest.raises(SystemExit, match="not parseable"):
+        collect([str(bad)])
+
+
+def test_cluster_layer_meets_its_own_gate():
+    """The CI invocation verbatim: the shipped cluster layer satisfies
+    the gate it is guarded by."""
+    assert gate_main(["src/repro/cluster", "--fail-under", "95"]) == 0

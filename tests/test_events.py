@@ -1,0 +1,472 @@
+"""Discrete-event engine: tick-oracle equivalence, batched dispatch,
+time-based retirement, and the modeled SimServer backend.
+
+Load-bearing invariants:
+* ``engine="event"`` reproduces ``engine="tick"`` EXACTLY — identical
+  per-request token streams, first-token/finish stamps (equal to the
+  clock's float-accumulation epsilon), cold-start records, and
+  GPU-seconds — while processing strictly fewer dense ticks
+  whenever the trace has quiescent gaps.  The event engine only ever
+  jumps time it can prove no tick would have used.
+* ``select_many`` (one batched pass with virtual load accounting) makes
+  the SAME picks as the repeated single-``select`` loop it replaced, for
+  every shipped policy.
+* Idle retirement is time-based: the same config retires after the same
+  *seconds* under a ``LogicalClock`` and a ``WallClock`` (tick counts
+  used to mean milliseconds of real time under wall clocks).
+"""
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (AdapterAffine, Arrival, Autoscaler,
+                           AutoscalerConfig, ClusterConfig, ClusterRouter,
+                           ClusterServer, LeastLoaded, LogicalClock,
+                           SimProfile, SloAware, WallClock, arrival_stream,
+                           burst_wave_trace, load_azure_trace, poisson_trace,
+                           sim_server_factory)
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.serving.engine import ServeRequest
+
+KEY = jax.random.PRNGKey(3)
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, KEY)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# event == tick equivalence (real servers)
+# ---------------------------------------------------------------------------
+
+def _run(cfg, params, trace, engine, **kw):
+    router = ClusterRouter(cfg, params, n_servers=2,
+                           ccfg=ClusterConfig(n_devices=2, n_slots=4), **kw)
+    done = router.run(list(trace), engine=engine)
+    return router, done
+
+
+def _ts_eq(a, b):
+    """Timestamp equality to float-accumulation noise: the tick engine
+    sums ``t += tick_s`` once per tick while the event engine computes a
+    jump target in one multiply — same grid point, ~1e-14 apart."""
+    if a is None or b is None:
+        return a is b
+    return a == pytest.approx(b, abs=1e-9)
+
+
+def _assert_equivalent(r_evt, done_evt, r_tick, done_tick):
+    """The full equivalence contract: streams, stamps, cold starts,
+    GPU-seconds."""
+    evt = {r.rid: tuple(r.generated) for r in done_evt}
+    tick = {r.rid: tuple(r.generated) for r in done_tick}
+    assert evt == tick                                   # token streams
+    assert set(r_evt.metrics.records) == set(r_tick.metrics.records)
+    for rid, rt in r_tick.metrics.records.items():       # TTFT/finish stamps
+        re_ = r_evt.metrics.records[rid]
+        assert (re_.n_tokens, re_.server) == (rt.n_tokens, rt.server), rid
+        assert _ts_eq(re_.first_token, rt.first_token), rid
+        assert _ts_eq(re_.finished, rt.finished), rid
+    # cold-start accounting on the ROUTER clock must match; the wall-clock
+    # fields are real elapsed time and legitimately differ between runs
+    cs_e, cs_t = r_evt.metrics.coldstart, r_tick.metrics.coldstart
+    assert set(cs_e) == set(cs_t)
+    for sid in cs_e:
+        for k in ("served_while_loading", "loaded_bytes", "n_rounds"):
+            assert cs_e[sid][k] == cs_t[sid][k], (sid, k)
+        for k in ("time_to_ready", "time_to_fully_loaded"):
+            assert _ts_eq(cs_e[sid][k], cs_t[sid][k]), (sid, k)
+    assert r_evt.metrics.gpu_seconds == \
+        pytest.approx(r_tick.metrics.gpu_seconds, rel=1e-9, abs=1e-9)
+
+
+def test_event_equals_tick_poisson_with_gap(setup):
+    """A burst, a long quiet gap, a straggler: the event engine must jump
+    the gap (fewer dense ticks) yet reproduce the tick oracle exactly."""
+    cfg, params = setup
+    # straggler deliberately OFF the tick grid: the two engines' clocks
+    # drift apart by ~1e-14 over hundreds of ticks, so an arrival exactly
+    # on a grid point can land a tick apart — real traces never are
+    trace = poisson_trace(5.0, 0.6, seed=5, max_new_tokens=3) \
+        + [Arrival(3.013, max_new_tokens=3, seed=9)]
+    r_evt, done_evt = _run(cfg, params, trace, "event")
+    r_tick, done_tick = _run(cfg, params, trace, "tick")
+    assert len(done_evt) == len(trace)
+    _assert_equivalent(r_evt, done_evt, r_tick, done_tick)
+    # on_tick fires once per DENSE tick: the jump must be visible
+    assert len(r_evt.metrics.queue_depth) < len(r_tick.metrics.queue_depth)
+
+
+def test_event_equals_tick_burst_wave(setup):
+    cfg, params = setup
+    trace = burst_wave_trace(8, base_rate=1.0, wave_rate=12.0, wave_at=0.5,
+                             wave_len=0.5, seed=2, max_new_tokens=3)
+    r_evt, done_evt = _run(cfg, params, trace, "event")
+    r_tick, done_tick = _run(cfg, params, trace, "tick")
+    assert len(done_evt) == len(trace)
+    _assert_equivalent(r_evt, done_evt, r_tick, done_tick)
+
+
+def test_event_equals_tick_azure_fixture(setup):
+    cfg, params = setup
+    trace = load_azure_trace(os.path.join(FIXTURES, "azure_sample.csv"),
+                             minute_s=0.4, max_new_tokens=3,
+                             max_requests=12, seed=0)
+    r_evt, done_evt = _run(cfg, params, trace, "event")
+    r_tick, done_tick = _run(cfg, params, trace, "tick")
+    assert len(done_evt) == 12
+    _assert_equivalent(r_evt, done_evt, r_tick, done_tick)
+
+
+def test_run_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="unknown engine"):
+        _sim_router().run([], engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# event == tick equivalence (modeled backend, autoscaler, crash/rejoin)
+# ---------------------------------------------------------------------------
+
+def _sim_router(dispatch=None):
+    return ClusterRouter(
+        None, None, n_servers=2,
+        ccfg=ClusterConfig(n_devices=1, n_slots=4),
+        autoscaler=Autoscaler(AutoscalerConfig(
+            target_queue_per_server=4.0, ttft_slo_s=0.4, max_servers=6,
+            min_servers=1, scale_up_cooldown_ticks=3,
+            idle_seconds_before_retire=1.0)),
+        dispatch=dispatch or LeastLoaded(),
+        server_factory=sim_server_factory(SimProfile(ready_ticks=2,
+                                                     full_ticks=6)),
+        materialize_prompts=False)
+
+
+def _sim_trace():
+    # two bursts separated by a gap long enough to retire scaled-up
+    # servers, then a straggler that arrives at a shrunken fleet
+    a = poisson_trace(40.0, 1.0, seed=7, max_new_tokens=4,
+                      ttft_deadline_s=0.5)
+    b = [Arrival(t.time + 6.0, max_new_tokens=4, seed=t.seed,
+                 ttft_deadline_s=0.5)
+         for t in poisson_trace(30.0, 0.8, seed=8)]
+    return a + b + [Arrival(15.013, max_new_tokens=4, seed=1)]
+
+
+def test_event_equals_tick_simserver_autoscaled():
+    """Modeled backend under autoscaling: spawns, idle retires between
+    bursts, and the straggler all replay identically on both engines."""
+    trace = _sim_trace()
+    routers, dones = {}, {}
+    for eng in ("event", "tick"):
+        r = _sim_router()
+        dones[eng] = r.run(list(trace), engine=eng)
+        routers[eng] = r
+    assert len(dones["event"]) == len(trace)
+    _assert_equivalent(routers["event"], dones["event"],
+                       routers["tick"], dones["tick"])
+    # the scale-up/retire event sequence matches too (times and kinds)
+    evs = {e: [(t, k, d) for t, k, d in routers[e].metrics.events
+               if k in ("spawn", "retire")] for e in routers}
+    assert len(evs["event"]) == len(evs["tick"])
+    for (te, ke, de), (tt, kt, dt) in zip(evs["event"], evs["tick"]):
+        assert (ke, de) == (kt, dt)
+        assert _ts_eq(te, tt)
+    # the gap actually exercised retirement
+    assert any(k == "retire" for _, k, _ in routers["event"].metrics.events)
+    assert len(routers["event"].metrics.queue_depth) < \
+        len(routers["tick"].metrics.queue_depth)
+
+
+def test_event_equals_tick_crash_rejoin():
+    """Crash + scheduled rejoin: the tick engine counts rejoin delay in
+    loop iterations, the event engine schedules it in clock time — same
+    ticks, same streams."""
+    trace = _sim_trace()
+    routers, dones = {}, {}
+    for eng in ("event", "tick"):
+        r = _sim_router()
+        dones[eng] = r.run(list(trace), engine=eng,
+                           crash_after_completions=10, crash_server_id=1,
+                           rejoin_after_ticks=30)
+        routers[eng] = r
+    assert len(dones["event"]) == len(trace)
+    _assert_equivalent(routers["event"], dones["event"],
+                       routers["tick"], dones["tick"])
+    for r in routers.values():
+        kinds = [k for _, k, _ in r.metrics.events]
+        assert "crash" in kinds and "rejoin" in kinds
+
+
+def test_event_engine_consumes_streaming_iterator():
+    """A generator trace (never a list) replays identically to the same
+    arrivals passed as a list — the streaming contract of ``run``."""
+    trace = sorted(_sim_trace(), key=lambda a: a.time)
+    r_list = _sim_router()
+    done_list = r_list.run(list(trace), engine="event")
+    r_iter = _sim_router()
+    done_iter = r_iter.run(iter(trace), engine="event")
+    assert {r.rid: tuple(r.generated) for r in done_list} == \
+        {r.rid: tuple(r.generated) for r in done_iter}
+    _assert_equivalent(r_list, done_list, r_iter, done_iter)
+
+
+def test_arrival_stream_sorts_lists_passes_iterators():
+    tr = [Arrival(2.0), Arrival(0.5), Arrival(1.0)]
+    assert [a.time for a in arrival_stream(tr)] == [0.5, 1.0, 2.0]
+    gen = iter(tr)                        # assumed pre-sorted: passthrough
+    assert arrival_stream(gen) is gen
+
+
+def test_collect_finished_false_keeps_metrics_only():
+    trace = _sim_trace()
+    r = _sim_router()
+    done = r.run(list(trace), engine="event", collect_finished=False)
+    assert done == []
+    assert r.metrics.summary()["n_completed"] == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# select_many == repeated select (every shipped policy)
+# ---------------------------------------------------------------------------
+
+class _Batcher:
+    def __init__(self, active, n_free):
+        self.active = {r.rid: r for r in active}
+        self.free = list(range(n_free))
+
+
+class _Srv:
+    """ServingEngine scheduling surface; ``submit`` mirrors the real
+    engine so the repeated-select loop sees its own earlier picks."""
+
+    def __init__(self, active=(), n_free=4, active_adapter=None,
+                 adapter_params=(), queued=()):
+        self.batcher = _Batcher(active, n_free)
+        self.active_adapter = active_adapter
+        self.adapter_params = {a: None for a in adapter_params}
+        self._queued = list(queued)
+
+    def resident_adapters(self):
+        if self.batcher.active:
+            return {self.active_adapter}
+        return set(self.adapter_params) | {None, self.active_adapter}
+
+    def predicted_step_cost_s(self, default=0.05):
+        return default
+
+    def queued_requests(self):
+        return self._queued
+
+    def submit(self, req):
+        self._queued.append(req)
+
+
+class _Server:
+    def __init__(self, sid, state="serving", srv=None, ready_s=0.0):
+        self.sid = sid
+        self.state = state
+        self.srv = srv or _Srv()
+        self._ready_s = ready_s
+
+    @property
+    def admitting(self):
+        return self.state == "serving"
+
+    @property
+    def load(self):
+        return len(self.srv.batcher.active) + len(self.srv.queued_requests())
+
+    def can_serve(self, req):
+        return req.adapter is None or req.adapter in self.srv.adapter_params
+
+    def predicted_ready_s(self, now):
+        return 0.0 if self.state == "serving" else self._ready_s
+
+
+def _req(rid, adapter=None, deadline=None, max_new=8, n_gen=0):
+    r = ServeRequest(rid, np.zeros(4, np.int64), max_new_tokens=max_new,
+                     adapter=adapter, deadline=deadline)
+    r.generated = [0] * n_gen
+    return r
+
+
+def _scenario():
+    """Mixed fleet + mixed queue: loads, adapters, deadlines, a warming
+    server, a full server, an epoch-locked server."""
+    servers = [
+        _Server(0, srv=_Srv(active=[_req(90, "a", max_new=9, n_gen=2)],
+                            n_free=3, active_adapter="a",
+                            adapter_params=("a", "b"))),
+        _Server(1, srv=_Srv(adapter_params=("a", "b"))),
+        _Server(2, state="loading", ready_s=0.10,
+                srv=_Srv(adapter_params=("a", "b"))),
+        _Server(3, srv=_Srv(active=[_req(91, "b", max_new=12, n_gen=1)],
+                            n_free=0, active_adapter="b",
+                            adapter_params=("b",))),
+    ]
+    queue = [
+        _req(0, adapter="b", deadline=0.9),
+        _req(1, deadline=0.2),
+        _req(2, adapter="a"),
+        _req(3, adapter="a", deadline=0.2),
+        _req(4, adapter="b"),
+        _req(5),
+        _req(6, adapter="c"),                 # unservable: skipped by all
+        _req(7, deadline=0.5),
+    ]
+    return servers, queue
+
+
+def _repeated_select(policy, servers, queue, now, ccfg):
+    """The pre-refactor router loop: select one, pop it, submit it, ask
+    again — returns picks as (original queue index, sid)."""
+    remaining = list(enumerate(queue))
+    picks = []
+    while remaining:
+        got = policy.select([r for _, r in remaining], servers, now, ccfg)
+        if got is None:
+            break
+        idx, server = got
+        orig, req = remaining.pop(idx)
+        server.srv.submit(req)
+        picks.append((orig, server.sid))
+    return picks
+
+
+@pytest.mark.parametrize("mk", [
+    LeastLoaded,
+    lambda: SloAware(step_cost_s=0.05),
+    lambda: AdapterAffine(slo=SloAware(step_cost_s=0.05)),
+], ids=["least_loaded", "slo_aware", "adapter_affine"])
+def test_select_many_equals_repeated_select(mk):
+    ccfg = ClusterConfig(n_slots=4)
+    servers_a, queue_a = _scenario()
+    batched = [(i, s.sid)
+               for i, s in mk().select_many(queue_a, servers_a, 0.0, ccfg)]
+    servers_b, queue_b = _scenario()
+    looped = _repeated_select(mk(), servers_b, queue_b, 0.0, ccfg)
+    assert batched == looped
+    assert batched                            # scenario actually dispatches
+    assert all(i != 6 for i, _ in batched)    # unservable never placed
+
+
+def test_select_many_respects_virtual_capacity():
+    """One empty 4-slot server, six requests: exactly four place — the
+    batched pass must count its own picks against capacity."""
+    ccfg = ClusterConfig(n_slots=4)
+    servers = [_Server(0, srv=_Srv(adapter_params=("a",)))]
+    queue = [_req(i) for i in range(6)]
+    for mk in (LeastLoaded, lambda: SloAware(step_cost_s=0.05),
+               lambda: AdapterAffine(slo=SloAware(step_cost_s=0.05))):
+        picks = mk().select_many(queue, servers, 0.0, ccfg)
+        assert [i for i, _ in picks] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# time-based idle retirement (both clocks)
+# ---------------------------------------------------------------------------
+
+class _IdleSrv:
+    def __init__(self, sid, idle_since=None, idle_ticks=0, state="serving"):
+        self.sid = sid
+        self.state = state
+        self.idle_since = idle_since
+        self.idle_ticks = idle_ticks
+
+    @property
+    def admitting(self):
+        return self.state == "serving"
+
+
+def test_retire_fires_on_seconds_not_ticks():
+    sc = Autoscaler(AutoscalerConfig(min_servers=1,
+                                     idle_seconds_before_retire=2.0))
+    servers = [_IdleSrv(0, idle_since=10.0), _IdleSrv(1, idle_since=11.5)]
+    assert sc.decide(11.9, 0, 0.0, servers).retire == []
+    assert sc.decide(12.0, 0, 0.0, servers).retire == [0]   # 10.0 + 2.0
+    assert sc.next_retire_time(servers) == pytest.approx(12.0)
+
+
+def test_retire_seconds_derive_from_legacy_ticks():
+    """Configs that only set idle_ticks_before_retire keep their meaning:
+    N ticks * tick_s seconds under any clock."""
+    sc = Autoscaler(AutoscalerConfig(min_servers=0,
+                                     idle_ticks_before_retire=10))
+    servers = [_IdleSrv(0, idle_since=0.0)]
+    assert sc.decide(0.45, 0, 0.0, servers, tick_s=0.05).retire == []
+    assert sc.decide(0.50, 0, 0.0, servers, tick_s=0.05).retire == [0]
+    # fakes without idle_since fall back to the tick counter
+    bare = [_IdleSrv(1, idle_ticks=10)]
+    del bare[0].idle_since
+    assert sc.decide(0.0, 0, 0.0, bare).retire == [1]
+
+
+def test_next_retire_time_respects_min_servers():
+    sc = Autoscaler(AutoscalerConfig(min_servers=2,
+                                     idle_seconds_before_retire=1.0))
+    servers = [_IdleSrv(0, idle_since=0.0), _IdleSrv(1, idle_since=0.0)]
+    assert sc.next_retire_time(servers) is None       # at the floor
+    servers.append(_IdleSrv(2, idle_since=0.5))
+    assert sc.next_retire_time(servers) == pytest.approx(1.0)
+
+
+def test_wall_clock_retires_after_real_seconds():
+    """The same time-based config under a WallClock: a server idle for
+    idle_seconds_before_retire of REAL time retires (under the old
+    tick-count scheme 2 ticks of wall time meant microseconds)."""
+    sc = Autoscaler(AutoscalerConfig(min_servers=0,
+                                     idle_seconds_before_retire=0.05))
+    clock = WallClock()
+    srv = _IdleSrv(0, idle_since=clock.now())
+    assert sc.decide(clock.now(), 0, 0.0, [srv]).retire == []
+    time.sleep(0.06)
+    assert sc.decide(clock.now(), 0, 0.0, [srv]).retire == [0]
+
+
+def test_logical_clock_sleep_until_never_rewinds():
+    c = LogicalClock()
+    c.advance(1.0)
+    c.sleep_until(3.0)
+    assert c.now() == pytest.approx(3.0)
+    c.sleep_until(2.0)                      # jumps are forward-only
+    assert c.now() == pytest.approx(3.0)
+
+
+def test_wall_clock_sleep_until_blocks():
+    c = WallClock()
+    target = c.now() + 0.05
+    c.sleep_until(target)
+    assert c.now() >= target - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# stale readiness estimates (the crash/restart cache bug)
+# ---------------------------------------------------------------------------
+
+def test_ready_est_invalidated_on_crash_and_rejoin(setup):
+    """The cached rounds-to-ready estimate describes one load plan: a
+    crash or restart replaces that plan, so the cache must die with it
+    (SloAware would otherwise score a pre-crash readiness forever,
+    because the cache is keyed by ``now`` and dispatch reuses one tick's
+    ``now`` across the fleet)."""
+    cfg, params = setup
+    s = ClusterServer(0, cfg, params, ClusterConfig(n_devices=2, n_slots=2))
+    assert s.state == "loading"
+    s.predicted_ready_s(0.0)
+    assert s._ready_est is not None
+    s.crash()                               # whole-server: down
+    assert s._ready_est is None
+    s.rejoin()
+    s.predicted_ready_s(1.0)
+    assert s._ready_est is not None
+    s.crash([0])                            # partial: survivors recover
+    assert s.state == "recovering"
+    assert s._ready_est is None
