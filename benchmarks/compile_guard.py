@@ -65,6 +65,87 @@ def evaluate(cs, n_done: int, n_switches: int, n_buckets: int,
     return ("ok" if not msgs else "fail"), msgs
 
 
+def evaluate_repartition(cs, n_stage_counts: int, n_crash_events: int,
+                         chain_ok: bool):
+    """Judge the elastic-repartition guard run.  Returns (verdict,
+    messages) with verdict "ok" | "skip" | "fail".
+
+    The compile discipline under repartition: the fused decode step stays
+    at exactly ONE compile across every crash/rejoin cycle (the re-laid
+    cache keeps the original lowering's shapes), and the pipeline prefill
+    lowers at most once per DISTINCT stage count actually pipelined —
+    NEVER once per crash event.  The -1 sentinel (cache-size API missing)
+    skips the bounds, same contract as ``evaluate``.
+    """
+    msgs = []
+    if not chain_ok:
+        msgs.append("FAIL: engine lost its serving chain across "
+                    "repartition cycles — guard lost coverage")
+    if cs["decode_compiles"] < 0:
+        msgs.append("WARN: compile-count API unavailable in this jax "
+                    "version; repartition compile bounds not enforced")
+        return ("fail" if any(m.startswith("FAIL") for m in msgs)
+                else "skip"), msgs
+    if cs["decode_compiles"] != 1:
+        msgs.append(f"FAIL: decode compiled {cs['decode_compiles']}x "
+                    f"across {n_crash_events} crash/rejoin events (must "
+                    "stay 1) — a repartition retrace crept in")
+    if cs["pipeline_prefill_compiles"] > n_stage_counts:
+        msgs.append(f"FAIL: pipeline prefill compiled "
+                    f"{cs['pipeline_prefill_compiles']}x for "
+                    f"{n_stage_counts} distinct stage counts over "
+                    f"{n_crash_events} crash/rejoin events — repartition "
+                    "recompiles per event instead of per stage count")
+    return ("ok" if not msgs else "fail"), msgs
+
+
+def repartition_guard() -> int:
+    """Crash/rejoin cycles through ``PipeBoostEngine.repartition`` with a
+    fixed prefill shape: compiles must track DISTINCT stage counts, not
+    fault events.  On a single-XLA-device host the pipeline never engages
+    (0 stage counts, 0 pipeline compiles) and the decode bound still
+    guards."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import PipeBoostEngine
+
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=8)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = PipeBoostEngine(cfg, params, n_devices=4, max_len=64)
+    while eng.load_round():
+        pass
+    eng.enable_pipeline_prefill()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    tok = jnp.argmax(eng.prefill(batch), axis=-1).astype(jnp.int32)
+    eng.decode(tok)
+    stage_counts = {eng._pipe_n_stages} if eng._pipe_enabled else set()
+    n_crash_events = 0
+    chain_ok = True
+    for _ in range(3):
+        for dead, revive in (([3], []), ([], [3])):
+            st = eng.repartition(dead=dead, revive=revive)
+            n_crash_events += 1
+            if st["n_stages"] > 0:
+                stage_counts.add(st["n_stages"])
+            eng.decode(tok)                 # resumed stream, same lowering
+            tok = jnp.argmax(eng.prefill(batch),  # fresh admission through
+                             axis=-1).astype(jnp.int32)  # the new plan
+            chain_ok = chain_ok and eng.chain() is not None
+
+    cs = eng.compile_stats()
+    print(f"repartition: crash_events={n_crash_events} "
+          f"stage_counts={sorted(stage_counts)} "
+          f"pipeline_prefill_compiles={cs['pipeline_prefill_compiles']} "
+          f"decode_compiles={cs['decode_compiles']}")
+    verdict, msgs = evaluate_repartition(cs, len(stage_counts),
+                                         n_crash_events, chain_ok)
+    for m in msgs:
+        print(m)
+    print("repartition compile guard:", verdict.upper())
+    return 1 if verdict == "fail" else 0
+
+
 def main() -> int:
     cfg = get_arch("qwen3-1.7b").reduced(n_layers=2)
     key = jax.random.PRNGKey(0)
@@ -100,7 +181,7 @@ def main() -> int:
     for m in msgs:
         print(m)
     print("compile guard:", verdict.upper())
-    return 1 if verdict == "fail" else 0
+    return 1 if verdict == "fail" else repartition_guard()
 
 
 if __name__ == "__main__":

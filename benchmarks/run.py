@@ -25,6 +25,9 @@ Map (paper artifact -> bench):
                         re-prefill -> BENCH_recovery.json)
   (cold start, CPU)  -> bench_coldstart (overlapped vs load-then-serve
                         TTFT -> BENCH_coldstart.json)
+  (chaos, CPU)       -> bench_chaos (elastic repartition vs full
+                        migration under seeded fault schedules
+                        -> BENCH_chaos.json)
 
 Run ``python benchmarks/run.py [bench_name ...] [--small]`` to run a
 subset (CI smoke uses ``bench_recovery --small``).  JSON trajectories are
@@ -1041,6 +1044,235 @@ def bench_kernels():
     emit("kernel_lora_merge_interp", (time.perf_counter() - t0) / 3 * 1e6)
 
 
+def bench_chaos(small: bool = False):
+    """Elastic repartition vs full migration under partial crashes, plus
+    seeded chaos-schedule replay (functional).
+
+    Headline: a device of a 4-device server dies mid-decode.  Repartition
+    re-splits the pipeline over the survivors in place — reload only the
+    dead device's layers, re-lay live KV in one donated scatter, requests
+    never leave the server — vs FULL migration, which abandons the warm
+    server: drain with snapshots, cold-start a fresh server (pipelined
+    load + first-use compiles, the honest price of standing up capacity),
+    import, resume.  Post-crash TTFT = wall-clock from the crash until
+    every victim has its next token.  Asserts repartition is strictly
+    faster AND both paths finish with identical greedy continuations with
+    ZERO re-prefilled tokens (batcher prefill counters pinned).
+
+    Also replays a seeded ``ChaosSchedule`` (crash/partial_crash/rejoin)
+    twice on the modeled fleet — same seed must reproduce identical token
+    streams under BOTH the tick and event engines — and once against real
+    servers with ``partial_recovery="repartition"``, asserting every
+    request survives the fault sequence token-exact with
+    ``reprefill_tokens == 0``.  Appends to ``BENCH_chaos.json`` (the CI
+    fast-lane smoke runs this with ``--small``).
+    """
+    from repro.cluster import (Autoscaler, AutoscalerConfig, ChaosEvent,
+                               ClusterConfig, ClusterRouter, ClusterServer,
+                               LeastLoaded, SimProfile, poisson_trace,
+                               random_chaos, sim_server_factory)
+    from repro.models import transformer as T
+    from repro.serving.engine import ServeRequest, quantized_greedy
+
+    n_layers, n_devices = 4, 4        # need partial KV loss on one device
+    n_victims = 2 if small else 3
+    reps = 2 if small else 3
+    prompt_len, max_new = 48, 16
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=n_layers)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 250, size=prompt_len)
+               for _ in range(n_victims)]
+    ccfg = ClusterConfig(n_devices=n_devices, n_slots=4,
+                         partial_recovery="repartition")
+
+    def make_victim_server():
+        # victims submitted BEFORE ready so they admit the same tick the
+        # chain becomes viable — KV ownership still spans devices
+        s = ClusterServer(0, cfg, params, ccfg)
+        vs = [ServeRequest(i, p, max_new_tokens=max_new)
+              for i, p in enumerate(prompts)]
+        for r in vs:
+            s.submit(r)
+        while s.state == "loading":
+            s.tick(0.0)
+        cands = sorted(
+            (d for d in range(n_devices)
+             if 0 < sum(s.engine.lost_state_layers([d])) < cfg.n_layers),
+            key=lambda d: sum(s.engine.lost_state_layers([d])))
+        assert cands, "no partial-loss device — chain collapsed early"
+        return s, vs, cands[0]
+
+    def next_token_wait(server, vs, before):
+        now = 1.0
+        while not all(len(r.generated) > before[r.rid] or r.done
+                      for r in vs):
+            server.tick(now)
+            now += ccfg.tick_s
+
+    def repartition_window(s, vs, dev):
+        before = {r.rid: len(r.generated) for r in vs}
+        n_pref = s.srv.batcher.n_prefill_reqs
+        t0 = time.perf_counter()
+        s.crash([dev])
+        next_token_wait(s, vs, before)
+        dt = time.perf_counter() - t0
+        assert s.srv.batcher.n_prefill_reqs == n_pref, \
+            "repartition re-prefilled — zero-re-prefill invariant broken"
+        return dt
+
+    def migration_window(s, vs):
+        before = {r.rid: len(r.generated) for r in vs}
+        t0 = time.perf_counter()
+        drained = s.crash()           # whole-server loss: snapshots out
+        surv = ClusterServer(1, cfg, params, ccfg)
+        while surv.state == "loading":
+            surv.tick(0.0)
+        for r in drained:
+            assert surv.srv.admit_with_state(r), "import refused"
+        next_token_wait(surv, vs, before)
+        dt = time.perf_counter() - t0
+        assert surv.srv.batcher.n_prefill_reqs == 0
+        return dt, surv
+
+    # untimed warmup pair: first-use eager-dispatch caches (the relay's
+    # reconstruct path is un-jitted) land outside the timed windows
+    s, vs, dev = make_victim_server()
+    repartition_window(s, vs, dev)
+    s, vs, _ = make_victim_server()
+    migration_window(s, vs)
+
+    t_rep, t_mig = [], []
+    for _ in range(reps):
+        s_r, vs_r, dev = make_victim_server()
+        lost = sum(s_r.engine.lost_state_layers([dev]))
+        t_rep.append(repartition_window(s_r, vs_r, dev))
+        s_m, vs_m, _ = make_victim_server()
+        dt, surv = migration_window(s_m, vs_m)
+        t_mig.append(dt)
+    t_r, t_m = float(np.median(t_rep)), float(np.median(t_mig))
+    relayed = dict(s_r.last_recovery)
+    # equivalence oracle: the last rep's two paths ride to completion and
+    # must agree token-for-token (the bit-identical-streams claim)
+    now = 2.0
+    while any(not r.done for r in vs_r):
+        s_r.tick(now)
+        now += ccfg.tick_s
+    while any(not r.done for r in vs_m):
+        surv.tick(now)
+        now += ccfg.tick_s
+    for a, b in zip(vs_r, vs_m):
+        assert a.generated == b.generated, (a.rid, a.generated, b.generated)
+    assert t_r < t_m, (
+        f"post-crash TTFT regression: repartition {t_r * 1e3:.1f}ms is not "
+        f"faster than full migration {t_m * 1e3:.1f}ms")
+    emit("chaos_repartition_post_crash_ttft", t_r * 1e6,
+         f"lost_layers={lost} relayed={n_victims} reprefilled_tokens=0 "
+         f"speedup={t_m / t_r:.2f}x")
+    emit("chaos_full_migration_post_crash_ttft", t_m * 1e6,
+         f"migrated={n_victims} cold_survivor_included")
+
+    # seeded chaos replay on the modeled fleet: same seed => identical
+    # replay, and the tick and event engines execute the schedule the same
+    chaos_seed = 11
+    chaos = random_chaos(2 if small else 4, horizon=4.0, n_servers=2,
+                         seed=chaos_seed, rejoin_delay_s=1.0)
+    again = random_chaos(2 if small else 4, horizon=4.0, n_servers=2,
+                         seed=chaos_seed, rejoin_delay_s=1.0)
+    assert [(e.time, e.kind, e.server, e.devices) for e in chaos] == \
+        [(e.time, e.kind, e.server, e.devices) for e in again], \
+        "random_chaos is not deterministic by seed"
+    sim_trace = poisson_trace(30.0, 2.0, seed=7, max_new_tokens=4)
+
+    def sim_run(engine):
+        r = ClusterRouter(
+            None, None, n_servers=2,
+            ccfg=ClusterConfig(n_devices=1, n_slots=4),
+            autoscaler=Autoscaler(AutoscalerConfig(
+                target_queue_per_server=4.0, max_servers=4, min_servers=1,
+                idle_seconds_before_retire=1.0)),
+            dispatch=LeastLoaded(),
+            server_factory=sim_server_factory(SimProfile(ready_ticks=2,
+                                                         full_ticks=6)),
+            materialize_prompts=False)
+        t0 = time.perf_counter()
+        done = r.run(list(sim_trace), engine=engine, chaos=chaos)
+        return r, done, time.perf_counter() - t0
+
+    runs = {name: sim_run(eng) for name, eng in
+            (("event", "event"), ("tick", "tick"), ("event2", "event"))}
+    streams = {name: {r.rid: tuple(r.generated) for r in done}
+               for name, (_, done, _) in runs.items()}
+    assert streams["event"] == streams["tick"] == streams["event2"], \
+        "chaos replay diverged across engines / identical seeds"
+    s_evt = runs["event"][0].metrics.summary()
+    s_tick = runs["tick"][0].metrics.summary()
+    for k in ("n_completed", "gpu_seconds", "degraded_seconds",
+              "recovery_mode_repartition", "recovery_reprefill_tokens"):
+        assert abs(s_evt[k] - s_tick[k]) < 1e-9, (k, s_evt[k], s_tick[k])
+    emit("chaos_sim_replay", runs["event"][2] * 1e6,
+         f"n_events={len(chaos)} n_reqs={len(sim_trace)} "
+         f"tick==event seed={chaos_seed}")
+
+    # real servers under a chaos schedule: a partial crash + device rejoin
+    # mid-trace, elastic repartition recovery — every request survives the
+    # fault sequence token-exact, with zero re-prefilled tokens
+    real_trace = poisson_trace(8.0, 0.7, seed=3, max_new_tokens=4)
+    real_chaos = [ChaosEvent(0.313, "partial_crash", 0, (1,)),
+                  ChaosEvent(0.913, "rejoin", 0, (1,))]
+    router = ClusterRouter(cfg, params, n_servers=1, ccfg=ccfg)
+    t0 = time.perf_counter()
+    done = router.run(list(real_trace), chaos=real_chaos)
+    t_real = time.perf_counter() - t0
+    assert len(done) == len(real_trace)
+    summ = router.metrics.summary()
+    assert summ["recovery_reprefill_tokens"] == 0.0
+
+    def _solo(prompt, n):
+        lg, cache = T.forward(cfg, params,
+                              {"tokens": jnp.asarray(prompt)[None]},
+                              mode="prefill", max_len=96)
+        toks = [int(quantized_greedy(lg)[0])]
+        for _ in range(n - 1):
+            lg, cache = T.decode_step(
+                cfg, params, {"tokens": jnp.asarray([toks[-1]], jnp.int32)},
+                cache)
+            toks.append(int(quantized_greedy(lg)[0]))
+        return toks
+
+    for r in done:
+        assert r.generated == _solo(r.tokens, len(r.generated)), r.rid
+    emit("chaos_real_router_replay", t_real * 1e6,
+         f"reqs={len(done)} reprefill_tokens=0 "
+         f"mode_repartition={summ['recovery_mode_repartition']:.0f} "
+         f"degraded_s={summ['degraded_seconds']:.3f}")
+
+    path = "BENCH_chaos.json"
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"arch": cfg.name, "n_layers": n_layers,
+                   "n_devices": n_devices, "n_victims": n_victims,
+                   "prompt_len": prompt_len, "chaos_seed": chaos_seed,
+                   "small": small},
+        "ts": time.time(),
+        "repartition_post_crash_ttft_s": t_r,
+        "full_migration_post_crash_ttft_s": t_m,
+        "speedup": t_m / t_r,
+        "lost_layers": int(lost),
+        "relay": relayed,
+        "reprefill_tokens": 0,
+        "sim_replay": {"n_chaos_events": len(chaos),
+                       "n_completed": int(s_evt["n_completed"]),
+                       "tick_event_equal": True},
+        "real_replay": {
+            "n_reqs": len(done),
+            "mode_repartition": summ["recovery_mode_repartition"],
+            "degraded_seconds": summ["degraded_seconds"],
+        },
+    })
+    print(f"# wrote {path} ({n} entries)")
+
+
 # ---------------------------------------------------------------------------
 
 BENCHES = [
@@ -1049,7 +1281,7 @@ BENCHES = [
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
     bench_decode_hotpath, bench_recovery, bench_coldstart, bench_fleet,
-    bench_azure_day, bench_kernels,
+    bench_azure_day, bench_chaos, bench_kernels,
 ]
 
 

@@ -36,19 +36,22 @@ from repro.cluster.scheduler import (DISPATCH_POLICIES, AdapterAffine,
                                      make_dispatch)
 from repro.cluster.simserver import (SimProfile, SimServer,
                                      sim_server_factory)
-from repro.cluster.traces import (Arrival, arrival_stream, burst_wave_trace,
+from repro.cluster.traces import (Arrival, ChaosEvent, ChaosSchedule,
+                                  arrival_stream, burst_wave_trace,
                                   gamma_trace, iter_azure_trace,
-                                  load_azure_trace, load_trace,
-                                  merge_traces, poisson_trace, save_trace)
+                                  load_azure_trace, load_chaos, load_trace,
+                                  merge_traces, poisson_trace, random_chaos,
+                                  save_chaos, save_trace)
 
 __all__ = [
-    "AdapterAffine", "Arrival", "Autoscaler", "AutoscalerConfig", "Clock",
+    "AdapterAffine", "Arrival", "Autoscaler", "AutoscalerConfig",
+    "ChaosEvent", "ChaosSchedule", "Clock",
     "ClusterConfig", "ClusterMetrics", "ClusterRouter", "ClusterServer",
     "DISPATCH_POLICIES", "DispatchPolicy", "Fleet", "HotAdapterPlacement",
     "LeastLoaded", "LogicalClock", "PlacementPolicy", "PoolSpec",
     "PreloadAll", "ScaleDecision", "SimProfile", "SimServer", "SloAware",
     "WallClock", "arrival_stream", "burst_wave_trace", "gamma_trace",
-    "iter_azure_trace", "load_azure_trace", "load_trace", "make_dispatch",
-    "merge_traces", "percentile", "poisson_trace", "save_trace",
-    "sim_server_factory",
+    "iter_azure_trace", "load_azure_trace", "load_chaos", "load_trace",
+    "make_dispatch", "merge_traces", "percentile", "poisson_trace",
+    "random_chaos", "save_chaos", "save_trace", "sim_server_factory",
 ]

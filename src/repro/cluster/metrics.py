@@ -82,6 +82,10 @@ class ClusterMetrics:
     queue_depth: List[Tuple[float, int]] = field(default_factory=list)
     n_servers: List[Tuple[float, int]] = field(default_factory=list)
     gpu_seconds: float = 0.0
+    # device-seconds of capacity lost to partially-crashed servers that
+    # kept serving (repartition mode): sum over ticks of
+    # (dead devices on live servers) * tick duration
+    degraded_seconds: float = 0.0
     events: List[Tuple[float, str, str]] = field(default_factory=list)
     hotpath: Dict[str, float] = field(default_factory=dict)
     # crash-recovery accounting: how each displaced in-flight request was
@@ -151,12 +155,16 @@ class ClusterMetrics:
 
         ``n_tokens``: for "migrate", the prompt+prefix tokens whose state
         moved instead of being recomputed; for "reprefill", the tokens that
-        had to be re-prefilled on the survivor.
+        had to be re-prefilled on the survivor; for "repartition", the
+        tokens whose state stayed in place across the stage re-split
+        (none re-prefilled, none moved off-server).
         """
-        assert mode in ("migrate", "reprefill"), mode
+        assert mode in ("migrate", "reprefill", "repartition"), mode
         self.recovery[f"mode_{mode}"] = \
             self.recovery.get(f"mode_{mode}", 0.0) + 1.0
-        key = "migrated_tokens" if mode == "migrate" else "reprefill_tokens"
+        key = {"migrate": "migrated_tokens",
+               "reprefill": "reprefill_tokens",
+               "repartition": "repartition_tokens"}[mode]
         self.recovery[key] = self.recovery.get(key, 0.0) + float(n_tokens)
 
     def on_reconstruct(self, stats: Dict[str, float]) -> None:
@@ -173,6 +181,17 @@ class ClusterMetrics:
             self.recovery.get("mode_reconstruct", 0.0) \
             + float(stats.get("reconstructed_reqs", 0.0))
 
+    def on_relay(self, stats: Dict[str, float]) -> None:
+        """Accumulate one repartition ``relay_inflight`` stats dict (same
+        per-layer work counts as reconstruction, landed in one scatter);
+        requests themselves count toward ``mode_repartition`` via
+        ``on_recovery`` — this records only the re-lay work."""
+        for k, v in stats.items():
+            if k == "relayed_reqs":
+                continue              # surfaced as mode_repartition counts
+            key = f"relay_{k}"
+            self.recovery[key] = self.recovery.get(key, 0.0) + float(v)
+
     def record_hotpath(self, stats: Dict[str, float]) -> None:
         """Accumulate one server's decode hot-path stats (see
         ``serving.engine.ContinuousBatcher.hotpath_stats``): counters sum
@@ -180,8 +199,8 @@ class ClusterMetrics:
         functions), so per-server regressions stay visible in the total."""
         for k in ("n_decode_steps", "decode_time_s", "n_prefill_calls",
                   "n_prefill_reqs", "n_prefill_pipeline",
-                  "n_batched_imports", "decode_compiles",
-                  "prefill_compiles"):
+                  "n_batched_imports", "n_relay_scatters",
+                  "decode_compiles", "prefill_compiles"):
             self.hotpath[k] = self.hotpath.get(k, 0.0) + stats.get(k, 0.0)
 
     def record_coldstart(self, sid, rec: Dict) -> None:
@@ -246,6 +265,7 @@ class ClusterMetrics:
             "queue_depth_max": _gauge_max(self.queue_depth),
             "servers_max": _gauge_max(self.n_servers),
             "gpu_seconds": self.gpu_seconds,
+            "degraded_seconds": self.degraded_seconds,
             "tokens_total": float(sum(r.n_tokens for r in done)),
             "throughput_tok_s": (sum(r.n_tokens for r in done) / horizon
                                  if horizon > 0 else 0.0),
@@ -255,8 +275,9 @@ class ClusterMetrics:
         # always-present recovery counters (zero when no crash happened) so
         # trajectory diffs and the bench JSON have stable keys
         rec = {"mode_migrate": 0.0, "mode_reprefill": 0.0,
-               "mode_reconstruct": 0.0, "migrated_tokens": 0.0,
-               "reprefill_tokens": 0.0}
+               "mode_reconstruct": 0.0, "mode_repartition": 0.0,
+               "migrated_tokens": 0.0, "reprefill_tokens": 0.0,
+               "repartition_tokens": 0.0}
         rec.update(self.recovery)
         for k, v in rec.items():
             out[f"recovery_{k}"] = v

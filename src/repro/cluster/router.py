@@ -92,6 +92,16 @@ class ClusterConfig:
     epoch_budget: int = 4          # adapter epoch budget per server
     migrate_on_crash: bool = True  # KV-snapshot migration to survivors
     # (False = legacy re-prefill re-route; kept as the bench baseline)
+    partial_recovery: str = "reconstruct"  # partial-crash mode:
+    # "reconstruct" = rebuild dead layers in place, stage plan unchanged
+    # (PR 3 behaviour); "repartition" = elastic re-split of the pipeline
+    # over the survivors (engine.repartition + one-scatter relay_inflight)
+    repartition_ticks: int = 1     # service pause for a repartition — the
+    # re-split reuses resident segments, so dispatch prices it cheaper
+    # than the reconstruct pause (recovery_ticks)
+    unservable_retries: int = 3    # placement-miss rechecks before the
+    # "unservable" event fires (exponential backoff between rechecks)
+    retry_backoff_s: float = 0.2   # first backoff; doubles per attempt
 
 
 class ClusterServer:
@@ -133,6 +143,8 @@ class ClusterServer:
         self.last_recovery: Dict[str, float] = {}  # partial-crash rebuild
         # stats (kv_reconstruct work counts); read by the router right
         # after crash(), reset only at this server's next crash()
+        self.recovery_mode: Optional[str] = None  # how the last partial
+        # crash was handled ("reconstruct" | "repartition")
 
     # ---- scheduling surface ----------------------------------------------
     @property
@@ -161,6 +173,15 @@ class ClusterServer:
         """Does this server hold the weights the request needs?  Placement
         may have preloaded only a subset of the pool's adapters."""
         return req.adapter is None or req.adapter in self.srv.adapter_params
+
+    @property
+    def degraded_devices(self) -> int:
+        """Dead devices on a server still in the fleet — the capacity a
+        repartitioned server keeps *not* having (metrics accrue
+        ``degraded_seconds`` off this, per tick)."""
+        if self.state in ("down", "retired"):
+            return 0
+        return sum(1 for d in self.engine.devices if not d.alive)
 
     def predicted_ready_s(self, now: float) -> float:
         """Predicted seconds until this server can admit (0 when serving).
@@ -216,7 +237,10 @@ class ClusterServer:
         if self.state == "recovering":
             self._recover_left -= 1
             if self._recover_left <= 0:
-                self.engine.recover()   # re-plan + reload to a viable chain
+                if self.recovery_mode != "repartition":
+                    # re-plan + reload to a viable chain; a repartition
+                    # already did both synchronously inside crash()
+                    self.engine.recover()
                 self.state = "serving"
             return []
         if self.state in ("down", "retired"):
@@ -272,10 +296,15 @@ class ClusterServer:
         for cross-server re-routing; in-flight requests carry their
         ``KVSnapshot`` so survivors can resume them without re-prefill.
 
-        Partial crash (survivors remain): the server keeps its requests —
-        only the layers whose KV/state lived on the dead devices are
-        rebuilt in place via ``reconstruct_cache`` (Q-only recompute for
-        attention layers whose KV survived, §4.4.2); work stats land in
+        Partial crash (survivors remain): the server keeps its requests.
+        Under ``partial_recovery="reconstruct"`` only the layers whose
+        KV/state lived on the dead devices are rebuilt in place via
+        ``reconstruct_cache`` (Q-only recompute for attention layers whose
+        KV survived, §4.4.2), stage plan unchanged.  Under
+        ``"repartition"`` the engine elastically re-splits the pipeline
+        over the survivors (``engine.repartition``) and the live batch is
+        re-laid in ONE donated scatter (``relay_inflight``) — the service
+        pause is the shorter ``repartition_ticks``.  Work stats land in
         ``last_recovery`` for the router's metrics.  Returns [].
         """
         ids = (list(device_ids) if device_ids is not None
@@ -288,6 +317,7 @@ class ClusterServer:
         survivors = [d.idx for d in self.engine.devices
                      if d.alive and d.idx not in dead]
         self.last_recovery = {}
+        self.recovery_mode = None
         if not survivors:
             drained = self.srv.drain_inflight(
                 export_state=self.ccfg.migrate_on_crash)
@@ -295,10 +325,20 @@ class ClusterServer:
             self.state = "down"
             return drained
         lost = self.engine.lost_state_layers(ids)   # before devices die
+        if self.ccfg.partial_recovery == "repartition":
+            self.engine.repartition(dead=ids)   # crash + re-split + reload
+            if any(lost):
+                self.last_recovery = self.srv.relay_inflight(
+                    [not l for l in lost])
+            self.recovery_mode = "repartition"
+            self.state = "recovering"
+            self._recover_left = self.ccfg.repartition_ticks
+            return []
         self.engine.crash(ids)
         if any(lost):
             self.last_recovery = self.srv.reconstruct_inflight(
                 [not l for l in lost])
+        self.recovery_mode = "reconstruct"
         self.state = "recovering"
         self._recover_left = self.ccfg.recovery_ticks
         return []
@@ -312,6 +352,20 @@ class ClusterServer:
         self.fully_loaded_at = None
         self.served_while_loading = False
         self._ready_est = None   # estimate belongs to the pre-crash plan
+
+    def rejoin_devices(self, device_ids: Sequence[int]) -> None:
+        """Device-granular rejoin on a LIVE server: dead devices come back
+        empty and the stage plan widens over them.  Under
+        ``partial_recovery="repartition"`` the engine re-splits in flight
+        (in-flight requests keep decoding bit-identically); otherwise the
+        devices just revive into the existing plan.  Either way the
+        serving tick's background ``load_round`` refills them, since
+        ``fully_loaded`` flips back to False."""
+        self._ready_est = None
+        if self.ccfg.partial_recovery == "repartition":
+            self.engine.repartition(revive=list(device_ids))
+        else:
+            self.engine.revive(list(device_ids))
 
     def retire(self) -> List[ServeRequest]:
         """Voluntary scale-down: drain and hand back any leftovers (they
@@ -363,6 +417,10 @@ class ClusterRouter:
         self._unservable_flagged: set = set()   # rids already evented
         self._unchecked: List[ServeRequest] = []  # new since last scan
         self._recheck_unservable = False        # fleet changed: rescan all
+        # bounded-retry state for placement misses: rid -> (failed
+        # attempts, clock time of the next recheck); the "unservable"
+        # event only fires once the retries are exhausted
+        self._retry_state: Dict[int, tuple] = {}
         self._stuck_ticks = 0                   # liveness: no-progress run
         # a fleet shares one rid counter across pools so metrics keys are
         # globally unique; standalone routers own theirs
@@ -412,7 +470,26 @@ class ClusterRouter:
         """
         server = self.servers[sid]
         drained = server.crash(device_ids)
-        if server.last_recovery:
+        if getattr(server, "recovery_mode", None) == "repartition":
+            # in-place elastic re-split: every live request stays put with
+            # its whole decoded prefix — count each as repartition-
+            # recovered (zero tokens re-prefilled, zero migrated off)
+            if server.last_recovery:
+                self.metrics.on_relay(server.last_recovery)
+            n_rep = 0
+            for _, req in sorted(server.srv.batcher.active.items()):
+                self.metrics.on_recovery(
+                    "repartition", req.rid,
+                    len(req.tokens) + max(0, len(req.generated) - 1))
+                n_rep += 1
+            self.metrics.on_event(
+                self.clock, "recover",
+                f"server{self._metrics_sid(sid)} repartition reqs={n_rep} "
+                f"relayed={server.last_recovery.get('relayed_reqs', 0):.0f} "
+                f"kv_reused={server.last_recovery.get('kv_reused', 0):.0f} "
+                f"full_prefill="
+                f"{server.last_recovery.get('full_prefill', 0):.0f}")
+        elif server.last_recovery:
             self.metrics.on_reconstruct(server.last_recovery)
             self.metrics.on_event(
                 self.clock, "recover",
@@ -471,11 +548,29 @@ class ClusterRouter:
             self.queue.appendleft(req)
         self._recheck_unservable = True
 
-    def rejoin_server(self, sid: int) -> None:
+    def rejoin_server(self, sid: int,
+                      device_ids: Optional[Sequence[int]] = None) -> None:
         """Reboot a downed server into the fleet (fresh cold start; its
-        spawn stamp resets so cold-start metrics track the reboot)."""
-        self.servers[sid].rejoin()
-        self.servers[sid].spawned_at = self.clock
+        spawn stamp resets so cold-start metrics track the reboot) — or,
+        with ``device_ids`` on a LIVE server, rejoin just those devices
+        (``ClusterServer.rejoin_devices``: the pipeline widens back
+        without draining).  A retired server never rejoins: retirement is
+        final (the race with a scheduled rejoin resolves to a no-op,
+        surfaced as a ``rejoin_skipped`` event)."""
+        server = self.servers[sid]
+        if server.state == "retired":
+            self.metrics.on_event(self.clock, "rejoin_skipped",
+                                  f"server{self._metrics_sid(sid)} retired")
+            return
+        if device_ids is not None and server.state != "down":
+            server.rejoin_devices(device_ids)
+            self._recheck_unservable = True
+            self.metrics.on_event(self.clock, "rejoin",
+                                  f"server{self._metrics_sid(sid)} "
+                                  f"devices={sorted(device_ids)}")
+            return
+        server.rejoin()
+        server.spawned_at = self.clock
         self._recheck_unservable = True
         self.metrics.on_event(self.clock, "rejoin",
                               f"server{self._metrics_sid(sid)}")
@@ -520,21 +615,49 @@ class ClusterRouter:
             now = self.clock
         # visibility: a request no provisioned server can serve (placement
         # preloaded subsets) is skipped by the policies, not dispatched —
-        # surface that once per request so a starved adapter is diagnosable.
-        # Lazy: only requests queued since the last scan are checked, plus
-        # one full rescan whenever the fleet composition changes (spawn /
+        # surfaced once per request, after a bounded number of backoff-
+        # spaced rechecks (the fleet may still spawn/rejoin a server that
+        # preloads it).  Lazy: only requests queued since the last scan are
+        # checked, plus requests whose backoff deadline passed, plus one
+        # full rescan whenever the fleet composition changes (spawn /
         # crash / rejoin / retire) — not O(queue) every tick.
         live = [s for s in self.servers
                 if s.state not in ("down", "retired")]
-        to_check = self.queue if self._recheck_unservable else self._unchecked
+        to_check = (list(self.queue) if self._recheck_unservable
+                    else list(self._unchecked))
+        if self._retry_state:
+            due = {rid for rid, (_, t_due) in self._retry_state.items()
+                   if t_due <= now + 1e-9}
+            if due:
+                seen = {r.rid for r in to_check}
+                to_check.extend(r for r in self.queue
+                                if r.rid in due and r.rid not in seen)
         for req in to_check:
-            if req.rid not in self._unservable_flagged \
-                    and not any(s.can_serve(req) for s in live):
+            if req.rid in self._unservable_flagged:
+                continue
+            if any(s.can_serve(req) for s in live):
+                self._retry_state.pop(req.rid, None)  # servable again
+                continue
+            n, t_due = self._retry_state.get(req.rid, (0, -math.inf))
+            if t_due > now + 1e-9:
+                continue               # backoff not elapsed: recheck later
+            n += 1
+            if n > self.ccfg.unservable_retries:
+                self._retry_state.pop(req.rid, None)
                 self._unservable_flagged.add(req.rid)
                 self.metrics.on_event(
                     now, "unservable",
                     f"req{req.rid} adapter={req.adapter!r}: no live server "
-                    "preloads it (placement)")
+                    f"preloads it after {self.ccfg.unservable_retries} "
+                    "retries (placement)")
+            else:
+                delay = self.ccfg.retry_backoff_s * (2 ** (n - 1))
+                self._retry_state[req.rid] = (n, now + delay)
+                self.metrics.on_event(
+                    now, "retry",
+                    f"req{req.rid} adapter={req.adapter!r} attempt "
+                    f"{n}/{self.ccfg.unservable_retries} "
+                    f"next_check=+{delay:.2f}s")
         self._unchecked = []
         self._recheck_unservable = False
         if not hasattr(self.dispatch, "select_many"):
@@ -655,6 +778,12 @@ class ClusterRouter:
         dt = (self.ccfg.tick_s if self._prev_tick_t is None
               else max(0.0, now - self._prev_tick_t))
         self._prev_tick_t = now
+        # degraded capacity: dead devices on servers that kept serving
+        # (repartition mode) accrue device-seconds the fleet is short
+        degraded = sum(getattr(s, "degraded_devices", 0)
+                       for s in self.servers)
+        if degraded:
+            self.metrics.degraded_seconds += degraded * dt
         self.metrics.on_tick(now, self.pending, len(
             [s for s in self.servers if s.state not in ("down", "retired")]),
             busy, dt)
@@ -693,9 +822,14 @@ class ClusterRouter:
         normally, exactly as under the polling loop)."""
         busy = sum(self.ccfg.n_devices for s in self.servers
                    if s.state not in ("down", "retired"))
+        degraded = sum(getattr(s, "degraded_devices", 0)
+                       for s in self.servers)
         lead = t_wake - self.ccfg.tick_s
         if self._prev_tick_t is not None and lead > self._prev_tick_t:
             self.metrics.gpu_seconds += busy * (lead - self._prev_tick_t)
+            if degraded:
+                self.metrics.degraded_seconds += \
+                    degraded * (lead - self._prev_tick_t)
             self._prev_tick_t = lead
 
     def _jump_to(self, t_wake: float) -> None:
@@ -705,11 +839,50 @@ class ClusterRouter:
         self._settle_gap(t_wake)
         self._clock.sleep_until(t_wake)
 
+    def _apply_chaos(self, ev) -> None:
+        """Execute one ``ChaosEvent``.  Events that no longer make sense
+        (crashing a down/retired server, rejoining a live one) resolve to
+        deterministic no-ops surfaced as ``chaos_skip`` events, so a seeded
+        schedule replays identically however the fleet evolved."""
+        skip = None
+        server = (self.servers[ev.server]
+                  if 0 <= ev.server < len(self.servers) else None)
+        if server is None:
+            skip = "no such server"
+        elif server.state == "retired":
+            skip = "retired"
+        elif ev.kind in ("crash", "partial_crash"):
+            if server.state == "down":
+                skip = "already down"
+            else:
+                devices = (list(ev.devices)
+                           if ev.kind == "partial_crash" and ev.devices
+                           else None)
+                self.crash_server(ev.server, devices)
+                return
+        elif ev.kind == "rejoin":
+            if server.state == "down":
+                self.rejoin_server(ev.server)
+                return
+            devs = getattr(getattr(server, "engine", None), "devices", [])
+            dead = [d.idx for d in devs if not d.alive]
+            want = [i for i in ev.devices if i in dead] or dead
+            if ev.devices and want:
+                self.rejoin_server(ev.server, want)
+                return
+            skip = "nothing to rejoin"
+        else:
+            skip = f"unknown kind {ev.kind!r}"
+        self.metrics.on_event(
+            self.clock, "chaos_skip",
+            f"{ev.kind} server{self._metrics_sid(ev.server)}: {skip}")
+
     def run(self, trace, *, max_ticks: int = 200_000,
             crash_after_completions: Optional[int] = None,
             crash_server_id: int = 1,
             crash_devices: Optional[Sequence[int]] = None,
             rejoin_after_ticks: Optional[int] = None,
+            chaos=None,
             engine: str = "event",
             collect_finished: bool = True) -> List[ServeRequest]:
         """Replay ``trace`` to completion; returns finished requests.
@@ -729,6 +902,13 @@ class ClusterRouter:
         narrows it) and re-route its work; with ``rejoin_after_ticks`` the
         downed server reboots into the fleet that many ticks later.
 
+        ``chaos``: a :class:`repro.cluster.traces.ChaosSchedule` (or any
+        iterable of ``ChaosEvent``) of scripted crash / partial-crash /
+        rejoin faults.  Each event applies at the first tick whose
+        pre-advance clock has reached its time — the arrival-admission
+        rule — so a seeded schedule replays identically under both
+        engines.
+
         ``collect_finished=False`` drops finished requests instead of
         returning them (million-row replays keep metrics, not payloads).
         """
@@ -741,6 +921,8 @@ class ClusterRouter:
         completed: List[ServeRequest] = []
         n_completed = 0
         crashed = False
+        chaos_left: Deque = deque(sorted(chaos or (),
+                                         key=lambda e: e.time))
         # tick engine counts iterations; event engine schedules clock time
         rejoin_at: Optional[float] = None
         t = 0
@@ -748,6 +930,8 @@ class ClusterRouter:
             while nxt is not None and nxt.time <= self.clock:
                 self.submit(nxt)
                 nxt = next(stream, None)
+            while chaos_left and chaos_left[0].time <= self.clock:
+                self._apply_chaos(chaos_left.popleft())
             if engine == "event" and self.quiescent:
                 pending_rejoin = (rejoin_at is not None
                                   and self.servers[crash_server_id].state
@@ -758,9 +942,14 @@ class ClusterRouter:
                 # count), so the last dense tick it needs is the one AT
                 # rejoin_at - tick_s — waking at rejoin_at itself would
                 # reboot the server one tick late
+                extra = [rejoin_at - tick_s] if pending_rejoin else []
+                if chaos_left:
+                    # chaos applies pre-tick against the pre-advance clock
+                    # (the arrival rule): wake at the event time itself
+                    extra.append(chaos_left[0].time)
                 t_evt = self.next_event_time(
                     next_arrival=None if nxt is None else nxt.time,
-                    extra=(rejoin_at - tick_s,) if pending_rejoin else ())
+                    extra=extra)
                 if t_evt is None:
                     break           # nothing can ever wake the fleet again
                 if t_evt - now > tick_s * 1e-6:
@@ -793,9 +982,10 @@ class ClusterRouter:
                     and ((t - 1 == rejoin_at) if engine == "tick"
                          else self.clock >= rejoin_at - 1e-9)):
                 self.rejoin_server(crash_server_id)
-            if nxt is None and self.pending == 0:
+            if nxt is None and self.pending == 0 and not chaos_left:
                 break
-            if self.stalled(arrivals_left=nxt is not None):
+            if self.stalled(arrivals_left=(nxt is not None
+                                           or bool(chaos_left))):
                 break
         self.finalize_metrics()
         return completed

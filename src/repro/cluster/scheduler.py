@@ -235,10 +235,18 @@ class SloAware:
     Warming servers are candidates (``consider_warming``): mid-burst it
     is often faster to queue on a server whose chain is one load-round
     from viable than behind a deep epoch on a serving one.
+
+    Repartitioned servers (elastic recovery after a partial crash) stay
+    in the candidate pool: their short ``repartition_ticks`` recovery
+    window is already priced through ``predicted_ready_s``.  The lasting
+    cost — fewer devices carrying the same pipeline — is priced per
+    missing device via ``degraded_penalty_s_per_device`` (default 0 =
+    capacity loss is free, matching pre-repartition behavior).
     """
     name: str = "slo_aware"
     step_cost_s: Optional[float] = None
     consider_warming: bool = True
+    degraded_penalty_s_per_device: float = 0.0
 
     def _step_cost(self, server, ccfg) -> float:
         if self.step_cost_s is not None:
@@ -272,6 +280,11 @@ class SloAware:
                 t += cost
             else:
                 t += max(1, q.max_new_tokens - len(q.generated)) * cost
+        # degraded capacity: a repartitioned server runs the same pipeline
+        # on fewer devices — flat penalty per dead device (sims without a
+        # device list read as 0)
+        t += self.degraded_penalty_s_per_device * \
+            getattr(server, "degraded_devices", 0)
         return t
 
     def _virtual_wait_s(self, server, assigned, req, ccfg) -> float:

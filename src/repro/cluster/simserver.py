@@ -190,6 +190,13 @@ class SimServer:
         return self.state == "serving"
 
     @property
+    def degraded_devices(self) -> int:
+        """Dead-device count while serving (surface parity with
+        ``ClusterServer``).  Modeled servers have no device list, so a
+        SimServer is never partially degraded: 0."""
+        return 0
+
+    @property
     def load(self) -> int:
         return self.srv.n_pending
 

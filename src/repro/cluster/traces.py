@@ -25,8 +25,9 @@ from __future__ import annotations
 import csv
 import heapq
 import json
-from dataclasses import asdict, dataclass
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+from dataclasses import asdict, dataclass, field
+from typing import (Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -308,3 +309,101 @@ def prompt_tokens(arrival: Arrival, vocab_size: int) -> np.ndarray:
     rng = np.random.default_rng(arrival.seed)
     return rng.integers(0, min(vocab_size, 250),
                         size=arrival.prompt_len).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Chaos schedules (seeded fault injection)
+# ---------------------------------------------------------------------------
+
+CHAOS_KINDS = ("crash", "partial_crash", "rejoin")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled fault: kill a whole server, kill some of its devices,
+    or bring a server / a device list back.
+
+    ``devices`` names the affected device ids for ``partial_crash`` and
+    for a device-granular ``rejoin``; empty means the whole server.
+    Times should sit OFF the router's tick grid (like arrival times) so
+    the tick and event engines agree on the applying tick bit-for-bit.
+    """
+    time: float
+    kind: str                       # one of CHAOS_KINDS
+    server: int
+    devices: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in CHAOS_KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r}")
+        object.__setattr__(self, "devices", tuple(self.devices))
+
+
+@dataclass
+class ChaosSchedule:
+    """A replayable fault-injection script, executed by
+    ``ClusterRouter.run(chaos=...)`` identically under the tick and event
+    engines: an event applies at the first tick whose (pre-advance) clock
+    has reached its time — exactly the arrival-admission rule."""
+    events: List[ChaosEvent] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.events = sorted(self.events, key=lambda e: e.time)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+
+def save_chaos(path: str, schedule: ChaosSchedule) -> None:
+    """Write a chaos schedule as versioned JSON (replayable, diffable)."""
+    with open(path, "w") as f:
+        json.dump({"version": 1,
+                   "events": [asdict(e) for e in schedule.events]},
+                  f, indent=1)
+
+
+def load_chaos(path: str) -> ChaosSchedule:
+    """Read a ``save_chaos`` JSON file back into a ``ChaosSchedule``."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != 1:
+        raise ValueError(f"unknown chaos version {doc.get('version')!r}")
+    return ChaosSchedule([ChaosEvent(**e) for e in doc["events"]])
+
+
+def random_chaos(n_faults: int, horizon: float, n_servers: int, *,
+                 seed: int = 0, n_devices: int = 0,
+                 partial_prob: float = 0.0,
+                 rejoin_delay_s: float = 1.0,
+                 tick_s: float = 0.05) -> ChaosSchedule:
+    """Seeded random fault script: ``n_faults`` crashes uniformly over
+    ``(0, horizon)``, each paired with a rejoin ``rejoin_delay_s`` later.
+
+    With ``partial_prob`` > 0 (needs ``n_devices``), a fault is a
+    ``partial_crash`` of a random proper device subset, rejoined at device
+    granularity.  Event times are nudged off the ``tick_s`` grid so tick
+    and event engines replay them on the same tick.  Deterministic by
+    ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    events: List[ChaosEvent] = []
+    for _ in range(n_faults):
+        t = float(rng.uniform(0.0, horizon))
+        if abs(t / tick_s - round(t / tick_s)) < 1e-6:   # off-grid nudge
+            t += 0.37 * tick_s
+        sid = int(rng.integers(n_servers))
+        partial = (n_devices > 1 and rng.random() < partial_prob)
+        if partial:
+            k = int(rng.integers(1, n_devices))          # proper subset
+            devs = tuple(sorted(rng.choice(n_devices, size=k,
+                                           replace=False).tolist()))
+            events.append(ChaosEvent(t, "partial_crash", sid, devs))
+            events.append(ChaosEvent(t + rejoin_delay_s, "rejoin", sid,
+                                     devs))
+        else:
+            events.append(ChaosEvent(t, "crash", sid))
+            events.append(ChaosEvent(t + rejoin_delay_s, "rejoin", sid))
+    return ChaosSchedule(events)

@@ -102,13 +102,18 @@ class PipeBoostEngine:
         self._load_lock = threading.RLock()
         self._fill_thread: Optional[threading.Thread] = None
         self._fill_stop = threading.Event()
+        # remembered so a repartition can hand the fill off to a fresh
+        # thread over the new plan (same cadence and budget)
+        self._fill_interval_s = 0.0
+        self._fill_budget: Optional[int] = None
         self._reset_load_accounting()
         # pipeline (shard_map) prefill path — disabled until enabled
         self._pipe_enabled = False
+        self._pipe_requested = False
         self._pipe_mesh = None
         self._pipe_n_stages = 0
         self._pipe_n_micro = 0
-        self._pipe_fns: Dict[Tuple[int, int], Callable] = {}
+        self._pipe_fns: Dict[Tuple[int, int, int], Callable] = {}
         self.prefill_backend_used: Optional[str] = None
         self._prefill_jit = jax.jit(
             lambda p, b: transformer.forward(cfg, p, b, mode="prefill",
@@ -187,6 +192,8 @@ class PipeBoostEngine:
         overlaps with jitted serving steps on the main thread."""
         if self._fill_thread is not None and self._fill_thread.is_alive():
             return self._fill_thread
+        self._fill_interval_s = interval_s
+        self._fill_budget = budget
         self._fill_stop.clear()
 
         def _run():
@@ -375,10 +382,12 @@ class PipeBoostEngine:
         self._pipe_n_micro = max(1, n_micro)
         self._pipe_fns = {}
         self._pipe_enabled = True
+        self._pipe_requested = True
         return True
 
     def _pipeline_fits(self, batch: Dict) -> bool:
-        if not self._pipe_enabled or self.strategy != "pipeline":
+        if not self._pipe_enabled or self._pipe_mesh is None \
+                or self.strategy != "pipeline":
             return False
         tokens = batch.get("tokens", batch.get("embeds"))
         B = tokens.shape[0]
@@ -388,7 +397,11 @@ class PipeBoostEngine:
         return (B // n_data) % self._pipe_n_micro == 0
 
     def _pipeline_prefill_fn(self, B: int, S: int) -> Callable:
-        key = (B, S)
+        # Keyed by stage count as well as shape: a repartition that moves
+        # to a stage count seen before reuses its compiles verbatim, and a
+        # NEW stage count costs at most one lowering per shape — compiles
+        # scale with distinct stage plans, never with crash events.
+        key = (self._pipe_n_stages, B, S)
         if key not in self._pipe_fns:
             from repro.distributed.pipeline import build_pipeline_prefill
             self._pipe_fns[key] = jax.jit(build_pipeline_prefill(
@@ -400,7 +413,7 @@ class PipeBoostEngine:
     def serving_pipeline_fits(self, P: int, S: int) -> bool:
         """Shape pre-check for ``serving_pipeline_prefill`` (the batcher's
         dispatch): row count must split over the ('data', 'stage') mesh."""
-        if not self._pipe_enabled:
+        if not self._pipe_enabled or self._pipe_mesh is None:
             return False
         n_data = self._pipe_mesh.shape["data"]
         return P % n_data == 0 and (P // n_data) % self._pipe_n_micro == 0
@@ -517,9 +530,20 @@ class PipeBoostEngine:
     # ---------------- failures + recovery (§4.4) -----------------------------
 
     def crash(self, device_ids: Sequence[int]):
+        """Mark devices dead.  If the background fill thread is running it
+        is stopped *cleanly*: the stop flag is raised before the devices
+        are marked (a round in flight holds ``_load_lock`` and finishes
+        atomically, so its ``LoadRound`` accounting lands exactly once),
+        then the thread is joined OUTSIDE the lock — no leaked thread, no
+        double-counted bytes, and no half-recorded round."""
+        was_filling = self.fill_running
+        if was_filling:
+            self._fill_stop.set()
         with self._load_lock:
             for i in device_ids:
                 self.devices[i].alive = False
+        if was_filling:
+            self.stop_fill(join=True)
         self.events.append(("crash", list(device_ids)))
 
     def restart(self, n_devices: Optional[int] = None):
@@ -555,6 +579,108 @@ class PipeBoostEngine:
             alive = [d.idx for d in self.devices if d.alive]
             self.plan = reassign(self.plan, self.loaded_map(), alive)
         self.events.append(("revive", list(device_ids)))
+
+    def _repartition_pipeline(self) -> int:
+        """Rebuild the shard_map prefill mesh for the current alive-device
+        count (variable-stage mesh, FlexPipe direction).  Picks the largest
+        stage count that divides the layer stack and fits the visible XLA
+        devices — possibly over a SUBSET of them (``stage_mesh``), so stage
+        counts that don't divide the device count still pipeline.  Falls
+        back to the single lowering when no split works (decode is
+        unaffected either way).  Never clears ``_pipe_fns``: entries are
+        keyed by (n_stages, B, S), so a stage count seen before reuses its
+        compiles and a new one costs at most one lowering per shape."""
+        if not self._pipe_requested:
+            return self._pipe_n_stages if self._pipe_enabled else 0
+        n_alive = sum(1 for d in self.devices if d.alive)
+        n_xla = len(jax.devices())
+        n_stages = 0
+        for s in range(min(n_alive, n_xla, self.cfg.n_layers), 1, -1):
+            if self.cfg.n_layers % s == 0:
+                n_stages = s
+                break
+        if not n_stages:
+            self._pipe_enabled = False
+            self._pipe_mesh = None
+            self._pipe_n_stages = 0
+            return 0
+        if n_stages != self._pipe_n_stages or not self._pipe_enabled:
+            from repro.distributed.pipeline import stage_mesh
+            self._pipe_mesh = stage_mesh(n_stages)
+            self._pipe_n_stages = n_stages
+            self._pipe_enabled = True
+        return n_stages
+
+    def repartition(self, dead: Sequence[int] = (),
+                    revive: Sequence[int] = ()) -> Dict[str, Any]:
+        """Elastic in-flight repartition: re-split the pipeline over a
+        CHANGED device set — shrink (e.g. 4→3 stages) when devices die,
+        widen back when they rejoin — without draining in-flight work.
+
+        Steps: (1) stop the background fill cleanly (remembering cadence);
+        (2) apply the membership change and ``reassign`` contiguous stage
+        spans over the new alive set; (3) load until a viable chain exists
+        again; (4) rebuild the shard_map mesh for the new stage count
+        (compiles keyed per stage count, never per crash event); (5) re-lay
+        live decode state onto the new partition via ``reconstruct_cache``
+        — only layers whose KV actually died are recomputed, surviving
+        layers are reused verbatim, so the continued token stream is
+        bit-identical and zero tokens are re-prefilled; (6) hand the fill
+        back off to a fresh thread over the new plan if one was running.
+
+        Returns a stats dict (also appended as a ``repartition`` event).
+        """
+        dead = [int(i) for i in dead]
+        revive = [int(i) for i in revive]
+        was_filling = self.fill_running
+        if was_filling:
+            self._fill_stop.set()
+            self.stop_fill(join=True)
+        with self._load_lock:
+            for i in dead:
+                self.devices[i].alive = False
+            for i in revive:
+                d = self.devices[i]
+                if d.alive:
+                    continue
+                d.alive = True
+                d.loaded = set()
+                d.kv_segments = set()
+            alive = [d.idx for d in self.devices if d.alive]
+            if not alive:
+                raise EngineError("all devices dead")
+            self.plan = reassign(self.plan, self.loaded_map(), alive)
+        while self.chain() is None:
+            if not self.load_round():
+                raise EngineError("cannot complete chain after repartition")
+        n_stages = self._repartition_pipeline()
+        stats: Dict[str, Any] = {
+            "dead": dead, "revive": revive, "n_alive": len(alive),
+            "n_stages": n_stages, "lost_layers": 0,
+        }
+        ch = self.chain()
+        if self._cache is not None and self._tokens_seen is not None:
+            surviving_kv: Set[int] = set()
+            for d in self.devices:
+                if d.alive:
+                    surviving_kv |= d.kv_segments
+            has_state = self._segment_layer_mask(surviving_kv)
+            stats["lost_layers"] = int(sum(1 for h in has_state if not h))
+            if not all(has_state):
+                self._cache, rstats = reconstruct_cache(
+                    self.cfg, self._merged_params,
+                    {"tokens": self._tokens_seen}, self._cache, has_state,
+                    max_len=self.max_len)
+                stats["reconstruct"] = rstats
+            # KV ownership follows the NEW chain after the re-lay
+            for d in self.devices:
+                d.kv_segments = set()
+            for dev, seg in ch:
+                self.devices[dev].kv_segments.add(seg)
+        if was_filling and not self.fully_loaded:
+            self.start_fill(self._fill_interval_s, self._fill_budget)
+        self.events.append(("repartition", stats))
+        return stats
 
     def recover(self) -> Dict[str, Any]:
         """Pipeline-parallel recovery: layer reassignment + (if mid-decode)

@@ -36,6 +36,29 @@ from repro.models import transformer
 from repro.models.transformer import _apply_norm
 
 
+def stage_mesh(n_stages: int, n_data: Optional[int] = None) -> Mesh:
+    """('data', 'stage') mesh over a SUBSET of the visible XLA devices.
+
+    ``jax.make_mesh`` wants the axis product to equal the device count;
+    elastic repartition needs stage counts that do NOT divide it (3 stages
+    on an 8-device host after a 4→3 shrink).  This builds the mesh over the
+    first ``n_data * n_stages`` devices instead — the idle remainder simply
+    doesn't participate in the belt.  ``n_data`` defaults to the largest
+    replica count that fits.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if n_data is None:
+        n_data = max(1, len(devs) // n_stages)
+    need = n_data * n_stages
+    if need > len(devs):
+        raise ValueError(
+            f"stage_mesh({n_stages=}, {n_data=}) needs {need} devices, "
+            f"have {len(devs)}")
+    arr = np.array(devs[:need]).reshape(n_data, n_stages)
+    return Mesh(arr, ("data", "stage"))
+
+
 def _uniform_kind(cfg: ArchConfig) -> str:
     kinds = set(cfg.layer_kinds())
     if len(kinds) != 1:

@@ -48,7 +48,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.models import transformer
-from repro.serving.snapshot import KVSnapshot, export_slot
+from repro.serving.snapshot import KVSnapshot, export_slot, export_slots
 
 BUCKET_MIN = 16
 
@@ -142,6 +142,8 @@ class ContinuousBatcher:
         self.n_migrated_in = 0
         self.migrated_tokens_in = 0
         self.n_batched_imports = 0       # import_snapshots scatter calls
+        self.n_relay_scatters = 0        # relay_inflight scatter calls
+                                         # (repartition re-lay)
         self._sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
         self._build_jits()
 
@@ -425,10 +427,15 @@ class ContinuousBatcher:
         ``import_snapshot`` it into a free slot and continue decoding with
         ZERO re-prefilled tokens instead of recomputing prompt+prefix.
         """
+        items = sorted(self.active.items())
+        if export_state and items:
+            # batched export: one host transfer per kind leaf total
+            snaps = export_slots(self.cache, [s for s, _ in items],
+                                 arch=self.cfg.name, max_len=self.max_len)
+            for (_, req), snap in zip(items, snaps):
+                req.snapshot = snap
         drained = []
-        for slot, req in sorted(self.active.items()):
-            if export_state:
-                req.snapshot = self.export_snapshot(slot)
+        for slot, req in items:
             req.slot = -1
             self.free.append(slot)
             drained.append(req)
@@ -582,6 +589,75 @@ class ContinuousBatcher:
                 totals.get("reconstructed_reqs", 0.0) + 1.0
         return totals
 
+    def relay_inflight(self, has_state: Sequence[bool]) -> Dict[str, float]:
+        """Repartition re-lay of the live batch onto a changed partition:
+        rebuild the layers whose KV died for EVERY active slot, then land
+        all rebuilt rows in ONE donated scatter (the same ``fused_scatter``
+        batched migration uses — no new compile) instead of one import per
+        slot.  Slots with equal merged-sequence length share one batched
+        ``reconstruct_cache`` call (exact — no padding), so the recompute
+        cost scales with the number of distinct lengths, not requests.
+        Requests keep their slots and their sampled prefix; decode resumes
+        bit-identically with ZERO re-prefilled tokens.  Surviving layers
+        are reused verbatim (Q-only recompute where possible), like
+        ``reconstruct_inflight``, whose per-layer work stats this returns
+        summed over requests, under ``relayed_reqs``."""
+        from repro.core.kv_reconstruct import reconstruct_cache
+        totals: Dict[str, float] = {}
+        if not self.active or all(has_state):
+            return totals
+        P = self.n_slots
+        slots = np.zeros((P,), np.int32)
+        pos = np.zeros((P,), np.int32)
+        valid = np.zeros((P,), bool)
+        rows: Dict[str, Dict[str, np.ndarray]] = {}
+        groups: Dict[int, List] = {}
+        for j, (slot, req) in enumerate(sorted(self.active.items())):
+            seq = np.asarray(req.tokens, np.int64)
+            tail = req.generated[:-1]
+            if tail:
+                seq = np.concatenate([seq, np.asarray(tail, np.int64)])
+            groups.setdefault(len(seq), []).append((j, slot, seq))
+        for _, members in sorted(groups.items()):
+            g_slots = np.asarray([s for _, s, _ in members], np.int32)
+            tokens = jnp.asarray(np.stack([q for _, _, q in members]))
+            view = {"pos": self.cache["pos"][g_slots]}
+            for kind in ("attn", "ssm", "rec"):
+                if kind in self.cache:
+                    view[kind] = {leaf: arr[:, g_slots]
+                                  for leaf, arr in self.cache[kind].items()}
+            rebuilt, stats = reconstruct_cache(
+                self.cfg, self.params, {"tokens": tokens}, view, has_state,
+                max_len=self.max_len)
+            for kind in ("attn", "ssm", "rec"):
+                if kind not in rebuilt:
+                    continue
+                dst = rows.setdefault(kind, {})
+                for leaf, arr in rebuilt[kind].items():
+                    a = np.asarray(arr)
+                    if leaf not in dst:
+                        dst[leaf] = np.zeros(
+                            (a.shape[0], P) + a.shape[2:], a.dtype)
+                    for gi, (j, _, _) in enumerate(members):
+                        dst[leaf][:, j] = a[:, gi]
+            for gi, (j, slot, seq) in enumerate(members):
+                slots[j] = slot
+                pos[j] = len(seq)
+                valid[j] = True
+            # per-layer/token work counts are batch-invariant in
+            # reconstruct_cache: scale by group size to keep the
+            # sum-over-requests semantics of the per-slot path
+            for k, v in stats.items():
+                totals[k] = totals.get(k, 0.0) + float(v) * len(members)
+            totals["relayed_reqs"] = totals.get("relayed_reqs", 0.0) \
+                + float(len(members))
+        self.cache = self._scatter_fused(
+            self.cache, rows, jnp.asarray(slots), jnp.asarray(pos),
+            jnp.asarray(valid))
+        self.n_relay_scatters += 1
+        self._io_dirty = True
+        return totals
+
     @property
     def n_active(self) -> int:
         return len(self.active)
@@ -612,6 +688,7 @@ class ContinuousBatcher:
             "n_prefill_reqs": float(self.n_prefill_reqs),
             "n_prefill_pipeline": float(self.n_prefill_pipeline),
             "n_batched_imports": float(self.n_batched_imports),
+            "n_relay_scatters": float(self.n_relay_scatters),
         }
         s.update({k: float(v) for k, v in self.compile_stats().items()})
         return s
@@ -798,6 +875,12 @@ class ServingEngine:
         """Partial-crash in-place rebuild of the live batch's lost layers
         (see ContinuousBatcher.reconstruct_inflight)."""
         return self.batcher.reconstruct_inflight(has_state)
+
+    def relay_inflight(self, has_state) -> Dict[str, float]:
+        """Repartition re-lay: rebuild lost layers for the whole live
+        batch and land them in one donated scatter (see
+        ContinuousBatcher.relay_inflight)."""
+        return self.batcher.relay_inflight(has_state)
 
     # ---- scheduling surface (consumed by cluster/scheduler.py policies) --
     def resident_adapters(self) -> set:

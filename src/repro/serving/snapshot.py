@@ -88,3 +88,29 @@ def export_slot(cache: Dict, slot: int, *, arch: str,
                           for leaf, arr in cache[kind].items()}
     return KVSnapshot(arch=arch, max_len=max_len,
                       pos=int(np.asarray(cache["pos"][slot])), rows=rows)
+
+
+def export_slots(cache: Dict, slots, *, arch: str,
+                 max_len: int) -> list:
+    """Batched multi-slot export (whole-server drain path).
+
+    One device->host transfer per kind leaf TOTAL — the full (L, B, ...)
+    leaf crosses once and is sliced on host — instead of one transfer per
+    (slot, leaf) as repeated ``export_slot`` calls would do.  Slices are
+    copied so the snapshots don't pin the full-batch host buffers.
+    Returns snapshots in the order of ``slots``.
+    """
+    slots = list(slots)
+    if not slots:
+        return []
+    host: Dict[str, Dict[str, np.ndarray]] = {}
+    for kind in ("attn", "ssm", "rec"):
+        if kind in cache:
+            host[kind] = {leaf: np.asarray(arr)
+                          for leaf, arr in cache[kind].items()}
+    pos = np.asarray(cache["pos"])
+    return [KVSnapshot(arch=arch, max_len=max_len, pos=int(pos[s]),
+                       rows={kind: {leaf: a[:, s].copy()
+                                    for leaf, a in leaves.items()}
+                             for kind, leaves in host.items()})
+            for s in slots]

@@ -8,8 +8,11 @@ suite must stay collectable in minimal environments without it, so when the
 import fails we install the deterministic fallback from
 ``tests/_hypothesis_fallback.py`` before test modules are imported.
 """
+import gc
 import os
 import sys
+
+import pytest
 
 sys.path.insert(0, os.path.dirname(__file__))
 
@@ -23,3 +26,20 @@ except ImportError:
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (skipped in CI's fast lane)")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_executable_count():
+    """XLA:CPU JITs every compiled executable into the one pytest process;
+    the global jit caches keep them all alive, and a few hundred tests in
+    the compiler itself segfaults on the next compile.  Dropping the jit
+    caches at module teardown bounds the live-executable count — modules
+    compile their own shapes anyway, so the cross-module hit rate this
+    sacrifices is small."""
+    yield
+    try:
+        import jax
+        jax.clear_caches()
+    except Exception:
+        pass
+    gc.collect()

@@ -204,3 +204,52 @@ def test_cluster_layer_meets_its_own_gate():
     """The CI invocation verbatim: the shipped cluster layer satisfies
     the gate it is guarded by."""
     assert gate_main(["src/repro/cluster", "--fail-under", "95"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# elastic-repartition compile-guard verdicts
+# ---------------------------------------------------------------------------
+
+def test_repartition_guard_ok_per_stage_count():
+    from benchmarks.compile_guard import evaluate_repartition
+    v, msgs = evaluate_repartition(
+        {"decode_compiles": 1, "pipeline_prefill_compiles": 3},
+        n_stage_counts=3, n_crash_events=6, chain_ok=True)
+    assert v == "ok" and not msgs
+    # single-XLA-device host: pipeline never engages, decode still guards
+    v, _ = evaluate_repartition(
+        {"decode_compiles": 1, "pipeline_prefill_compiles": 0},
+        n_stage_counts=0, n_crash_events=6, chain_ok=True)
+    assert v == "ok"
+
+
+def test_repartition_guard_fails_on_per_event_recompiles():
+    from benchmarks.compile_guard import evaluate_repartition
+    # pipeline recompiled once per crash event instead of per stage count
+    v, msgs = evaluate_repartition(
+        {"decode_compiles": 1, "pipeline_prefill_compiles": 6},
+        n_stage_counts=2, n_crash_events=6, chain_ok=True)
+    assert v == "fail"
+    assert any("per event" in m for m in msgs)
+    # decode retraced across a repartition
+    v, _ = evaluate_repartition(
+        {"decode_compiles": 2, "pipeline_prefill_compiles": 2},
+        n_stage_counts=2, n_crash_events=6, chain_ok=True)
+    assert v == "fail"
+
+
+def test_repartition_guard_sentinel_skips_never_passes():
+    from benchmarks.compile_guard import evaluate_repartition
+    v, msgs = evaluate_repartition(
+        {"decode_compiles": -1, "pipeline_prefill_compiles": 0},
+        n_stage_counts=2, n_crash_events=6, chain_ok=True)
+    assert v == "skip" and any("WARN" in m for m in msgs)
+    # lost coverage fails even under the sentinel
+    v, _ = evaluate_repartition(
+        {"decode_compiles": -1, "pipeline_prefill_compiles": 0},
+        n_stage_counts=2, n_crash_events=6, chain_ok=False)
+    assert v == "fail"
+    v, _ = evaluate_repartition(
+        {"decode_compiles": 1, "pipeline_prefill_compiles": 2},
+        n_stage_counts=2, n_crash_events=6, chain_ok=False)
+    assert v == "fail"

@@ -470,3 +470,65 @@ def test_ready_est_invalidated_on_crash_and_rejoin(setup):
     s.crash([0])                            # partial: survivors recover
     assert s.state == "recovering"
     assert s._ready_est is None
+
+
+# ---------------------------------------------------------------------------
+# overlapping faults: double crash, rejoin racing retirement
+# ---------------------------------------------------------------------------
+
+def test_double_crash_same_server_is_consistent():
+    """Crashing an already-down server is a no-op: no double-drain, no
+    duplicate crash bookkeeping, and the later rejoin still reboots it."""
+    trace = _sim_trace()
+    r = _sim_router()
+    arrivals = sorted(trace, key=lambda a: a.time)
+    i, crashes = 0, 0
+    done = []
+    for _ in range(200_000):
+        while i < len(arrivals) and arrivals[i].time <= r.clock:
+            r.submit(arrivals[i])
+            i += 1
+        done.extend(r.tick())
+        if crashes == 0 and r.servers[1].load > 0:
+            r.crash_server(1)
+            drained_twice = r.servers[1].crash()   # second fault: no-op
+            assert drained_twice == []             # nothing left to drain
+            assert r.servers[1].state == "down"
+            r.rejoin_server(1)
+            crashes = 1
+        if i >= len(arrivals) and r.pending == 0:
+            break
+    assert crashes == 1, "crash scenario never armed"
+    assert len(done) == len(trace)
+    assert r.metrics.summary()["n_completed"] == len(trace)
+    kinds = [k for _, k, _ in r.metrics.events]
+    assert kinds.count("crash") == 1               # booked exactly once
+    assert "rejoin" in kinds
+
+
+def test_rejoin_racing_retirement_resolves_to_noop():
+    """A scheduled rejoin landing after the autoscaler retired the server
+    resolves to a surfaced no-op (``rejoin_skipped``): retirement is
+    final, and the replay still completes on the rest of the fleet."""
+    r = _sim_router()
+    r.servers[1].retire()
+    r.metrics.on_event(r.clock, "retire", "server1")
+    r.rejoin_server(1)                             # the racing rejoin
+    assert r.servers[1].state == "retired"
+    kinds = [k for _, k, _ in r.metrics.events]
+    assert "rejoin_skipped" in kinds
+    assert "rejoin" not in kinds
+    # a chaos-scheduled rejoin resolves to the schedule-level no-op
+    # (``chaos_skip``), on both engines
+    from repro.cluster import ChaosEvent, ChaosSchedule
+    chaos = ChaosSchedule([ChaosEvent(0.213, "rejoin", 1)])
+    trace = poisson_trace(20.0, 1.0, seed=4, max_new_tokens=3)
+    for eng in ("event", "tick"):
+        r2 = _sim_router()
+        r2.servers[1].retire()
+        done = r2.run(list(trace), engine=eng, chaos=chaos)
+        assert len(done) == len(trace)
+        kinds2 = [k for _, k, _ in r2.metrics.events]
+        assert "chaos_skip" in kinds2
+        assert "rejoin" not in kinds2
+        assert r2.servers[1].state == "retired"

@@ -308,3 +308,39 @@ def test_batched_import_partial_capacity():
     for r in accepted:
         assert r.generated == _solo(cfg, params, prompts[r.rid], 8)
     assert resident.generated == _solo(cfg, params, resident.tokens, 12)
+
+
+def test_crash_of_migration_target_mid_import():
+    """Overlapping faults: the server that absorbed a migrated request
+    crashes too, mid-decode.  The snapshot chain (A -> B -> C) survives a
+    second hop and the final tokens still equal the uninterrupted run —
+    snapshots compose."""
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, KEY)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, 250, size=15)
+
+    a = _engine(cfg, params)
+    req = ServeRequest(0, prompt, max_new_tokens=12)
+    a.submit(req)
+    for _ in range(4):
+        a.step()
+    [req] = a.drain_inflight()               # first crash: A dies
+    pos_a = req.snapshot.pos
+
+    b = _engine(cfg, params)
+    assert b.admit_with_state(req)
+    for _ in range(3):
+        b.step()                             # the import decodes a while
+    assert not req.done
+    [req] = b.drain_inflight()               # second crash: the TARGET dies
+    assert req.snapshot is not None
+    assert req.snapshot.pos > pos_a          # B's progress rode along
+
+    c = _engine(cfg, params)
+    assert c.admit_with_state(req)
+    assert c.batcher.n_prefill_reqs == 0     # still zero re-prefill
+    while c.batcher.n_active:
+        c.step()
+    assert req.done
+    assert req.generated == _solo(cfg, params, prompt, 12)
