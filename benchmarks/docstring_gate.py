@@ -1,10 +1,15 @@
 """Docstring-coverage gate (stdlib-only ``interrogate`` stand-in).
 
+**Superseded in CI** by rule R6 of the ``pbcheck`` suite
+(``src/repro/analysis/``, see ``docs/ANALYSIS.md``), which reports the
+same walk per missing item instead of as a percentage — fixable,
+suppressible, and baselinable like any other finding.  This module
+stays as the standalone percentage reporter (and its walk remains
+under test in ``tests/test_bench_guards.py``).
+
 Walks Python files, counts docstring-carrying definitions — modules,
 public classes, and public functions/methods — and fails (exit 1) when
-coverage drops below ``--fail-under``.  CI runs it over
-``src/repro/cluster/`` so the documentation layer added alongside the
-event engine cannot silently rot as the cluster code grows.
+coverage drops below ``--fail-under``.
 
 "Public" means the name has no leading underscore.  Mirroring
 ``interrogate``'s defaults: dunders (incl. ``__init__`` — constructors

@@ -109,6 +109,8 @@ def append_keyed_entry(path: str, entry: dict) -> int:
 # ---------------------------------------------------------------------------
 
 def bench_ttft(lora_rank: int = 0):
+    """Fig. 8/10: modeled cold-start TTFT, PipeBoost vs ServerlessLLM
+    and Transformers across the paper models."""
     tag = "lora_" if lora_rank else ""
     for cfg in PAPER_MODELS:
         rows = {}
@@ -124,6 +126,7 @@ def bench_ttft(lora_rank: int = 0):
 
 
 def bench_ttft_lora():
+    """Fig. 10: the TTFT comparison with rank-16 LoRA stages enabled."""
     bench_ttft(lora_rank=16)
 
 
@@ -132,6 +135,8 @@ def bench_ttft_lora():
 # ---------------------------------------------------------------------------
 
 def bench_cold_start_breakdown():
+    """Fig. 1/9, Table 1: cold-start stage breakdown (load vs compute
+    share of TTFT) per system."""
     for cfg in (MISTRAL_7B, OPT_13B):
         for strat in ("serverlessllm", "pipeboost"):
             r = sim.simulate_cold_start(cfg, GPU_PAPER, 2, strat)
@@ -161,6 +166,8 @@ def bench_breakdown_lora():
 # ---------------------------------------------------------------------------
 
 def bench_strategy_crossover():
+    """Fig. 6: mean request latency, pipeline vs per-device single
+    strategy, across request rates (the switch crossover)."""
     for rps in (0.5, 2.0, 8.0, 20.0, 40.0):
         p = sim.simulate_request_latency(OPT_1_3B, GPU_PAPER, 4, rps,
                                          strategy="pipeline")
@@ -176,6 +183,8 @@ def bench_strategy_crossover():
 # ---------------------------------------------------------------------------
 
 def bench_scaling_shapes():
+    """Fig. 11/12: TTFT reduction across input lengths and batch
+    sizes."""
     for prompt in (200, 500):
         sl = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, 2,
                                      "serverlessllm", prompt=prompt)
@@ -199,6 +208,8 @@ def bench_scaling_shapes():
 # ---------------------------------------------------------------------------
 
 def bench_scaling_devices():
+    """Fig. 13: TTFT scaling with device count (more devices -> less
+    model per device -> faster first token)."""
     base = None
     for n in (1, 2, 4, 8):
         pb = sim.simulate_cold_start(MISTRAL_7B, GPU_PAPER, n, "pipeboost")
@@ -215,6 +226,8 @@ def bench_scaling_devices():
 # ---------------------------------------------------------------------------
 
 def bench_adapter_epochs():
+    """Fig. 14: epoch-based adapter scheduling vs eager switching
+    (latency mean/variance and merge counts across rates)."""
     for rps in (5.0, 10.0, 15.0, 20.0, 25.0):
         ep = simulate_adapter_serving(
             EpochSchedulerPolicy(epoch_budget=8, max_batch=8), rps=rps,
@@ -233,6 +246,8 @@ def bench_adapter_epochs():
 # ---------------------------------------------------------------------------
 
 def bench_recovery_loading():
+    """Fig. 15/16: modeled recovery from device failure during loading
+    (pipeline-parallel reassignment vs full reload)."""
     pp = sim.simulate_loading_failure(MISTRAL_7B, GPU_PAPER, 4,
                                       failed=[1, 2], mode="pp")
     fl = sim.simulate_loading_failure(MISTRAL_7B, GPU_PAPER, 4,
@@ -254,6 +269,8 @@ def bench_recovery_loading():
 # ---------------------------------------------------------------------------
 
 def bench_recovery_inference():
+    """Fig. 17: throughput halt and dip when devices fail mid-inference
+    (pipeline-parallel recovery vs full restart)."""
     for mode in ("pp", "full"):
         tl = sim.simulate_inference_failure(MISTRAL_7B, GPU_PAPER, 4,
                                             mode=mode)
@@ -269,6 +286,8 @@ def bench_recovery_inference():
 # ---------------------------------------------------------------------------
 
 def bench_engine_functional():
+    """Real-engine wall-clock on a reduced model: cold prefill off one
+    load round, 8 decode steps, and crash+recover with KV reuse."""
     from repro.core.engine import PipeBoostEngine, generate
     from repro.models import transformer as T
     cfg = get_arch("qwen3-1.7b").reduced(n_layers=8)
@@ -1021,6 +1040,8 @@ def bench_azure_day(small: bool = False):
 
 
 def bench_kernels():
+    """Pallas kernel wall-clock (interpret mode on CPU; TPU target):
+    flash attention and the fused LoRA merge."""
     from repro.kernels import ops
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (1, 256, 8, 64), jnp.float32)
@@ -1292,7 +1313,17 @@ def main(argv=None) -> None:
     ap.add_argument("--small", action="store_true",
                     help="reduced sizes for benches that support it "
                          "(CI fast-lane smoke)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the bench registry (name, --small "
+                         "support, one-line description) and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for b in BENCHES:
+            doc = (inspect.getdoc(b) or "").split("\n")[0]
+            small = ("--small"
+                     if "small" in inspect.signature(b).parameters else "")
+            print(f"{b.__name__:28s} {small:7s} {doc}")
+        return
     sel = BENCHES
     if args.benches:
         by_name = {b.__name__: b for b in BENCHES}

@@ -1,0 +1,31 @@
+"""``pbcheck``: stdlib-``ast`` static analysis enforcing the PipeBoost
+invariants that only fail at runtime — and usually late.
+
+The latency wins live or die on properties nothing type-checks: the
+fused decode path must never retrace, donated buffers must never be
+read after the jit call that consumed them, and the background-fill
+thread must touch shared engine state only under ``_load_lock`` (the
+PR 7 crash-races-fill fix was exactly such a bug found late).  This
+package mechanizes those invariants the way ``compile_guard``
+mechanized compile counts at runtime:
+
+==== =======================================================
+rule invariant
+==== =======================================================
+R1   donated buffers are dead after the donating call
+R2   no host syncs inside the decode/prefill hot-path modules
+R3   fill-thread-shared engine state accessed under the lock
+R4   no retrace hazards at jitted call sites
+R5   chaos kinds / recovery modes handled exhaustively
+R6   public APIs in the documented layers carry docstrings
+==== =======================================================
+
+Run it as ``python -m repro.analysis`` (or ``tools/pbcheck.py``);
+findings can be silenced inline with ``# pbcheck: disable=R3 (reason)``
+or accepted into a checked-in baseline file.  CI fails on any NEW
+finding.  See ``docs/ANALYSIS.md`` for the rule catalogue and workflow.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.cli import main, run_check
+
+__all__ = ["Finding", "main", "run_check"]

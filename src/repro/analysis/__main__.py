@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — the pbcheck static-analysis CLI."""
+import sys
+
+from repro.analysis.cli import main
+
+sys.exit(main())

@@ -1,0 +1,203 @@
+"""Schema validator for the ``BENCH_*.json`` trajectory files.
+
+The benchmark suite (``benchmarks/run.py``) appends one keyed entry per
+(commit, config) to the checked-in ``BENCH_*.json`` files; the schemas
+here mirror the per-file field tables in ``docs/BENCHMARKS.md``.  CI
+runs this in the fast lane so a bench refactor that silently renames or
+drops a metric field fails the build instead of corrupting the
+trajectory (plots and regression checks key on these names).
+
+Rules per entry:
+
+* ``ts`` (epoch seconds) is always required;
+* ``commit`` + ``config`` are required *together* — the single pre-PR-6
+  legacy row (no keying) is tolerated only when BOTH are absent;
+* required metric fields must be present with the right type (bools
+  are not numbers);
+* unknown extra fields are reported as warnings, not errors, so new
+  metrics can land before the schema table catches up.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.bench_schema          # repo root
+    PYTHONPATH=src python -m repro.analysis.bench_schema BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+NUM = "number"          # int or float (bool excluded)
+INT = "int"
+STR = "str"
+DICT = "dict"
+BOOL = "bool"
+
+_TYPES = {
+    NUM: lambda v: isinstance(v, (int, float)) and not isinstance(v, bool),
+    INT: lambda v: isinstance(v, int) and not isinstance(v, bool),
+    STR: lambda v: isinstance(v, str),
+    DICT: lambda v: isinstance(v, dict),
+    BOOL: lambda v: isinstance(v, bool),
+}
+
+
+@dataclass
+class EntrySchema:
+    """Field table for one entry shape (see docs/BENCHMARKS.md)."""
+    required: Dict[str, str]
+    optional: Dict[str, str] = field(default_factory=dict)
+
+
+# BENCH_fleet.json holds two entry shapes: the dispatch-policy
+# comparison (bench_fleet) and the full-day Azure replay rows
+# (bench_azure_day), discriminated by config["bench"].
+_FLEET_DISPATCH = EntrySchema(required={
+    "n_requests": INT,
+    "least_loaded_ttft_p99_s": NUM, "least_loaded_ttft_mean_s": NUM,
+    "slo_aware_ttft_p99_s": NUM, "slo_aware_ttft_mean_s": NUM,
+    "adapter_affine_ttft_p99_s": NUM, "adapter_affine_ttft_mean_s": NUM,
+    "slo_p99_cut_vs_least_loaded": NUM,
+})
+_FLEET_AZURE_DAY = EntrySchema(
+    required={
+        "n_requests": INT, "n_completed": INT, "wall_s": NUM,
+        "slo_attainment": NUM, "slo_n": INT, "gpu_seconds": NUM,
+        "ttft_p50": NUM, "ttft_p90": NUM, "ttft_p95": NUM,
+        "ttft_p99": NUM, "ttft_p99.9": NUM,
+    },
+    # tick_wall_s/event_speedup only exist where both engines were run
+    optional={"tick_wall_s": NUM, "event_speedup": NUM})
+
+SCHEMAS: Dict[str, EntrySchema] = {
+    "BENCH_coldstart.json": EntrySchema(required={
+        "overlapped_ttft_s": NUM, "load_then_serve_ttft_s": NUM,
+        "speedup": NUM, "time_to_ready_wall_s": NUM,
+        "time_to_fully_loaded_wall_s": NUM, "loaded_bytes": INT,
+        "total_bytes": INT, "decode_compiles": INT,
+        "tokens_identical": BOOL,
+    }),
+    "BENCH_decode_hotpath.json": EntrySchema(required={
+        "fused_steps_per_s": NUM, "legacy_steps_per_s": NUM,
+        "speedup": NUM, "tokens_per_s": NUM, "n_buckets": INT,
+        "decode_compiles": INT, "prefill_compiles": INT,
+    }),
+    "BENCH_recovery.json": EntrySchema(
+        required={
+            "migrate_post_crash_ttft_s": NUM,
+            "reprefill_post_crash_ttft_s": NUM, "speedup": NUM,
+            "migrated_reqs": INT, "migrated_tokens": INT,
+            "reprefill_tokens_baseline": INT,
+        },
+        # partial-crash + snapshot-transfer extensions (PR 4/PR 7)
+        optional={
+            "partial_reconstruct": DICT,
+            "snapshot_payload_bytes": INT, "snapshot_rows_bytes": INT,
+            "snapshot_xfer_nvlink_s": NUM, "snapshot_xfer_pcie_s": NUM,
+        }),
+    "BENCH_chaos.json": EntrySchema(required={
+        "repartition_post_crash_ttft_s": NUM,
+        "full_migration_post_crash_ttft_s": NUM, "speedup": NUM,
+        "lost_layers": INT, "reprefill_tokens": INT,
+        "relay": DICT, "sim_replay": DICT, "real_replay": DICT,
+    }),
+    "BENCH_fleet.json": _FLEET_DISPATCH,   # shape picked per entry below
+}
+
+_COMMON = {"ts": NUM, "commit": STR, "config": DICT}
+
+
+def _schema_for(fname: str, entry: dict) -> EntrySchema:
+    """Pick the entry schema (fleet discriminates on config.bench)."""
+    if fname == "BENCH_fleet.json" \
+            and entry.get("config", {}).get("bench") == "azure_day":
+        return _FLEET_AZURE_DAY
+    return SCHEMAS[fname]
+
+
+def validate_file(path: str) -> Tuple[List[str], List[str]]:
+    """Validate one BENCH file -> (errors, warnings)."""
+    fname = os.path.basename(path)
+    errors: List[str] = []
+    warnings: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{fname}: unreadable ({e})"], []
+    if not isinstance(doc, dict) or not isinstance(doc.get("entries"), list):
+        return [f"{fname}: top level must be {{\"entries\": [...]}}"], []
+    for i, entry in enumerate(doc["entries"]):
+        where = f"{fname}[{i}]"
+        if not isinstance(entry, dict):
+            errors.append(f"{where}: entry is not an object")
+            continue
+        if "ts" not in entry or not _TYPES[NUM](entry["ts"]):
+            errors.append(f"{where}: missing/invalid `ts` (epoch seconds)")
+        has_key = "commit" in entry or "config" in entry
+        if has_key:
+            for k in ("commit", "config"):
+                if k not in entry or not _TYPES[_COMMON[k]](entry[k]):
+                    errors.append(
+                        f"{where}: `{k}` missing or mistyped (commit and "
+                        f"config key the trajectory together)")
+        schema = _schema_for(fname, entry)
+        for k, t in schema.required.items():
+            if k not in entry:
+                errors.append(f"{where}: missing required `{k}` ({t})")
+            elif not _TYPES[t](entry[k]):
+                errors.append(
+                    f"{where}: `{k}` should be {t}, "
+                    f"got {type(entry[k]).__name__}")
+        # optional fields may be null (e.g. tick_wall_s when only the
+        # event engine ran) — only a present, non-null wrong type errors
+        for k, t in schema.optional.items():
+            if k in entry and entry[k] is not None \
+                    and not _TYPES[t](entry[k]):
+                errors.append(
+                    f"{where}: `{k}` should be {t}, "
+                    f"got {type(entry[k]).__name__}")
+        known = set(_COMMON) | set(schema.required) | set(schema.optional)
+        for k in sorted(set(entry) - known):
+            warnings.append(
+                f"{where}: unknown field `{k}` (add it to the schema "
+                f"table in docs/BENCHMARKS.md + bench_schema.py)")
+    return errors, warnings
+
+
+def main(argv=None) -> int:
+    """Validate the given files (default: every known BENCH_*.json in
+    the current directory); exit 1 on any schema error."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = argv or sorted(
+        p for p in glob.glob("BENCH_*.json")
+        if os.path.basename(p) in SCHEMAS)
+    if not paths:
+        print("bench_schema: no BENCH_*.json files found")
+        return 1
+    n_err = 0
+    for p in paths:
+        if os.path.basename(p) not in SCHEMAS:
+            print(f"bench_schema: {p}: no schema for this file name")
+            n_err += 1
+            continue
+        errors, warnings = validate_file(p)
+        for w in warnings:
+            print(f"WARN {w}")
+        for e in errors:
+            print(f"ERROR {e}")
+        n_err += len(errors)
+        if not errors:
+            print(f"bench_schema: {p}: OK")
+    if n_err:
+        print(f"bench_schema: FAIL ({n_err} errors)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""Shared per-module analysis context: parse tree, enclosing-symbol
+map, suppressions, and the module's ``jax.jit`` registry.
+
+Every rule consumes a :class:`Module`; cross-module rules (R5) get the
+whole list.  The jit registry is the load-bearing piece: R1 needs to
+know which *bindings* name donated jits (``self._decode_fused`` ->
+donated argnums ``(3,)``) and R4 which bindings name any jit at all, so
+call sites can be matched without type inference — a binding string is
+``"name"`` for locals/globals and ``"self.name"`` for instance
+attributes, collected from every ``X = jax.jit(...)`` assignment in
+the module regardless of scope.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.suppress import Suppressions, parse_suppressions
+
+
+def binding_str(node: ast.AST) -> Optional[str]:
+    """``Name`` -> ``"x"``; ``self.x`` -> ``"self.x"``; else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute) \
+            and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return f"self.{node.attr}"
+    return None
+
+
+def is_call_to(node: ast.AST, module: str, name: str) -> bool:
+    """True for ``module.name(...)`` / bare ``name(...)`` call nodes."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == name \
+            and isinstance(f.value, ast.Name) and f.value.id == module:
+        return True
+    return isinstance(f, ast.Name) and f.id == name
+
+
+def _donate_argnums(call: ast.Call) -> Tuple[int, ...]:
+    """Extract a literal ``donate_argnums=`` tuple/int from a jit call."""
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out)
+    return ()
+
+
+@dataclass
+class Module:
+    """One parsed source file plus the lookups rules share."""
+    path: str                      # repo-relative posix path
+    source: str
+    tree: ast.Module
+    suppressions: Suppressions
+    # binding ("self._decode_fused" / "step") -> donated argnums ()=none
+    jits: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+    # ast node id -> enclosing qualname ("Cls.method")
+    _qualnames: Dict[int, str] = field(default_factory=dict)
+
+    def qualname(self, node: ast.AST) -> str:
+        """Enclosing class/function qualname for a node ("" = module)."""
+        return self._qualnames.get(id(node), "")
+
+    def matches(self, patterns) -> bool:
+        """True if any pattern is a substring of this module's path."""
+        return any(p in self.path for p in patterns)
+
+
+def _index_qualnames(tree: ast.Module) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                for sub in ast.walk(child):
+                    out.setdefault(id(sub), q)
+                visit(child, q)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def _collect_jits(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    jits: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and is_call_to(node.value, "jax", "jit"):
+            key = binding_str(node.targets[0])
+            if key is not None:
+                jits[key] = _donate_argnums(node.value)
+    return jits
+
+
+def load_module(path: str, root: str = ".") -> Module:
+    """Parse ``path`` into a :class:`Module` (raises SystemExit on a
+    syntax error — an unparseable file IS a finding-worthy failure)."""
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        raise SystemExit(f"{path}: not parseable: {e}")
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    return Module(path=rel, source=source, tree=tree,
+                  suppressions=parse_suppressions(source),
+                  jits=_collect_jits(tree),
+                  _qualnames=_index_qualnames(tree))
+
+
+def iter_python_files(roots: List[str]) -> List[str]:
+    """Deterministic .py file discovery under files/directories."""
+    out: List[str] = []
+    for root in roots:
+        if os.path.isfile(root):
+            out.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            out.extend(os.path.join(dirpath, fn)
+                       for fn in sorted(filenames) if fn.endswith(".py"))
+    return out

@@ -1,0 +1,27 @@
+"""Rule registry: maps rule ids to their check entry points.
+
+Per-module rules expose ``check(module, config) -> List[Finding]``;
+project rules (R5, which reasons across files) expose
+``check_project(modules, config)``.  The walker dispatches on which
+attribute a rule module defines.
+"""
+from repro.analysis.rules import (chaos, docstrings, donation, hostsync,
+                                  locks, retrace)
+
+RULES = {
+    "R1": donation,
+    "R2": hostsync,
+    "R3": locks,
+    "R4": retrace,
+    "R5": chaos,
+    "R6": docstrings,
+}
+
+DESCRIPTIONS = {
+    "R1": "donation safety: donated buffers are dead after the call",
+    "R2": "host-sync-in-hot-path: no device->host syncs in hot modules",
+    "R3": "lock discipline: fill-thread-shared state under _load_lock",
+    "R4": "retrace hazards at jitted call sites",
+    "R5": "chaos kind / recovery mode exhaustiveness",
+    "R6": "docstring coverage in the documented layers",
+}

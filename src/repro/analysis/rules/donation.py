@@ -1,0 +1,103 @@
+"""R1 — donation safety.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the donated operand:
+after the call its buffer may already be aliased by the output, so any
+later read sees garbage (or raises under JAX's deleted-buffer check —
+but only at runtime, and only on backends that enforce donation).
+PipeBoost's whole decode hot path rides donated caches, so this is the
+invariant most likely to be silently broken by a refactor.
+
+The rule: at every call site of a binding the module assigned from a
+donated ``jax.jit``, take the argument expressions at the donated
+positions; if such an argument is a plain name or ``self.attr``, any
+*lexically later* read of it inside the same function — before a
+rebinding (assignment) of that same name — is flagged.  The idiomatic
+pattern ``out, self.cache = self._fused(..., self.cache)`` is clean:
+the donated binding is re-assigned by the very statement that donates
+it.  The analysis is straight-line by design (branch-aware dataflow
+isn't worth the false-negative risk it trades for); loops that donate
+and re-bind per iteration are handled because the rebinding statement
+sits at the call's own line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.context import Module, binding_str
+from repro.analysis.findings import Finding
+
+MUTATORS = ()   # R1 cares about reads; writes rebind and clear taint
+
+
+def _store_lines(fn: ast.AST, key: str) -> List[int]:
+    """Lines where ``key`` is (re)bound inside ``fn``."""
+    out = []
+    for node in ast.walk(fn):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign,
+                               ast.NamedExpr)):
+            targets = [node.target]
+        elif isinstance(node, ast.For):
+            targets = [node.target]
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            targets = [node.optional_vars]
+        for t in targets:
+            for part in ast.walk(t):
+                if binding_str(part) == key:
+                    out.append(part.lineno)
+    return out
+
+
+def _load_lines(fn: ast.AST, key: str) -> List[int]:
+    """Lines where ``key`` is read inside ``fn``."""
+    out = []
+    for node in ast.walk(fn):
+        if binding_str(node) == key \
+                and isinstance(getattr(node, "ctx", None), ast.Load):
+            out.append(node.lineno)
+    return out
+
+
+def check(module: Module, config) -> List[Finding]:
+    """Flag reads of donated arguments after the donating call."""
+    findings: List[Finding] = []
+    donated = {k: v for k, v in module.jits.items() if v}
+    if not donated:
+        return findings
+    fns = [n for n in ast.walk(module.tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in fns:
+        calls = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                key = binding_str(node.func)
+                if key in donated:
+                    calls.append((node, donated[key], key))
+        for call, argnums, fname in calls:
+            for p in argnums:
+                if p >= len(call.args):
+                    continue
+                key = binding_str(call.args[p])
+                if key is None:
+                    continue
+                stores = [ln for ln in _store_lines(fn, key)
+                          if ln >= call.lineno]
+                horizon = min(stores) if stores else 10 ** 9
+                # loads inside the (possibly multi-line) call itself are
+                # the donation, not a use-after-donate
+                call_end = getattr(call, "end_lineno", call.lineno)
+                for ln in _load_lines(fn, key):
+                    if call_end < ln <= horizon \
+                            and ln not in stores:
+                        findings.append(Finding(
+                            "R1", module.path, ln, 0, module.qualname(call),
+                            f"use-after-donate:{key}",
+                            f"`{key}` was donated to `{fname}` on line "
+                            f"{call.lineno} and read again here without "
+                            f"rebinding — the buffer may already be "
+                            f"aliased/deleted"))
+                        break       # one finding per donated arg per call
+    return findings

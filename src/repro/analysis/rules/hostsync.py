@@ -1,0 +1,161 @@
+"""R2 — host syncs inside the decode/prefill hot-path modules.
+
+The steady-state contract (PR 2) is ONE device->host transfer per
+decode step — the sampled ``(B,)`` tokens — and one per admission.
+Anything else that forces a sync (``.item()``, ``float()``/``int()``
+on a device array, ``np.asarray`` of a jit result,
+``block_until_ready``, ``jax.device_get``, ``.tolist()``) stalls the
+dispatch pipeline and shows up as a throughput cliff that no test
+catches at CPU scale.
+
+Scope: only modules matching ``config.hot_paths`` (the serving engine,
+``models/``, ``kernels/``).  To keep the rule quiet on legitimate host
+work (numpy batch assembly at admission), ``np.asarray``/``np.array``/
+``float``/``int``/``.tolist()`` are flagged only when their operand is
+*device-origin*: a name most recently assigned (lexically) from a call
+to a private ``self._*`` callable or a ``jnp.*``/jit-registry call in
+the same function.  ``.item()``, ``.block_until_ready()`` and
+``jax.device_get`` are flagged unconditionally — there is no host-side
+reading of those.  The two designed transfer points in the serving
+engine carry inline suppressions naming themselves as such, which
+doubles as documentation of where the hot path touches the host.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.analysis.context import Module, binding_str
+from repro.analysis.findings import Finding
+
+_DEVICE_ORIGIN_MODULES = ("jnp", "jax", "lax")
+
+
+def _is_device_call(node: ast.AST, module: Module) -> bool:
+    """Heuristic: does this expression produce a device array?"""
+    if isinstance(node, ast.Call):
+        f = node.func
+        key = binding_str(f)
+        if key in module.jits:
+            return True
+        if isinstance(f, ast.Attribute):
+            base = f.value
+            # self._fused(...) / self._sampler(...): private jit wrappers
+            if isinstance(base, ast.Name) and base.id == "self" \
+                    and f.attr.startswith("_"):
+                return True
+            # jnp.foo(...), jax.foo(...), and chains like X(...).astype()
+            if isinstance(base, ast.Name) \
+                    and base.id in _DEVICE_ORIGIN_MODULES:
+                return True
+            if isinstance(base, ast.Call):
+                return _is_device_call(base, module)
+    return False
+
+
+def _device_names_at(fn: ast.AST, module: Module) -> Dict[str, List[int]]:
+    """name -> sorted lines where it is assigned a device-origin value."""
+    dev: Dict[str, List[int]] = {}
+    host: Dict[str, List[int]] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        is_dev = _is_device_call(node.value, module)
+        for t in node.targets:
+            names = [t] if isinstance(t, ast.Name) else [
+                e for e in ast.walk(t)
+                if isinstance(e, ast.Name) and e.id != "self"]
+            for n in names:
+                (dev if is_dev else host).setdefault(
+                    n.id, []).append(n.lineno)
+    return {"dev": dev, "host": host}   # type: ignore[return-value]
+
+
+def _origin_is_device(name: str, line: int, table) -> bool:
+    """Was ``name``'s most recent (lexical) assignment device-origin?"""
+    last_dev = max([ln for ln in table["dev"].get(name, []) if ln <= line],
+                   default=None)
+    if last_dev is None:
+        return False
+    last_host = max([ln for ln in table["host"].get(name, [])
+                     if ln <= line], default=-1)
+    return last_dev > last_host
+
+
+def _base_name(node: ast.AST):
+    """Peel subscripts/attributes down to the underlying Name."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def check(module: Module, config) -> List[Finding]:
+    """Flag device->host synchronization points in hot-path modules."""
+    if not module.matches(config.hot_paths):
+        return []
+    findings: List[Finding] = []
+
+    def flag(node, detail, msg):
+        findings.append(Finding("R2", module.path, node.lineno,
+                                node.col_offset, module.qualname(node),
+                                detail, msg))
+
+    fns = [n for n in ast.walk(module.tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    covered = set()
+    for fn in fns:
+        table = _device_names_at(fn, module)
+        for node in ast.walk(fn):
+            covered.add(id(node))
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            # unconditional syncs
+            if isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not node.args:
+                flag(node, "call:item", "`.item()` forces a device->host "
+                     "sync of a scalar — batch it with the step's one "
+                     "designed transfer")
+            elif isinstance(f, ast.Attribute) \
+                    and f.attr == "block_until_ready":
+                flag(node, "call:block_until_ready",
+                     "`.block_until_ready()` stalls dispatch — only "
+                     "benchmarks may sync the stream")
+            elif isinstance(f, ast.Attribute) and f.attr == "device_get" \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id == "jax":
+                flag(node, "call:device_get", "`jax.device_get` is a "
+                     "full host transfer — not in the hot path")
+            # origin-gated syncs: np.asarray/np.array/float/int/.tolist
+            # applied to a device-origin value
+            elif _sync_wrapper(f) and node.args:
+                arg = node.args[0]
+                name = _base_name(arg)
+                if _is_device_call(arg, module) or (
+                        name is not None
+                        and _origin_is_device(name, node.lineno, table)):
+                    what = _sync_wrapper(f)
+                    flag(node, f"call:{what}",
+                         f"`{what}(...)` of a jit-produced value is a "
+                         "device->host sync — keep it on device or fold "
+                         "it into the one designed transfer per step")
+            elif isinstance(f, ast.Attribute) and f.attr == "tolist":
+                name = _base_name(f.value)
+                if _is_device_call(f.value, module) or (
+                        name is not None
+                        and _origin_is_device(name, node.lineno, table)):
+                    flag(node, "call:tolist", "`.tolist()` of a "
+                         "jit-produced value syncs and boxes every "
+                         "element — transfer once with np.asarray "
+                         "outside the hot loop")
+    return findings
+
+
+def _sync_wrapper(f: ast.AST):
+    """Name of a host-materializing wrapper call, or None."""
+    if isinstance(f, ast.Attribute) and f.attr in ("asarray", "array") \
+            and isinstance(f.value, ast.Name) and f.value.id == "np":
+        return f"np.{f.attr}"
+    if isinstance(f, ast.Name) and f.id in ("float", "int"):
+        return f.id
+    return None

@@ -1,0 +1,85 @@
+"""R4 — retrace hazards at jitted call sites.
+
+The zero-retrace contract (decode compiles exactly once for an
+engine's lifetime; prefill once per length bucket) is enforced at
+runtime by ``benchmarks/compile_guard.py`` — but only on the paths the
+guard exercises.  This rule catches the textual patterns that create
+fresh traces wholesale:
+
+* **immediately-invoked jit** — ``jax.jit(f)(x)`` builds a brand-new
+  jit wrapper (and compile cache) per call; nothing is ever reused;
+* **jit constructed inside a loop** — same failure, amortized over
+  iterations (caching ``jax.jit`` results in a dict keyed by the trace
+  signature, like ``PipeBoostEngine._pipe_fns``, is the sanctioned
+  pattern and is not flagged because the call sits under an ``if key
+  not in cache`` guard, not a loop);
+* **f-string / lambda arguments to a jitted callable** — strings must
+  be static (a fresh string per call = a fresh trace per call), and a
+  fresh lambda is unhashable-by-identity, so either it errors or it
+  retraces every time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.context import Module, binding_str, is_call_to
+from repro.analysis.findings import Finding
+
+
+def _loop_bodies(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            yield node
+
+
+def check(module: Module, config) -> List[Finding]:
+    """Flag call patterns that defeat jit compile-cache reuse."""
+    findings: List[Finding] = []
+
+    for node in ast.walk(module.tree):
+        # jax.jit(f)(args): a throwaway wrapper, retraces every call
+        if isinstance(node, ast.Call) and is_call_to(node.func, "jax",
+                                                     "jit"):
+            findings.append(Finding(
+                "R4", module.path, node.lineno, node.col_offset,
+                module.qualname(node), "iife-jit",
+                "immediately-invoked jax.jit: the wrapper (and its "
+                "compile cache) is discarded after this call — bind the "
+                "jit once and reuse it"))
+
+    # jax.jit(...) constructed inside a loop body
+    for loop in _loop_bodies(module.tree):
+        for stmt in loop.body + getattr(loop, "orelse", []):
+            for node in ast.walk(stmt):
+                if is_call_to(node, "jax", "jit"):
+                    findings.append(Finding(
+                        "R4", module.path, node.lineno, node.col_offset,
+                        module.qualname(node), "jit-in-loop",
+                        "jax.jit constructed inside a loop: every "
+                        "iteration pays a fresh trace+compile — hoist "
+                        "it (or cache by signature like _pipe_fns)"))
+
+    # f-string / lambda arguments at known-jitted call sites
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = binding_str(node.func)
+        if fname not in module.jits:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.JoinedStr):
+                findings.append(Finding(
+                    "R4", module.path, arg.lineno, arg.col_offset,
+                    module.qualname(node), f"fstring-arg:{fname}",
+                    f"f-string passed to jitted `{fname}`: strings are "
+                    "static in a trace, so each distinct value compiles "
+                    "a fresh executable"))
+            elif isinstance(arg, ast.Lambda):
+                findings.append(Finding(
+                    "R4", module.path, arg.lineno, arg.col_offset,
+                    module.qualname(node), f"lambda-arg:{fname}",
+                    f"fresh lambda passed to jitted `{fname}`: a new "
+                    "function object per call can never hit the compile "
+                    "cache — hoist it to a module-level def"))
+    return findings

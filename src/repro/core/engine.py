@@ -123,11 +123,19 @@ class PipeBoostEngine:
 
     # ---------------- loading ------------------------------------------------
 
+    def _record_event(self, tag: str, payload: Any) -> None:
+        """Append to the event log under the load lock — the background
+        fill thread appends ``load`` events concurrently, and a plain
+        ``list.append`` race would drop entries."""
+        with self._load_lock:
+            self.events.append((tag, payload))
+
     def _reset_load_accounting(self) -> None:
-        self._t0 = time.perf_counter()
-        self.rounds: List[LoadRound] = []
-        self.time_to_ready: Optional[float] = None
-        self.time_to_fully_loaded: Optional[float] = None
+        with self._load_lock:
+            self._t0 = time.perf_counter()
+            self.rounds: List[LoadRound] = []
+            self.time_to_ready: Optional[float] = None
+            self.time_to_fully_loaded: Optional[float] = None
 
     def load_next_segment(self, device: int) -> Optional[int]:
         """Advance device's rotated loading order by one segment."""
@@ -142,14 +150,16 @@ class PipeBoostEngine:
                     return s
             return None
 
-    def load_round(self, budget: Optional[int] = None) -> bool:
+    def load_round(self, budget: Optional[int] = None) -> Optional[LoadRound]:
         """One loading round across alive devices: each device loads up to
         ``budget`` segments (default: the engine's ``segments_per_round``).
         Safe to call from a background thread concurrently with serving.
-        Returns True if anything was loaded."""
+        Returns the round's accounting, or None when nothing was left to
+        load (a ``LoadRound`` is truthy, so boolean callers still work)."""
         budget = budget if budget is not None else self.segments_per_round
         t0 = time.perf_counter()
         loads: List[Tuple[int, int]] = []
+        round_: Optional[LoadRound] = None
         with self._load_lock:
             for d in self.devices:
                 if not d.alive:
@@ -161,15 +171,16 @@ class PipeBoostEngine:
                     loads.append((d.idx, s))
             if loads:
                 nbytes = sum(self.plan.segments[s].bytes for _, s in loads)
-                self.rounds.append(LoadRound(
+                round_ = LoadRound(
                     len(self.rounds), t0 - self._t0,
-                    time.perf_counter() - t0, nbytes, loads))
+                    time.perf_counter() - t0, nbytes, loads)
+                self.rounds.append(round_)
             # stamp the two cold-start milestones the moment they flip
             if self.time_to_ready is None and self.ready:
                 self.time_to_ready = time.perf_counter() - self._t0
             if self.time_to_fully_loaded is None and self.fully_loaded:
                 self.time_to_fully_loaded = time.perf_counter() - self._t0
-        return bool(loads)
+        return round_
 
     # -- background fill driver (the overlap: loading runs concurrently
     #    with serving ticks instead of load-then-serve sequencing) ----------
@@ -179,10 +190,10 @@ class PipeBoostEngine:
         per round until the model is fully loaded.  The caller interleaves
         ``next()`` with serving work (discrete-event overlap)."""
         while True:
-            n_before = len(self.rounds)
-            if not self.load_round(budget):
+            round_ = self.load_round(budget)
+            if round_ is None:
                 return
-            yield self.rounds[n_before]
+            yield round_
 
     def start_fill(self, interval_s: float = 0.0,
                    budget: Optional[int] = None) -> threading.Thread:
@@ -293,12 +304,16 @@ class PipeBoostEngine:
             }
 
     def status(self) -> EngineStatus:
-        return EngineStatus(self.ready, self.fully_loaded, self.strategy,
-                            [d.idx for d in self.devices if d.alive],
-                            self.loaded_map(), self.chain(),
-                            self.time_to_ready, self.time_to_fully_loaded,
-                            self.loaded_bytes(), self.total_bytes(),
-                            len(self.rounds))
+        """One consistent snapshot (taken under the load lock, so a fill
+        round can't land between the fields)."""
+        with self._load_lock:
+            return EngineStatus(self.ready, self.fully_loaded, self.strategy,
+                                [d.idx for d in self.devices if d.alive],
+                                self.loaded_map(), self.chain(),
+                                self.time_to_ready,
+                                self.time_to_fully_loaded,
+                                self.loaded_bytes(), self.total_bytes(),
+                                len(self.rounds))
 
     # ---------------- adapters (merged-LoRA, §4.3.2) -------------------------
 
@@ -312,17 +327,18 @@ class PipeBoostEngine:
             params = merge_lora(params, self.adapters[name])
         self.active_adapter = name
         self._merged_params = params
-        self.events.append(("adapter_switch", name))
+        self._record_event("adapter_switch", name)
 
     # ---------------- inference ---------------------------------------------
 
     def _segment_layer_mask(self, segs: Set[int]) -> List[bool]:
         """Per-global-layer: is the layer inside one of ``segs``."""
         mask = [False] * self.cfg.n_layers
-        for s in segs:
-            seg = self.plan.segments[s]
-            for i in range(seg.layer_start, seg.layer_end):
-                mask[i] = True
+        with self._load_lock:        # a repartition may swap self.plan
+            for s in segs:
+                seg = self.plan.segments[s]
+                for i in range(seg.layer_start, seg.layer_end):
+                    mask[i] = True
         return mask
 
     def lost_state_layers(self, device_ids: Sequence[int]) -> List[bool]:
@@ -459,12 +475,14 @@ class PipeBoostEngine:
         self._cache = cache
         self._tokens_seen = batch.get("tokens")
         # KV ownership follows the serving chain
-        for d in self.devices:
-            d.kv_segments = set()
-        for dev, seg in chain:
-            self.devices[dev].kv_segments.add(seg)
-        self.events.append(("prefill", chain))
-        self.events.append(("prefill_backend", self.prefill_backend_used))
+        with self._load_lock:
+            for d in self.devices:
+                d.kv_segments = set()
+            for dev, seg in chain:
+                self.devices[dev].kv_segments.add(seg)
+            self.events.append(("prefill", chain))
+            self.events.append(("prefill_backend",
+                                self.prefill_backend_used))
         return logits
 
     def _pipeline_fn_call(self, B: int, S: int, batch: Dict):
@@ -523,7 +541,7 @@ class PipeBoostEngine:
             return False
         if self.fully_loaded and request_rate >= crossover_rate:
             self.strategy = "single"
-            self.events.append(("strategy_switch", "single"))
+            self._record_event("strategy_switch", "single")
             return True
         return False
 
@@ -544,7 +562,7 @@ class PipeBoostEngine:
                 self.devices[i].alive = False
         if was_filling:
             self.stop_fill(join=True)
-        self.events.append(("crash", list(device_ids)))
+        self._record_event("crash", list(device_ids))
 
     def restart(self, n_devices: Optional[int] = None):
         """Full server reboot (cluster rejoin path): every device comes back
@@ -562,7 +580,7 @@ class PipeBoostEngine:
             self._cache = None
             self._tokens_seen = None
             self._reset_load_accounting()   # a rejoin is a fresh cold start
-        self.events.append(("restart", self.n_devices))
+        self._record_event("restart", self.n_devices)
 
     def revive(self, device_ids: Sequence[int]):
         """Bring crashed devices back online with empty HBM and re-plan the
@@ -578,7 +596,7 @@ class PipeBoostEngine:
                 d.kv_segments = set()
             alive = [d.idx for d in self.devices if d.alive]
             self.plan = reassign(self.plan, self.loaded_map(), alive)
-        self.events.append(("revive", list(device_ids)))
+        self._record_event("revive", list(device_ids))
 
     def _repartition_pipeline(self) -> int:
         """Rebuild the shard_map prefill mesh for the current alive-device
@@ -592,7 +610,8 @@ class PipeBoostEngine:
         compiles and a new one costs at most one lowering per shape."""
         if not self._pipe_requested:
             return self._pipe_n_stages if self._pipe_enabled else 0
-        n_alive = sum(1 for d in self.devices if d.alive)
+        with self._load_lock:
+            n_alive = sum(1 for d in self.devices if d.alive)
         n_xla = len(jax.devices())
         n_stages = 0
         for s in range(min(n_alive, n_xla, self.cfg.n_layers), 1, -1):
@@ -661,39 +680,47 @@ class PipeBoostEngine:
         ch = self.chain()
         if self._cache is not None and self._tokens_seen is not None:
             surviving_kv: Set[int] = set()
-            for d in self.devices:
-                if d.alive:
-                    surviving_kv |= d.kv_segments
+            with self._load_lock:
+                for d in self.devices:
+                    if d.alive:
+                        surviving_kv |= d.kv_segments
             has_state = self._segment_layer_mask(surviving_kv)
             stats["lost_layers"] = int(sum(1 for h in has_state if not h))
             if not all(has_state):
+                # the reconstruct prefill is the expensive part — keep it
+                # OUTSIDE the lock so the refill thread isn't stalled
                 self._cache, rstats = reconstruct_cache(
                     self.cfg, self._merged_params,
                     {"tokens": self._tokens_seen}, self._cache, has_state,
                     max_len=self.max_len)
                 stats["reconstruct"] = rstats
             # KV ownership follows the NEW chain after the re-lay
-            for d in self.devices:
-                d.kv_segments = set()
-            for dev, seg in ch:
-                self.devices[dev].kv_segments.add(seg)
+            with self._load_lock:
+                for d in self.devices:
+                    d.kv_segments = set()
+                for dev, seg in ch:
+                    self.devices[dev].kv_segments.add(seg)
         if was_filling and not self.fully_loaded:
             self.start_fill(self._fill_interval_s, self._fill_budget)
-        self.events.append(("repartition", stats))
+        self._record_event("repartition", stats)
         return stats
 
     def recover(self) -> Dict[str, Any]:
         """Pipeline-parallel recovery: layer reassignment + (if mid-decode)
         KV/state reconstruction.  Returns a stats dict."""
-        alive = [d.idx for d in self.devices if d.alive]
-        if not alive:
-            raise EngineError("all devices dead")
         stats: Dict[str, Any] = {}
-        ch = self.chain()
-        if ch is None:
-            # layer reassignment: survivors re-plan loading of missing spans
-            self.plan = reassign(self.plan, self.loaded_map(), alive)
-            stats["replanned"] = True
+        with self._load_lock:
+            alive = [d.idx for d in self.devices if d.alive]
+            if not alive:
+                raise EngineError("all devices dead")
+            ch = self.chain()
+            if ch is None:
+                # layer reassignment: survivors re-plan loading of missing
+                # spans.  Under the lock: a fill round racing the plan swap
+                # would load segments of the plan being replaced.
+                self.plan = reassign(self.plan, self.loaded_map(), alive)
+                stats["replanned"] = True
+        if stats.get("replanned"):
             while not self.ready:
                 if not self.load_round():
                     raise EngineError("cannot complete chain")
@@ -703,18 +730,22 @@ class PipeBoostEngine:
         # KV reconstruction for in-flight decode state (if any)
         if self._cache is not None and self._tokens_seen is not None:
             surviving_kv: Set[int] = set()
-            for d in self.devices:
-                if d.alive:
-                    surviving_kv |= d.kv_segments
+            with self._load_lock:
+                for d in self.devices:
+                    if d.alive:
+                        surviving_kv |= d.kv_segments
             has_state = self._segment_layer_mask(surviving_kv)
+            # reconstruct prefill runs OUTSIDE the lock (expensive; the
+            # refill thread may keep loading while state is recomputed)
             self._cache, rstats = reconstruct_cache(
                 self.cfg, self._merged_params,
                 {"tokens": self._tokens_seen}, self._cache, has_state,
                 max_len=self.max_len)
             stats["reconstruct"] = rstats
-            for dev, seg in ch:
-                self.devices[dev].kv_segments.add(seg)
-        self.events.append(("recover", stats))
+            with self._load_lock:
+                for dev, seg in ch:
+                    self.devices[dev].kv_segments.add(seg)
+        self._record_event("recover", stats)
         return stats
 
 

@@ -365,6 +365,7 @@ class ContinuousBatcher:
             first, self.cache = self._prefill_fused(
                 self.params, jnp.asarray(toks), jnp.asarray(last_idx),
                 jnp.asarray(slots), jnp.asarray(valid), self.cache)
+        # pbcheck: disable=R2 (designed sync: admission reads first tokens to catch immediate EOS before slot commit)
         first_host = np.asarray(first)
         self.n_prefill_calls += 1
         self.n_prefill_reqs += len(reqs)
@@ -400,7 +401,8 @@ class ContinuousBatcher:
         nxt, self.cache = self._decode_fused(
             self.params, self._dev_tokens, self._dev_active, self.cache)
         self._dev_tokens = nxt
-        nxt_host = np.asarray(nxt)       # the one host transfer per step
+        # pbcheck: disable=R2 (designed sync: THE one host transfer per decode step; EOS checks need the token ids)
+        nxt_host = np.asarray(nxt)
         self.n_decode_steps += 1
         finished = []
         for slot, req in list(self.active.items()):

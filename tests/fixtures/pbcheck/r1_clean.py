@@ -1,0 +1,10 @@
+"""R1 fixture (clean): the donated name is rebound before any read."""
+import jax
+
+step = jax.jit(lambda cache, tok: (tok, cache), donate_argnums=(0,))
+
+
+def decode_loop(cache, tok):
+    """The canonical donation pattern: rebind, then use freely."""
+    out, cache = step(cache, tok)
+    return out, cache["k"]

@@ -1,0 +1,11 @@
+"""R1 fixture (suppressed): a deliberate read of the donated buffer."""
+import jax
+
+step = jax.jit(lambda cache, tok: (tok, cache), donate_argnums=(0,))
+
+
+def decode_loop(cache, tok):
+    """Reads the donated arg on purpose (host-side dict, not a buffer)."""
+    out, new_cache = step(cache, tok)
+    stale = cache["k"]  # pbcheck: disable=R1 (host dict, not a device buffer)
+    return out, new_cache, stale

@@ -1,0 +1,11 @@
+"""R1 fixture: the donated cache is read after the donating call."""
+import jax
+
+step = jax.jit(lambda cache, tok: (tok, cache), donate_argnums=(0,))
+
+
+def decode_loop(cache, tok):
+    """Donates ``cache`` to ``step``, then reads the dead buffer."""
+    out, new_cache = step(cache, tok)
+    stale = cache["k"]          # use-after-donate: buffer already freed
+    return out, new_cache, stale

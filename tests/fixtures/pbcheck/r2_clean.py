@@ -1,0 +1,10 @@
+"""R2 fixture (clean): numpy ops on host-origin data only."""
+import numpy as np
+
+
+def pack_batch(rows):
+    """Pure host-side packing — np.asarray of a host array is free."""
+    toks = np.zeros((len(rows),), np.int32)
+    for i, r in enumerate(rows):
+        toks[i] = r
+    return np.asarray(toks)

@@ -1,0 +1,13 @@
+"""R2 fixture (suppressed): the one designed transfer, documented."""
+import jax
+import numpy as np
+
+decode = jax.jit(lambda tok: tok + 1)
+
+
+def hot_step(tokens):
+    """One deliberate host transfer with an inline justification."""
+    out = decode(tokens)
+    # pbcheck: disable=R2 (the one designed transfer per step)
+    host = np.asarray(out)
+    return host

@@ -1,0 +1,14 @@
+"""R2 fixture: host syncs on jit-produced values in a hot module."""
+import jax
+import numpy as np
+
+decode = jax.jit(lambda tok: tok + 1)
+
+
+def hot_step(tokens):
+    """Three distinct device->host syncs in the decode hot path."""
+    out = decode(tokens)
+    val = out.item()                  # sync: scalar readback
+    host = np.asarray(out)            # sync: full-array transfer
+    out.block_until_ready()           # sync: blocks the dispatch queue
+    return val, host

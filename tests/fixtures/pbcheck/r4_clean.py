@@ -1,0 +1,13 @@
+"""R4 fixture (clean): jits built once at module scope, stable args."""
+import jax
+
+embed = jax.jit(lambda s: s)
+double = jax.jit(lambda v: v * 2)
+
+
+def hot_step(xs):
+    """Module-level jits, plain array args — compiles exactly once."""
+    total = 0
+    for x in xs:
+        total = total + double(x)
+    return embed(total)

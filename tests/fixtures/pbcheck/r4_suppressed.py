@@ -1,0 +1,8 @@
+"""R4 fixture (suppressed): a deliberate one-shot jit, documented."""
+import jax
+
+
+def calibrate(xs):
+    """One-off calibration path; the single retrace is intended."""
+    # pbcheck: disable=R4 (one-shot calibration; compiles exactly once)
+    return jax.jit(lambda x: x + 1)(xs)

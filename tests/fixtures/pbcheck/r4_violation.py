@@ -1,0 +1,16 @@
+"""R4 fixture: every retrace-hazard shape at a jitted call site."""
+import jax
+
+embed = jax.jit(lambda s: s)
+
+
+def hot_step(xs):
+    """Four hazards: IIFE jit, jit-in-loop, f-string arg, lambda arg."""
+    out = jax.jit(lambda x: x + 1)(xs)      # compiles every call
+    total = 0
+    for x in xs:
+        g = jax.jit(lambda v: v * 2)        # fresh jit per iteration
+        total = total + g(x)
+    label = embed(f"step-{total}")          # fresh str -> new static key
+    h = embed(lambda q: q)                  # fresh lambda -> retrace
+    return out, total, label, h

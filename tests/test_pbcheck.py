@@ -1,0 +1,197 @@
+"""pbcheck static-analysis suite tests.
+
+Every rule R1-R6 has a fixture trio under ``tests/fixtures/pbcheck/``:
+a *violation* file the rule must flag, a *clean* file it must pass, and
+a *suppressed* file whose inline ``# pbcheck: disable=Rn (reason)``
+comments neutralize the findings.  On top of the per-rule matrix:
+suppressions without a reason are invalid, shipped baseline entries
+must be justified, the repo itself must scan clean, and the BENCH
+trajectory files must satisfy their schemas.
+"""
+import json
+import os
+
+import pytest
+
+from repro.analysis.baseline import TODO, Baseline, load_baseline
+from repro.analysis.bench_schema import validate_file
+from repro.analysis.cli import CheckConfig, run_check
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "fixtures", "pbcheck")
+REPO = os.path.dirname(HERE)
+RULES = ["R1", "R2", "R3", "R4", "R5", "R6"]
+
+# fixture paths don't look like src/repro, so scope R2/R6 by fixture
+# file prefix instead of the default hot/docstring path lists
+_MIN_VIOLATIONS = {"R1": 1, "R2": 3, "R3": 1, "R4": 4, "R5": 4, "R6": 1}
+
+
+def _cfg(rule):
+    return CheckConfig(rules=(rule,), hot_paths=("r2_",),
+                       docstring_paths=("r6_",))
+
+
+def _run(rule, name):
+    return run_check([os.path.join(FIXTURES, name)], _cfg(rule),
+                     root=FIXTURES)
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_violation_fixture_is_flagged(rule):
+    res = _run(rule, f"{rule.lower()}_violation.py")
+    assert len(res.findings) >= _MIN_VIOLATIONS[rule], \
+        f"{rule} missed its violation fixture: {res.findings}"
+    assert all(f.rule == rule for f in res.findings)
+    assert not res.invalid_suppressions
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_clean_fixture_passes(rule):
+    res = _run(rule, f"{rule.lower()}_clean.py")
+    assert res.ok, [f.render() for f in res.findings]
+    assert not res.suppressed    # clean means clean, not suppressed
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_suppressed_fixture_passes_with_reasons(rule):
+    res = _run(rule, f"{rule.lower()}_suppressed.py")
+    assert res.ok, [f.render() for f in res.findings]
+    assert res.suppressed, f"{rule} suppression never matched a finding"
+    assert all(reason for _, reason in res.suppressed)
+
+
+def test_r5_violation_details_are_exact():
+    """R5 names the typo, both unhandled kinds, and the bad mode."""
+    res = _run("R5", "r5_violation.py")
+    details = {f.detail for f in res.findings}
+    assert details == {"unknown-kind:partial_cras",
+                       "unhandled-kind:partial_crash",
+                       "unhandled-kind:rejoin",
+                       "unknown-mode:replay"}
+
+
+def test_r5_ignores_layer_kind_vocabularies():
+    """`.kind` comparisons against non-chaos vocabularies (layer kinds
+    like 'prefill'/'decode') must not make a module a chaos handler."""
+    src = ("CHAOS_KINDS = ('crash', 'partial_crash', 'rejoin')\n"
+           "def pick(layer):\n"
+           "    if layer.kind == 'prefill':\n"
+           "        return 1\n"
+           "    return 0\n")
+    path = os.path.join(FIXTURES, "_r5_layer_kinds.py")
+    with open(path, "w") as f:
+        f.write(src)
+    try:
+        res = run_check([path], CheckConfig(rules=("R5",)), root=FIXTURES)
+        assert res.ok, [f.render() for f in res.findings]
+    finally:
+        os.remove(path)
+
+
+def test_suppression_without_reason_is_invalid(tmp_path):
+    p = tmp_path / "bad.py"
+    p.write_text("x = 1  # pbcheck: disable=R2\n")
+    res = run_check([str(p)], CheckConfig(rules=("R2",)),
+                    root=str(tmp_path))
+    assert res.invalid_suppressions and not res.ok
+
+
+def test_baseline_todo_justification_blocks():
+    bl = Baseline({"R3|a.py|C|attr:x": {
+        "fingerprint": "R3|a.py|C|attr:x", "rule": "R3",
+        "justification": TODO}})
+    assert bl.unjustified()
+
+
+def test_baseline_matches_by_fingerprint_not_line():
+    """Baseline entries key on rule|path|symbol|detail, so moving a
+    finding to another line must not un-baseline it."""
+    res = _run("R3", "r3_violation.py")
+    f = res.findings[0]
+    bl = Baseline({f.fingerprint: {"fingerprint": f.fingerprint,
+                                   "rule": f.rule,
+                                   "justification": "known racy read"}})
+    res2 = run_check([os.path.join(FIXTURES, "r3_violation.py")],
+                     _cfg("R3"), bl, root=FIXTURES)
+    assert res2.ok and res2.baselined and not res2.findings
+
+
+def test_shipped_baseline_is_justified():
+    bl = load_baseline(os.path.join(REPO, "tools",
+                                    "pbcheck_baseline.json"))
+    assert not bl.unjustified()
+
+
+def test_repo_scans_clean():
+    """The gate CI enforces: src/repro has no unsuppressed findings."""
+    bl = load_baseline(os.path.join(REPO, "tools",
+                                    "pbcheck_baseline.json"))
+    res = run_check([os.path.join(REPO, "src", "repro")],
+                    CheckConfig(), bl, root=REPO)
+    assert res.ok, [f.render() for f in res.findings] + \
+        [f"invalid suppression {p}:{ln}: {m}"
+         for p, ln, m in res.invalid_suppressions]
+    # and every inline suppression in the tree carries a reason
+    assert all(reason for _, reason in res.suppressed)
+
+
+# ---------------------------------------------------------------------
+# BENCH_*.json schema validation
+# ---------------------------------------------------------------------
+
+def _write_bench(tmp_path, name, entries):
+    p = tmp_path / name
+    p.write_text(json.dumps({"entries": entries}))
+    return str(p)
+
+
+_GOOD_COLDSTART = {
+    "ts": 1.0, "commit": "abc", "config": {"small": True},
+    "overlapped_ttft_s": 0.5, "load_then_serve_ttft_s": 1.5,
+    "speedup": 3.0, "time_to_ready_wall_s": 0.2,
+    "time_to_fully_loaded_wall_s": 0.9, "loaded_bytes": 10,
+    "total_bytes": 40, "decode_compiles": 1, "tokens_identical": True,
+}
+
+
+def test_bench_schema_accepts_valid_entry(tmp_path):
+    p = _write_bench(tmp_path, "BENCH_coldstart.json", [_GOOD_COLDSTART])
+    errors, _ = validate_file(p)
+    assert not errors
+
+
+def test_bench_schema_rejects_missing_metric(tmp_path):
+    bad = {k: v for k, v in _GOOD_COLDSTART.items() if k != "speedup"}
+    p = _write_bench(tmp_path, "BENCH_coldstart.json", [bad])
+    errors, _ = validate_file(p)
+    assert any("speedup" in e for e in errors)
+
+
+def test_bench_schema_rejects_bool_as_number(tmp_path):
+    bad = dict(_GOOD_COLDSTART, speedup=True)
+    p = _write_bench(tmp_path, "BENCH_coldstart.json", [bad])
+    errors, _ = validate_file(p)
+    assert any("speedup" in e for e in errors)
+
+
+def test_bench_schema_tolerates_legacy_unkeyed_entry(tmp_path):
+    legacy = {k: v for k, v in _GOOD_COLDSTART.items()
+              if k not in ("commit", "config")}
+    p = _write_bench(tmp_path, "BENCH_coldstart.json", [legacy])
+    errors, _ = validate_file(p)
+    assert not errors
+    # but commit WITHOUT config (or vice versa) is an error
+    half = {k: v for k, v in _GOOD_COLDSTART.items() if k != "config"}
+    p2 = _write_bench(tmp_path, "BENCH_coldstart.json", [half])
+    errors2, _ = validate_file(p2)
+    assert errors2
+
+
+def test_bench_schema_checked_in_files_validate():
+    import glob
+    files = sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    assert files, "no checked-in BENCH files found"
+    for p in files:
+        errors, _ = validate_file(p)
+        assert not errors, errors

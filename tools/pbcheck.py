@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""``pbcheck`` launcher: the PipeBoost static-analysis suite.
+
+Thin wrapper so the tool runs without exporting PYTHONPATH::
+
+    python tools/pbcheck.py src/repro --baseline tools/pbcheck_baseline.json
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis ...``.  See
+``docs/ANALYSIS.md`` for the rule catalogue (R1-R6), the inline
+suppression syntax, and the baseline workflow.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
