@@ -28,6 +28,9 @@ Map (paper artifact -> bench):
   (chaos, CPU)       -> bench_chaos (elastic repartition vs full
                         migration under seeded fault schedules
                         -> BENCH_chaos.json)
+  (multicast, CPU)   -> bench_multicast (peer-to-peer burst scale-out vs
+                        host-only cold starts, with a mid-propagation
+                        source crash -> BENCH_multicast.json)
 
 Run ``python benchmarks/run.py [bench_name ...] [--small]`` to run a
 subset (CI smoke uses ``bench_recovery --small``).  JSON trajectories are
@@ -1294,6 +1297,164 @@ def bench_chaos(small: bool = False):
     print(f"# wrote {path} ({n} entries)")
 
 
+def bench_multicast(small: bool = False):
+    """Peer-to-peer multicast scale-out vs host-only cold starts, with a
+    seeded mid-propagation source crash (modeled fleet).
+
+    Headline: an N-server burst spawn.  Host-only, every server reads its
+    own model copy from DRAM and the streams contend for ``host_agg_bw``
+    (throttled to 2 host links so contention bites at small N, priced via
+    ``host_bw_effective``).  Under tree multicast one root reads from host
+    at full link speed and every receiver relays segments onward over
+    ``ici_bw`` — asserts burst TTFT and fill makespan strictly beat
+    host-only and that aggregate host traffic stays ~one model copy
+    instead of N.
+
+    Robustness: the propagation root is crashed mid-transfer
+    (``source_crash``).  Survivors re-root onto the warmest holders,
+    resume from their last fully-received segment, and bootstrap the
+    never-seeded tail from host — asserts every surviving spawn completes
+    its copy, zero tokens are re-prefilled, the token streams are
+    bit-identical to a crash-free run, and the same chaos script replays
+    token-exactly under the tick and event engines.  Appends to
+    ``BENCH_multicast.json`` (the CI fast-lane smoke runs ``--small``).
+    """
+    from dataclasses import replace
+
+    from repro.cluster import (Arrival, ChaosEvent, ClusterConfig,
+                               ClusterRouter, MulticastConfig, SimProfile,
+                               sim_server_factory)
+
+    n_spawn = 4 if small else 8
+    n_segments, bytes_total = 8, 1 << 30
+    host_agg_links = 1            # host_agg_bw = 1 host link: N streams
+    # share one link's worth of DRAM read (contention bites at N >= 4)
+    hw = replace(GPU_PAPER, host_agg_bw=host_agg_links * GPU_PAPER.host_link_bw)
+    prof = SimProfile(ready_ticks=2, full_ticks=10, bytes_total=bytes_total,
+                      n_segments=n_segments)
+
+    def build(topology):
+        ccfg = ClusterConfig(
+            n_devices=1, n_slots=4, tick_s=0.05,
+            multicast=MulticastConfig(topology=topology, hw=hw))
+        return ClusterRouter(None, None, n_servers=n_spawn, ccfg=ccfg,
+                             server_factory=sim_server_factory(prof),
+                             materialize_prompts=False)
+
+    def makespan(router):
+        fulls = [r["time_to_fully_loaded"]
+                 for r in router.metrics.coldstart.values()
+                 if r.get("time_to_fully_loaded") is not None]
+        return max(fulls, default=0.0)
+
+    # -- burst TTFT: requests land while every server is still cold; the
+    # sentinel arrival keeps the replay alive until the fills complete
+    # (run() otherwise returns the moment the burst drains, mid-fill)
+    burst = [Arrival(0.001 * i, prompt_len=8, max_new_tokens=4)
+             for i in range(2 * n_spawn)]
+    sentinel = [Arrival(5.0, prompt_len=8, max_new_tokens=1)]
+    stats = {}
+    for topo in ("tree", "host"):
+        r = build(topo)
+        t0 = time.perf_counter()
+        done = r.run(burst + sentinel, engine="event")
+        wall = time.perf_counter() - t0
+        assert len(done) == len(burst) + 1, topo
+        assert all(s.fully_loaded for s in r.servers), topo
+        summ = r.metrics.summary()
+        stats[topo] = {"ttft_mean": summ["ttft_mean"],
+                       "host_bytes": summ["multicast_host_bytes"],
+                       "makespan": makespan(r)}
+        emit(f"multicast_burst_{topo}_n{n_spawn}", wall * 1e6,
+             f"ttft_mean={summ['ttft_mean']:.3f}s "
+             f"fill_makespan={makespan(r):.3f}s "
+             f"host_bytes={summ['multicast_host_bytes']:.2e}")
+    mc, ho = stats["tree"], stats["host"]
+    assert mc["ttft_mean"] < ho["ttft_mean"], (
+        f"multicast burst TTFT {mc['ttft_mean']:.3f}s is not strictly "
+        f"faster than host-only {ho['ttft_mean']:.3f}s at N={n_spawn}")
+    assert mc["makespan"] < ho["makespan"], (mc["makespan"], ho["makespan"])
+    # ~one host read of aggregate traffic vs N full copies
+    assert mc["host_bytes"] <= 1.25 * bytes_total, mc["host_bytes"]
+    assert ho["host_bytes"] >= 0.99 * n_spawn * bytes_total, ho["host_bytes"]
+    emit(f"multicast_ttft_speedup_n{n_spawn}", 0.0,
+         f"{ho['ttft_mean'] / max(mc['ttft_mean'], 1e-9):.2f}x "
+         f"host_read_ratio={mc['host_bytes'] / bytes_total:.2f}")
+
+    # -- mid-propagation source crash: kill the root while it is sourcing
+    # peer transfers; arrivals land after the fills so completions isolate
+    # the load-stage fault (zero re-prefill is structural AND asserted)
+    chaos_t = 0.0685              # off-grid, ~2 ticks into propagation
+    chaos = [ChaosEvent(chaos_t, "source_crash", 0)]
+    late = [Arrival(2.0 + 0.01 * i, prompt_len=8, max_new_tokens=4)
+            for i in range(2 * n_spawn)]
+    runs = {}
+    for name, eng in (("event", "event"), ("tick", "tick"),
+                      ("event2", "event")):
+        r = build("tree")
+        t0 = time.perf_counter()
+        done = r.run(late + sentinel, chaos=list(chaos), engine=eng)
+        runs[name] = (r, done, time.perf_counter() - t0)
+    streams = {name: {q.rid: tuple(q.generated) for q in done}
+               for name, (_, done, _) in runs.items()}
+    assert streams["event"] == streams["tick"] == streams["event2"], \
+        "source-crash replay diverged across engines / identical scripts"
+    r_ref = build("tree")
+    ref = r_ref.run(late + sentinel, engine="event")
+    assert streams["event"] == {q.rid: tuple(q.generated) for q in ref}, \
+        "token streams changed vs the crash-free run"
+    r_evt, done_evt, wall_evt = runs["event"]
+    s_evt = runs["event"][0].metrics.summary()
+    s_tick = runs["tick"][0].metrics.summary()
+    for k in ("n_completed", "multicast_reroots", "multicast_host_bytes",
+              "multicast_host_fallbacks", "recovery_reprefill_tokens"):
+        assert abs(s_evt[k] - s_tick[k]) < 1e-9, (k, s_evt[k], s_tick[k])
+    assert s_evt["n_completed"] == len(late) + 1
+    assert s_evt["multicast_reroots"] >= 1, \
+        "the crash did not abort any in-flight transfer (bad chaos_t?)"
+    assert s_evt["recovery_reprefill_tokens"] == 0.0
+    # every SURVIVING spawn completed its copy despite losing the root
+    assert all(s.fully_loaded for s in r_evt.servers
+               if s.state not in ("down", "retired"))
+    # resume-not-restart: the re-pulled tail stays bounded (<= ~2 copies
+    # of host traffic total; restart-from-zero would approach N copies)
+    assert s_evt["multicast_host_bytes"] <= 2.0 * bytes_total
+    emit(f"multicast_source_crash_n{n_spawn}", wall_evt * 1e6,
+         f"reroots={s_evt['multicast_reroots']:.0f} "
+         f"host_fallbacks={s_evt['multicast_host_fallbacks']:.0f} "
+         f"retries={s_evt['multicast_retries']:.0f} "
+         f"reprefill_tokens=0 tick==event")
+
+    path = "BENCH_multicast.json"
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"bench": "multicast", "n_spawn": n_spawn,
+                   "n_segments": n_segments, "bytes_total": bytes_total,
+                   "topology": "tree", "host_agg_links": host_agg_links,
+                   "chaos_t": chaos_t, "small": small},
+        "ts": time.time(),
+        "n_spawn": n_spawn,
+        "mc_ttft_mean_s": mc["ttft_mean"],
+        "host_ttft_mean_s": ho["ttft_mean"],
+        "ttft_speedup": ho["ttft_mean"] / max(mc["ttft_mean"], 1e-9),
+        "mc_fill_makespan_s": mc["makespan"],
+        "host_fill_makespan_s": ho["makespan"],
+        "mc_host_bytes": mc["host_bytes"],
+        "host_only_host_bytes": ho["host_bytes"],
+        "host_read_ratio": mc["host_bytes"] / bytes_total,
+        "crash": {
+            "reroots": s_evt["multicast_reroots"],
+            "retries": s_evt["multicast_retries"],
+            "host_fallbacks": s_evt["multicast_host_fallbacks"],
+            "host_bytes": s_evt["multicast_host_bytes"],
+            "reprefill_tokens": 0,
+            "n_completed": int(s_evt["n_completed"]),
+            "tick_event_equal": True,
+        },
+    })
+    print(f"# wrote {path} ({n} entries)")
+
+
 # ---------------------------------------------------------------------------
 
 BENCHES = [
@@ -1302,7 +1463,7 @@ BENCHES = [
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
     bench_decode_hotpath, bench_recovery, bench_coldstart, bench_fleet,
-    bench_azure_day, bench_chaos, bench_kernels,
+    bench_azure_day, bench_chaos, bench_multicast, bench_kernels,
 ]
 
 

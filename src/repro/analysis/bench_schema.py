@@ -105,6 +105,13 @@ SCHEMAS: Dict[str, EntrySchema] = {
         "lost_layers": INT, "reprefill_tokens": INT,
         "relay": DICT, "sim_replay": DICT, "real_replay": DICT,
     }),
+    "BENCH_multicast.json": EntrySchema(required={
+        "n_spawn": INT,
+        "mc_ttft_mean_s": NUM, "host_ttft_mean_s": NUM, "ttft_speedup": NUM,
+        "mc_fill_makespan_s": NUM, "host_fill_makespan_s": NUM,
+        "mc_host_bytes": NUM, "host_only_host_bytes": NUM,
+        "host_read_ratio": NUM, "crash": DICT,
+    }),
     "BENCH_fleet.json": _FLEET_DISPATCH,   # shape picked per entry below
 }
 

@@ -14,6 +14,12 @@ arrival / idle-retire deadline / rejoin — full-day Azure traces stream in
 (cluster/traces.py) and replay against modeled servers
 (cluster/simserver.py) in seconds.
 
+Scale-out is peer-to-peer when ``ClusterConfig.multicast`` is set
+(cluster/multicast.py): spawning servers pull model segments from warm
+peers over ICI — chain or tree propagation with mid-transfer failover
+(re-root on source crash, resume from the last received segment, host
+fallback) — so N simultaneous cold starts cost ~one host read.
+
 Scheduling is pluggable (cluster/scheduler.py): batched dispatch policies
 (least-loaded / SLO-aware / adapter-affine, all implementing
 ``select_many``), placement policies for what a spawned server preloads,
@@ -27,6 +33,7 @@ from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,
                                       ScaleDecision)
 from repro.cluster.fleet import Fleet, PoolSpec
 from repro.cluster.metrics import ClusterMetrics, percentile
+from repro.cluster.multicast import MulticastConfig, MulticastManager
 from repro.cluster.router import ClusterConfig, ClusterRouter, ClusterServer
 from repro.cluster.scheduler import (DISPATCH_POLICIES, AdapterAffine,
                                      Clock, DispatchPolicy,
@@ -48,7 +55,8 @@ __all__ = [
     "ChaosEvent", "ChaosSchedule", "Clock",
     "ClusterConfig", "ClusterMetrics", "ClusterRouter", "ClusterServer",
     "DISPATCH_POLICIES", "DispatchPolicy", "Fleet", "HotAdapterPlacement",
-    "LeastLoaded", "LogicalClock", "PlacementPolicy", "PoolSpec",
+    "LeastLoaded", "LogicalClock", "MulticastConfig", "MulticastManager",
+    "PlacementPolicy", "PoolSpec",
     "PreloadAll", "ScaleDecision", "SimProfile", "SimServer", "SloAware",
     "WallClock", "arrival_stream", "burst_wave_trace", "gamma_trace",
     "iter_azure_trace", "load_azure_trace", "load_chaos", "load_trace",

@@ -37,6 +37,9 @@ class AutoscalerConfig:
     scale_up_cooldown_ticks: int = 5       # between consecutive spawns
     idle_ticks_before_retire: int = 200
     max_warming: int = 1                   # concurrent cold starts
+    spawn_batch: int = 1                   # servers per pressured spawn
+    # decision (multicast scale-out makes N simultaneous cold starts cost
+    # ~one host read, so bursts can spawn in batches; 1 = legacy)
     # time-based overrides; None derives seconds from the tick thresholds
     # above (ticks * tick_s) so existing configs keep their behaviour
     scale_up_cooldown_s: Optional[float] = None
@@ -103,9 +106,13 @@ class Autoscaler:
         if (pressured and now >= self._cooldown_until - 1e-9
                 and len(warming) < cfg.max_warming
                 and len(live) < cfg.max_servers):
-            out.spawn = 1
+            # batch spawn bounded by both caps (the guard above makes each
+            # headroom >= 1, so spawn_batch=1 reproduces legacy decisions)
+            out.spawn = max(1, min(cfg.spawn_batch,
+                                   cfg.max_warming - len(warming),
+                                   cfg.max_servers - len(live)))
             self._cooldown_until = now + self._cooldown_s(tick_s)
-            self.n_scale_ups += 1
+            self.n_scale_ups += out.spawn
 
         if pending == 0:
             for s in admitting:

@@ -99,6 +99,10 @@ class ClusterMetrics:
     # engine's per-round fill accounting (see ClusterServer.cold_start_record)
     # — keyed by sid, or "pool/sid" strings in a multi-model fleet
     coldstart: Dict = field(default_factory=dict)
+    # peer-to-peer multicast scale-out accounting (cluster/multicast.py):
+    # bytes/segments by source kind plus the fault-handling counters
+    # (re-roots, retries, host fallbacks, receiver stall time)
+    multicast: Dict[str, float] = field(default_factory=dict)
     # the time source this run records against (the router injects its
     # Clock here, so external instrumentation can stamp events with
     # ``metrics.now()`` under logical AND wall time without branching)
@@ -192,6 +196,14 @@ class ClusterMetrics:
             key = f"relay_{k}"
             self.recovery[key] = self.recovery.get(key, 0.0) + float(v)
 
+    def on_multicast(self, stats: Dict[str, float]) -> None:
+        """Fold one ``MulticastManager.stats()`` dict into the store
+        (sum-accumulates, so multi-pool fleets can fold one manager per
+        pool): peer vs host traffic split, re-roots after source crashes,
+        retry/backoff attempts, graceful host fallbacks, stall time."""
+        for k, v in stats.items():
+            self.multicast[k] = self.multicast.get(k, 0.0) + float(v)
+
     def record_hotpath(self, stats: Dict[str, float]) -> None:
         """Accumulate one server's decode hot-path stats (see
         ``serving.engine.ContinuousBatcher.hotpath_stats``): counters sum
@@ -281,6 +293,13 @@ class ClusterMetrics:
         rec.update(self.recovery)
         for k, v in rec.items():
             out[f"recovery_{k}"] = v
+        # always-present multicast counters (zeros when multicast is off)
+        mc = {"peer_bytes": 0.0, "host_bytes": 0.0, "peer_segments": 0.0,
+              "host_segments": 0.0, "reroots": 0.0, "retries": 0.0,
+              "host_fallbacks": 0.0, "stalled_seconds": 0.0}
+        mc.update(self.multicast)
+        for k, v in mc.items():
+            out[f"multicast_{k}"] = v
         if self.hotpath.get("decode_time_s", 0.0) > 0:
             out["hotpath_decode_steps_per_s"] = \
                 self.hotpath["n_decode_steps"] / self.hotpath["decode_time_s"]

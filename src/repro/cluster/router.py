@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.multicast import MulticastConfig, MulticastManager
 from repro.cluster.scheduler import (Clock, DispatchPolicy, LeastLoaded,
                                      LogicalClock, PlacementPolicy,
                                      PreloadAll)
@@ -102,6 +103,10 @@ class ClusterConfig:
     unservable_retries: int = 3    # placement-miss rechecks before the
     # "unservable" event fires (exponential backoff between rechecks)
     retry_backoff_s: float = 0.2   # first backoff; doubles per attempt
+    multicast: Optional[MulticastConfig] = None  # peer-to-peer scale-out:
+    # spawned servers pull their model copy from warm peers over ICI
+    # (cluster/multicast.py) instead of each reading from host; None =
+    # legacy host-only cold starts
 
 
 class ClusterServer:
@@ -145,6 +150,45 @@ class ClusterServer:
         # after crash(), reset only at this server's next crash()
         self.recovery_mode: Optional[str] = None  # how the last partial
         # crash was handled ("reconstruct" | "repartition")
+        # multicast scale-out: the router attaches a MulticastManager when
+        # ClusterConfig.multicast is set; fill then arrives as peer
+        # deliveries instead of host load rounds (until the copy lands)
+        self._mc = None
+
+    # ---- multicast surface ------------------------------------------------
+    def mc_seg_bytes(self) -> List[int]:
+        """Per-segment byte sizes of one model copy, in load-plan order —
+        what the ``MulticastManager`` streams from peers."""
+        return [s.bytes for s in self.engine.plan.segments]
+
+    def mc_attach(self, manager) -> None:
+        """Switch this server's cold-start fill to multicast deliveries
+        (host load rounds pause until the peer copy has fully landed)."""
+        self._mc = manager
+
+    def mc_deliver(self, segments: Sequence[int]) -> None:
+        """Materialise segments a peer finished streaming this tick: each
+        lands on its serve-assignment owner device via the engine's
+        targeted ``load_segment`` (tagged ``source="peer"``)."""
+        for seg in sorted(segments):
+            dev = self._mc_owner(seg)
+            if dev is not None:
+                self.engine.load_segment(dev, seg, source="peer")
+
+    def _mc_owner(self, seg: int) -> Optional[int]:
+        """Alive device that serves ``seg`` under the current plan (lowest
+        alive device when the owner died mid-fill; None = all dead)."""
+        alive = {d.idx for d in self.engine.devices if d.alive}
+        for dev, segs in self.engine.plan.serve_assignment.items():
+            if seg in segs and dev in alive:
+                return dev
+        return min(alive) if alive else None
+
+    @property
+    def mc_active_sends(self) -> int:
+        """Outbound multicast transfers this server is sourcing (0 when
+        multicast is off) — priced by ``SloAware.source_penalty_s``."""
+        return 0 if self._mc is None else self._mc.active_sends(self.sid)
 
     # ---- scheduling surface ----------------------------------------------
     @property
@@ -225,8 +269,13 @@ class ClusterServer:
     def tick(self, now: float) -> List[ServeRequest]:
         """Advance one router tick; returns requests finished this tick."""
         if self.state == "loading":
-            for _ in range(self.ccfg.load_rounds_per_tick):
-                self.engine.load_round()
+            # under multicast the copy streams in from peers (delivered by
+            # the router pre-tick); host rounds stay paused until it lands,
+            # then resume for replication.  receiver_done is True for
+            # unknown sids, so a detached/foreign server self-heals to host.
+            if self._mc is None or self._mc.receiver_done(self.sid):
+                for _ in range(self.ccfg.load_rounds_per_tick):
+                    self.engine.load_round()
             if not self.engine.ready:
                 return []
             # viable chain => serve THIS tick (the overlap: the queue
@@ -247,7 +296,8 @@ class ClusterServer:
             return []
         # serving: background fill until full, then the §4.3.3 switch
         if not self.engine.fully_loaded:
-            self.engine.load_round()
+            if self._mc is None or self._mc.receiver_done(self.sid):
+                self.engine.load_round()
             if self.srv.n_pending:
                 self.served_while_loading = True
         elif self.engine.strategy == "pipeline":
@@ -426,6 +476,10 @@ class ClusterRouter:
         # globally unique; standalone routers own theirs
         self._rid = rid_counter if rid_counter is not None else \
             itertools.count()
+        # peer-to-peer multicast scale-out (cluster/multicast.py): every
+        # spawned server registers as a receiver, warm peers relay
+        self.multicast = (MulticastManager(self.ccfg.multicast)
+                          if self.ccfg.multicast is not None else None)
         for _ in range(n_servers):
             self.spawn_server()
 
@@ -448,6 +502,9 @@ class ClusterRouter:
                                 self.ccfg, aps)
         s.spawned_at = self.clock
         self.servers.append(s)
+        if self.multicast is not None and hasattr(s, "mc_seg_bytes"):
+            self.multicast.register_receiver(s.sid, s.mc_seg_bytes())
+            s.mc_attach(self.multicast)
         self._recheck_unservable = True
         self.metrics.on_event(self.clock, "spawn",
                               f"server{self._metrics_sid(s.sid)} "
@@ -470,6 +527,11 @@ class ClusterRouter:
         """
         server = self.servers[sid]
         drained = server.crash(device_ids)
+        if self.multicast is not None and server.state == "down":
+            # the victim leaves the multicast tree: its inbound transfer
+            # dies with it and every transfer it was sourcing re-roots
+            # onto surviving holders (receivers resume, never restart)
+            self.multicast.remove(sid)
         if getattr(server, "recovery_mode", None) == "repartition":
             # in-place elastic re-split: every live request stays put with
             # its whole decoded prefix — count each as repartition-
@@ -571,6 +633,11 @@ class ClusterRouter:
             return
         server.rejoin()
         server.spawned_at = self.clock
+        if self.multicast is not None and hasattr(server, "mc_seg_bytes"):
+            # the reboot is a fresh receiver: it re-enters the multicast
+            # tree with an empty segment set and fills from warm peers
+            self.multicast.register_receiver(sid, server.mc_seg_bytes())
+            server.mc_attach(self.multicast)
         self._recheck_unservable = True
         self.metrics.on_event(self.clock, "rejoin",
                               f"server{self._metrics_sid(sid)}")
@@ -750,8 +817,18 @@ class ClusterRouter:
                 self.metrics.on_event(now, "retire",
                                       f"server{self._metrics_sid(sid)}")
                 self.queue.extend(self.servers[sid].retire())
+                if self.multicast is not None:
+                    self.multicast.remove(sid)
                 self._recheck_unservable = True
         self._dispatch(now)
+        if self.multicast is not None:
+            # advance peer transfers one tick and hand completed segments
+            # to their receivers BEFORE the servers tick — a copy that
+            # completes this tick flips ready and serves this same tick
+            # (the PR 4 overlap, now fed over ICI instead of host)
+            for msid, segs in self.multicast.advance(
+                    now, self.ccfg.tick_s).items():
+                self.servers[msid].mc_deliver(segs)
         finished: List[ServeRequest] = []
         for s in self.servers:
             was_loading = s.state == "loading"
@@ -851,7 +928,12 @@ class ClusterRouter:
             skip = "no such server"
         elif server.state == "retired":
             skip = "retired"
-        elif ev.kind in ("crash", "partial_crash"):
+        elif ev.kind in ("crash", "partial_crash", "source_crash",
+                         "fill_crash"):
+            # the load-stage kinds (source_crash = a multicast source dies
+            # mid-transfer, fill_crash = an in-flight receiver dies) are
+            # whole-server crashes by intent: crash_server drops the victim
+            # from the multicast tree, which re-roots its dependents
             if server.state == "down":
                 skip = "already down"
             else:
@@ -997,3 +1079,5 @@ class ClusterRouter:
             self.metrics.record_hotpath(s.srv.hotpath_stats())
             self.metrics.record_coldstart(self._metrics_sid(s.sid),
                                           s.cold_start_record())
+        if self.multicast is not None:
+            self.metrics.on_multicast(self.multicast.stats())

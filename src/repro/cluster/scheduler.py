@@ -247,6 +247,11 @@ class SloAware:
     step_cost_s: Optional[float] = None
     consider_warming: bool = True
     degraded_penalty_s_per_device: float = 0.0
+    # multicast scale-out: a warm server sourcing peer transfers spends
+    # link/host attention on them — flat penalty per active outbound send
+    # (servers without the multicast surface read as 0 sends; default 0 =
+    # sourcing is free, matching host-only behavior)
+    source_penalty_s: float = 0.0
 
     def _step_cost(self, server, ccfg) -> float:
         if self.step_cost_s is not None:
@@ -285,6 +290,9 @@ class SloAware:
         # device list read as 0)
         t += self.degraded_penalty_s_per_device * \
             getattr(server, "degraded_devices", 0)
+        # multicast sourcing load: outbound peer transfers this server is
+        # feeding right now (0 when multicast is off or unsupported)
+        t += self.source_penalty_s * getattr(server, "mc_active_sends", 0)
         return t
 
     def _virtual_wait_s(self, server, assigned, req, ccfg) -> float:

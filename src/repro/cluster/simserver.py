@@ -39,10 +39,17 @@ from repro.serving.engine import ServeRequest
 
 @dataclass
 class SimProfile:
-    """Tick-count shape of the modeled server's cold start."""
+    """Tick-count shape of the modeled server's cold start.
+
+    ``ready_ticks``/``full_ticks`` drive the default host fill; under
+    multicast scale-out the fill is bandwidth-priced instead, as
+    ``n_segments`` equal shares of ``bytes_total`` delivered by the
+    ``MulticastManager`` (ready once the same ready/full *fraction* of
+    segments has landed)."""
     ready_ticks: int = 2        # spawn -> admitting (1/N of the model in)
     full_ticks: int = 10        # spawn -> fully loaded (background fill)
     bytes_total: int = 1 << 30  # pretend checkpoint size (accounting only)
+    n_segments: int = 8         # multicast granularity (segments per copy)
 
 
 class _SimBatcher:
@@ -166,23 +173,68 @@ class SimServer:
         self._load_ticks = 0
         self.last_recovery: Dict[str, float] = {}
         self.engine = self            # router reads s.engine.loaded_bytes()
+        # multicast scale-out: when the router attaches a manager, fill
+        # progress is delivered segments instead of counted load ticks
+        self._mc = None
+        self._segs_done = 0
+
+    # ---- multicast surface (mirrors ClusterServer) ------------------------
+    @property
+    def _ready_segs(self) -> int:
+        """Segments needed before admitting: the same ready fraction the
+        tick-counted cold start uses (``ready_ticks/full_ticks``)."""
+        p = self.profile
+        return max(1, math.ceil(p.n_segments * p.ready_ticks
+                                / max(1, p.full_ticks)))
+
+    def mc_seg_bytes(self) -> List[int]:
+        """Per-segment byte sizes of one model copy (equal shares of
+        ``bytes_total``, remainder on the last segment)."""
+        p = self.profile
+        share = p.bytes_total // p.n_segments
+        out = [share] * p.n_segments
+        out[-1] += p.bytes_total - share * p.n_segments
+        return out
+
+    def mc_attach(self, manager) -> None:
+        """Switch this server's fill to multicast deliveries."""
+        self._mc = manager
+        self._segs_done = 0
+
+    def mc_deliver(self, segments: Sequence[int]) -> None:
+        """Accept segments the manager finished streaming this tick."""
+        self._segs_done += len(segments)
+
+    @property
+    def mc_active_sends(self) -> int:
+        """Outbound multicast transfers this server is sourcing (0 when
+        multicast is off) — priced by ``SloAware.source_penalty_s``."""
+        return 0 if self._mc is None else self._mc.active_sends(self.sid)
 
     # ---- engine facade ----------------------------------------------------
     @property
     def fully_loaded(self) -> bool:
+        if self._mc is not None:
+            return self._segs_done >= self.profile.n_segments
         return self._load_ticks >= self.profile.full_ticks
 
     def loaded_bytes(self) -> int:
-        """Modeled fill progress in bytes (linear in load ticks)."""
-        frac = min(1.0, self._load_ticks / max(1, self.profile.full_ticks))
+        """Modeled fill progress in bytes (delivered segments under
+        multicast, linear in load ticks otherwise)."""
+        if self._mc is not None:
+            frac = min(1.0, self._segs_done / max(1, self.profile.n_segments))
+        else:
+            frac = min(1.0, self._load_ticks / max(1, self.profile.full_ticks))
         return int(self.profile.bytes_total * frac)
 
     def cold_start_stats(self) -> Dict[str, Any]:
         """Engine-facade stats (no wall-clock accounting: modeled)."""
+        n_rounds = (self._segs_done if self._mc is not None
+                    else self._load_ticks)
         return {"time_to_ready": None, "time_to_fully_loaded": None,
                 "loaded_bytes": self.loaded_bytes(),
                 "total_bytes": self.profile.bytes_total,
-                "n_rounds": self._load_ticks}
+                "n_rounds": n_rounds}
 
     # ---- scheduling surface -----------------------------------------------
     @property
@@ -218,6 +270,9 @@ class SimServer:
         if self.state == "serving":
             return 0.0
         if self.state == "loading":
+            if self._mc is not None:
+                return self._mc.eta_s(self.sid,
+                                      self._ready_segs - self._segs_done)
             left = max(0, self.profile.ready_ticks - self._load_ticks)
             return left * self.ccfg.tick_s
         if self.state == "recovering":
@@ -240,9 +295,12 @@ class SimServer:
         progress (ready flip serves the SAME tick), recovery countdown,
         background fill, one modeled engine step, idle bookkeeping."""
         if self.state == "loading":
-            self._load_ticks += 1
-            if self._load_ticks < self.profile.ready_ticks:
-                return []
+            if self._mc is None:
+                self._load_ticks += 1
+                if self._load_ticks < self.profile.ready_ticks:
+                    return []
+            elif self._segs_done < self._ready_segs:
+                return []       # multicast fill: waiting on deliveries
             self.state = "serving"
             if self.ready_at is None:
                 self.ready_at = now
@@ -254,11 +312,12 @@ class SimServer:
         if self.state in ("down", "retired"):
             return []
         if not self.fully_loaded:
-            self._load_ticks += 1       # background fill
+            if self._mc is None:
+                self._load_ticks += 1   # background fill (host ticks)
             if self.srv.n_pending:
                 self.served_while_loading = True
-            if self.fully_loaded and self.fully_loaded_at is None:
-                self.fully_loaded_at = now
+        if self.fully_loaded and self.fully_loaded_at is None:
+            self.fully_loaded_at = now
         done = self.srv.step(now=now)
         if self.srv.n_pending:
             self.idle_ticks = 0
@@ -298,9 +357,11 @@ class SimServer:
         return drained
 
     def rejoin(self) -> None:
-        """Reboot after a crash: full cold start from zero load ticks."""
+        """Reboot after a crash: full cold start from zero load ticks
+        (and zero delivered segments under multicast)."""
         self.state = "loading"
         self._load_ticks = 0
+        self._segs_done = 0
         self.ready_at = None
         self.fully_loaded_at = None
         self.served_while_loading = False

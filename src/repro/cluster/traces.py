@@ -315,13 +315,27 @@ def prompt_tokens(arrival: Arrival, vocab_size: int) -> np.ndarray:
 # Chaos schedules (seeded fault injection)
 # ---------------------------------------------------------------------------
 
-CHAOS_KINDS = ("crash", "partial_crash", "rejoin")
+CHAOS_KINDS = ("crash", "partial_crash", "rejoin", "source_crash",
+               "fill_crash")
+
+# the load-stage fault vocabulary (PR 9): kinds that target the multicast
+# scale-out path — a warm server mid-send ("source_crash") or a spawning
+# receiver mid-fill ("fill_crash").  Both execute as whole-server crashes
+# (the multicast manager re-roots around whichever role the victim held);
+# keeping them distinct kinds makes schedules self-describing and lets
+# random_chaos target the load stage on purpose.
+LOAD_CHAOS_KINDS = ("source_crash", "fill_crash")
 
 
 @dataclass(frozen=True)
 class ChaosEvent:
     """One scheduled fault: kill a whole server, kill some of its devices,
     or bring a server / a device list back.
+
+    Load-stage kinds (``source_crash`` / ``fill_crash``) name the victim's
+    role in a multicast scale-out — a warm load source vs a receiver
+    mid-fill — and execute as whole-server crashes; the multicast manager
+    re-roots transfers around the victim either way.
 
     ``devices`` names the affected device ids for ``partial_crash`` and
     for a device-granular ``rejoin``; empty means the whole server.
@@ -335,7 +349,8 @@ class ChaosEvent:
 
     def __post_init__(self):
         if self.kind not in CHAOS_KINDS:
-            raise ValueError(f"unknown chaos kind {self.kind!r}")
+            raise ValueError(f"unknown chaos kind {self.kind!r}; "
+                             f"known kinds: {CHAOS_KINDS}")
         object.__setattr__(self, "devices", tuple(self.devices))
 
 
@@ -357,26 +372,53 @@ class ChaosSchedule:
         return iter(self.events)
 
 
+# chaos schema versions: 1 = the original crash/partial_crash/rejoin
+# vocabulary; 2 = adds the load-stage kinds (LOAD_CHAOS_KINDS).  save_chaos
+# stamps the lowest version that can express the schedule so old readers
+# keep loading old-vocabulary files.
+CHAOS_SCHEMA_VERSIONS = (1, 2)
+
+
 def save_chaos(path: str, schedule: ChaosSchedule) -> None:
-    """Write a chaos schedule as versioned JSON (replayable, diffable)."""
+    """Write a chaos schedule as versioned JSON (replayable, diffable).
+
+    Schedules using only the original kinds save as version 1 (readable
+    by pre-multicast loaders); any load-stage event bumps the file to
+    version 2."""
+    version = 2 if any(e.kind in LOAD_CHAOS_KINDS
+                       for e in schedule.events) else 1
     with open(path, "w") as f:
-        json.dump({"version": 1,
+        json.dump({"version": version,
                    "events": [asdict(e) for e in schedule.events]},
                   f, indent=1)
 
 
 def load_chaos(path: str) -> ChaosSchedule:
-    """Read a ``save_chaos`` JSON file back into a ``ChaosSchedule``."""
+    """Read a ``save_chaos`` JSON file back into a ``ChaosSchedule``.
+
+    Accepts schema versions ``CHAOS_SCHEMA_VERSIONS``; unknown versions
+    and unknown event kinds raise ``ValueError``s that name the file,
+    the offending event, and the accepted vocabulary."""
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("version") != 1:
-        raise ValueError(f"unknown chaos version {doc.get('version')!r}")
-    return ChaosSchedule([ChaosEvent(**e) for e in doc["events"]])
+    if doc.get("version") not in CHAOS_SCHEMA_VERSIONS:
+        raise ValueError(
+            f"{path}: unknown chaos version {doc.get('version')!r}; "
+            f"this reader understands versions {CHAOS_SCHEMA_VERSIONS}")
+    events = []
+    for i, e in enumerate(doc.get("events", [])):
+        try:
+            events.append(ChaosEvent(**e))
+        except (TypeError, ValueError) as exc:
+            raise ValueError(f"{path}: bad chaos event #{i} {e!r}: {exc}") \
+                from exc
+    return ChaosSchedule(events)
 
 
 def random_chaos(n_faults: int, horizon: float, n_servers: int, *,
                  seed: int = 0, n_devices: int = 0,
                  partial_prob: float = 0.0,
+                 load_fault_prob: float = 0.0,
                  rejoin_delay_s: float = 1.0,
                  tick_s: float = 0.05) -> ChaosSchedule:
     """Seeded random fault script: ``n_faults`` crashes uniformly over
@@ -384,9 +426,11 @@ def random_chaos(n_faults: int, horizon: float, n_servers: int, *,
 
     With ``partial_prob`` > 0 (needs ``n_devices``), a fault is a
     ``partial_crash`` of a random proper device subset, rejoined at device
-    granularity.  Event times are nudged off the ``tick_s`` grid so tick
-    and event engines replay them on the same tick.  Deterministic by
-    ``seed``.
+    granularity.  With ``load_fault_prob`` > 0, a fault targets the
+    multicast load stage instead: a ``source_crash`` or ``fill_crash``
+    (50/50), paired with a whole-server rejoin like a plain crash.
+    Event times are nudged off the ``tick_s`` grid so tick and event
+    engines replay them on the same tick.  Deterministic by ``seed``.
     """
     rng = np.random.default_rng(seed)
     events: List[ChaosEvent] = []
@@ -395,6 +439,11 @@ def random_chaos(n_faults: int, horizon: float, n_servers: int, *,
         if abs(t / tick_s - round(t / tick_s)) < 1e-6:   # off-grid nudge
             t += 0.37 * tick_s
         sid = int(rng.integers(n_servers))
+        if rng.random() < load_fault_prob:
+            kind = LOAD_CHAOS_KINDS[int(rng.integers(2))]
+            events.append(ChaosEvent(t, kind, sid))
+            events.append(ChaosEvent(t + rejoin_delay_s, "rejoin", sid))
+            continue
         partial = (n_devices > 1 and rng.random() < partial_prob)
         if partial:
             k = int(rng.integers(1, n_devices))          # proper subset

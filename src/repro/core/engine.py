@@ -56,6 +56,8 @@ class LoadRound:
     wall_s: float                        # wall-clock spent inside the round
     bytes: int                           # segment bytes transferred this round
     segments: List[Tuple[int, int]]      # (device, segment) loads
+    source: str = "host"                 # "host" fill round or "peer"
+                                         # multicast delivery
 
 
 @dataclass
@@ -181,6 +183,41 @@ class PipeBoostEngine:
             if self.time_to_fully_loaded is None and self.fully_loaded:
                 self.time_to_fully_loaded = time.perf_counter() - self._t0
         return round_
+
+    def load_segment(self, device: int, segment: int,
+                     source: str = "peer") -> Optional[LoadRound]:
+        """Load one *specific* segment onto one device, out of the rotated
+        host-fill order — the multicast delivery path: a peer finished
+        streaming this segment over ICI, so it materialises here without a
+        host read.  Records a ``LoadRound`` tagged with ``source`` (peer
+        deliveries account separately from host rounds) and stamps the
+        ready/fully-loaded milestones exactly like ``load_round``.
+        Returns None when the device already held the segment."""
+        t0 = time.perf_counter()
+        with self._load_lock:
+            d = self.devices[device]
+            if not d.alive:
+                raise EngineError(f"device {device} is dead")
+            round_: Optional[LoadRound] = None
+            if segment not in d.loaded:
+                d.loaded.add(segment)
+                self.events.append(("load", (device, segment)))
+                round_ = LoadRound(
+                    len(self.rounds), t0 - self._t0,
+                    time.perf_counter() - t0,
+                    self.plan.segments[segment].bytes,
+                    [(device, segment)], source)
+                self.rounds.append(round_)
+            if self.time_to_ready is None and self.ready:
+                self.time_to_ready = time.perf_counter() - self._t0
+            if self.time_to_fully_loaded is None and self.fully_loaded:
+                self.time_to_fully_loaded = time.perf_counter() - self._t0
+        return round_
+
+    def peer_loaded_bytes(self) -> int:
+        """Bytes that arrived via peer multicast rather than host reads."""
+        with self._load_lock:
+            return sum(r.bytes for r in self.rounds if r.source == "peer")
 
     # -- background fill driver (the overlap: loading runs concurrently
     #    with serving ticks instead of load-then-serve sequencing) ----------

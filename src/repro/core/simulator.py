@@ -54,8 +54,24 @@ TPU_V5E = HwModel(name="tpu-v5e", ssd_bw=13e9, host_link_bw=8e9,
 # Shared timing primitives
 # ---------------------------------------------------------------------------
 
-def _link_bw(hw: HwModel, concurrent: int) -> float:
+def host_bw_effective(hw: HwModel, concurrent: int) -> float:
+    """Per-stream host (DRAM->device) bandwidth with ``concurrent``
+    simultaneous pulls sharing the aggregate read path.
+
+    Each stream gets at most its own link (``host_link_bw``), and the sum
+    of all streams is capped by ``host_agg_bw`` — so N simultaneous
+    host-only cold starts contend for the aggregate instead of each
+    filling at full link rate.  This is the cost model the cluster's
+    multicast scale-out (``cluster/multicast.py``) and the host-only
+    bench baseline price host fills through.
+    """
     return min(hw.host_link_bw, hw.host_agg_bw / max(1, concurrent))
+
+
+def _link_bw(hw: HwModel, concurrent: int) -> float:
+    """Backwards-compatible alias of :func:`host_bw_effective` (the
+    pre-PR-9 private name, kept for in-module callers)."""
+    return host_bw_effective(hw, concurrent)
 
 
 def prefill_time(cfg: ArchConfig, hw: HwModel, batch: int, prompt: int,

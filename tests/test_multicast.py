@@ -1,0 +1,347 @@
+"""Peer-to-peer multicast scale-out: scheduler units, chaos round-trip,
+and tick==event parity under load-stage faults.
+
+Load-bearing invariants:
+* ``MulticastManager`` is deterministic pure bookkeeping: the same
+  (register/advance/remove) call sequence produces the same transfers,
+  deliveries, and stats — no wall clock, no RNG.
+* Mid-transfer failover is resume, never restart: a dependent of a
+  crashed source keeps every fully-received segment, re-roots onto a
+  surviving holder (bounded retry-with-backoff for orphaned segments),
+  and degrades to a host fill only after ``max_retries``.
+* The load-stage ``ChaosEvent`` kinds (``source_crash``/``fill_crash``)
+  round-trip through the versioned JSON schema and replay token-exactly
+  under both the tick and event cluster engines.
+
+Everything here runs on fakes / the modeled ``SimServer`` fleet except
+the final real-server smoke (one small JAX-backed router).
+"""
+import json
+import os
+from dataclasses import replace
+
+import pytest
+
+from repro.cluster import (Arrival, ChaosEvent, ChaosSchedule,
+                           ClusterConfig, ClusterRouter, MulticastConfig,
+                           MulticastManager, SimProfile, load_chaos,
+                           random_chaos, save_chaos, sim_server_factory)
+from repro.cluster.traces import (CHAOS_KINDS, CHAOS_SCHEMA_VERSIONS,
+                                  LOAD_CHAOS_KINDS)
+from repro.core.simulator import GPU_PAPER, host_bw_effective
+
+
+# ---------------------------------------------------------------------------
+# chaos schema: new kinds, versioned round-trip, clear errors
+# ---------------------------------------------------------------------------
+
+def test_load_kinds_are_chaos_kinds():
+    assert set(LOAD_CHAOS_KINDS) <= set(CHAOS_KINDS)
+    assert "source_crash" in LOAD_CHAOS_KINDS
+    assert "fill_crash" in LOAD_CHAOS_KINDS
+
+
+def test_chaos_roundtrip_v2(tmp_path):
+    sched = ChaosSchedule([
+        ChaosEvent(0.213, "source_crash", 0),
+        ChaosEvent(0.413, "fill_crash", 2),
+        ChaosEvent(1.213, "rejoin", 0),
+    ])
+    p = str(tmp_path / "chaos.json")
+    save_chaos(p, sched)
+    with open(p) as f:
+        doc = json.load(f)
+    assert doc["version"] == 2          # load-stage kinds bump the schema
+    back = load_chaos(p)
+    assert [(e.time, e.kind, e.server) for e in back] == \
+        [(e.time, e.kind, e.server) for e in sched]
+
+
+def test_chaos_legacy_kinds_save_as_v1(tmp_path):
+    sched = ChaosSchedule([ChaosEvent(0.1, "crash", 0),
+                           ChaosEvent(0.9, "rejoin", 0)])
+    p = str(tmp_path / "chaos.json")
+    save_chaos(p, sched)
+    with open(p) as f:
+        assert json.load(f)["version"] == 1
+    assert len(load_chaos(p)) == 2
+
+
+def test_chaos_unknown_version_error(tmp_path):
+    p = str(tmp_path / "chaos.json")
+    with open(p, "w") as f:
+        json.dump({"version": 99, "events": []}, f)
+    with pytest.raises(ValueError) as ei:
+        load_chaos(p)
+    msg = str(ei.value)
+    assert "99" in msg and str(CHAOS_SCHEMA_VERSIONS) in msg
+
+
+def test_chaos_unknown_kind_error_names_event(tmp_path):
+    p = str(tmp_path / "chaos.json")
+    with open(p, "w") as f:
+        json.dump({"version": 2, "events": [
+            {"time": 0.1, "kind": "crash", "server": 0},
+            {"time": 0.2, "kind": "meteor_strike", "server": 1},
+        ]}, f)
+    with pytest.raises(ValueError) as ei:
+        load_chaos(p)
+    msg = str(ei.value)
+    assert "#1" in msg and "meteor_strike" in msg and "crash" in msg
+
+
+def test_random_chaos_load_faults_seeded_and_off_grid():
+    kw = dict(horizon=4.0, n_servers=3, seed=5, load_fault_prob=1.0,
+              rejoin_delay_s=1.0, tick_s=0.05)
+    a = random_chaos(4, **kw)
+    b = random_chaos(4, **kw)
+    assert [(e.time, e.kind, e.server) for e in a] == \
+        [(e.time, e.kind, e.server) for e in b]
+    faults = [e for e in a if e.kind != "rejoin"]
+    assert faults and all(e.kind in LOAD_CHAOS_KINDS for e in faults)
+    # every fault pairs with a rejoin; times sit off the tick grid
+    assert sum(1 for e in a if e.kind == "rejoin") == len(faults)
+    for e in a:
+        frac = (e.time / 0.05) % 1.0
+        assert 1e-6 < frac < 1 - 1e-6, e.time
+
+
+# ---------------------------------------------------------------------------
+# manager units (fakes, no router, no JAX)
+# ---------------------------------------------------------------------------
+
+# easy-math hardware: host moves 100 B/s (aggregate == link, so one
+# 100-byte segment costs exactly one 1-second advance), peers 1000 B/s
+HW_UNIT = replace(GPU_PAPER, host_link_bw=100.0, host_agg_bw=100.0,
+                  ici_bw=1000.0, hop_latency=0.0)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        MulticastConfig(topology="mesh")
+    assert MulticastConfig(topology="chain").effective_fanout == 1
+    assert MulticastConfig(topology="tree").effective_fanout == 2
+    assert MulticastConfig(topology="host").effective_fanout == 0
+
+
+def test_host_bw_effective_contention():
+    assert host_bw_effective(HW_UNIT, 1) == 100.0
+    assert host_bw_effective(HW_UNIT, 4) == 25.0
+    # never above the per-stream link even with spare aggregate
+    wide = replace(HW_UNIT, host_agg_bw=1e6)
+    assert host_bw_effective(wide, 1) == 100.0
+
+
+def _drain(mgr, t0=0.0, dt=1.0, cap=100):
+    """Advance until no receiver is pending; returns {sid: [segs]} in
+    delivery order and the final time."""
+    got, t = {}, t0
+    for _ in range(cap):
+        if not mgr.active:
+            break
+        for sid, segs in mgr.advance(t, dt).items():
+            got.setdefault(sid, []).extend(segs)
+        t += dt
+    assert not mgr.active, "drain did not converge"
+    return got, t
+
+
+def test_bootstrap_single_host_root_then_relay():
+    mgr = MulticastManager(MulticastConfig(topology="tree", hw=HW_UNIT))
+    for sid in range(3):
+        mgr.register_receiver(sid, [100] * 4)
+    got, _ = _drain(mgr)
+    st = mgr.stats()
+    # everyone completes every segment exactly once, in index order
+    assert all(got[sid] == [0, 1, 2, 3] for sid in range(3))
+    # peers relay: strictly less host traffic than 3 full copies
+    assert st["peer_segments"] > 0
+    assert st["host_segments"] + st["peer_segments"] == 12
+    assert st["host_bytes"] < 3 * 400
+    assert st["host_fallbacks"] == 0 and st["reroots"] == 0
+
+
+def test_host_topology_never_uses_peers():
+    mgr = MulticastManager(MulticastConfig(topology="host", hw=HW_UNIT))
+    for sid in range(2):
+        mgr.register_receiver(sid, [100] * 2)
+    _drain(mgr)
+    st = mgr.stats()
+    assert st["peer_bytes"] == 0 and st["peer_segments"] == 0
+    assert st["host_segments"] == 4
+
+
+def test_reroot_retry_ladder_then_host_fallback():
+    # slow peers (50 B/s) so the first transfer is mid-flight when the
+    # only source dies; its segments are seeded, so the orphaned receiver
+    # walks the retry ladder before each graceful host fallback
+    hw = replace(HW_UNIT, ici_bw=50.0)
+    mgr = MulticastManager(MulticastConfig(
+        topology="tree", hw=hw, max_retries=2, retry_backoff_s=0.1))
+    mgr.register_source(99, [0, 1, 2, 3])
+    mgr.register_receiver(0, [100] * 4)
+    out = mgr.advance(0.0, 1.0)
+    assert out == {}                    # seg0 in flight from the source
+    st = mgr.stats()
+    assert st["peer_bytes"] == pytest.approx(50.0)
+    mgr.remove(99)                      # source dies mid-transfer
+    assert mgr.stats()["reroots"] == 1
+    got, _ = _drain(mgr, t0=1.0)
+    st = mgr.stats()
+    # resume semantics: each segment delivered exactly once, in order
+    assert got[0] == [0, 1, 2, 3]
+    # every segment was seeded-but-orphaned: 2 retries then a fallback
+    assert st["retries"] == 8 and st["host_fallbacks"] == 4
+    assert st["host_segments"] == 4 and st["peer_segments"] == 0
+
+
+def test_receiver_crash_preserves_survivor_segments():
+    mgr = MulticastManager(MulticastConfig(topology="chain", hw=HW_UNIT))
+    mgr.register_receiver(0, [100] * 4)
+    mgr.register_receiver(1, [100] * 4)
+    mgr.advance(0.0, 2.0)               # root has segs 0-1, r1 relays
+    r1_have = set(mgr.receivers[1].have)
+    mgr.remove(1)                       # in-flight receiver crashes
+    assert 1 not in mgr.receivers
+    # the surviving root keeps its progress and still completes
+    assert set(mgr.receivers[0].have) >= {0}
+    got, _ = _drain(mgr, t0=2.0)
+    assert sorted(set(mgr.receivers[0].have)) == [0, 1, 2, 3]
+    assert r1_have <= {0, 1, 2, 3}
+
+
+def test_eta_decreases_and_zeroes():
+    mgr = MulticastManager(MulticastConfig(topology="tree", hw=HW_UNIT))
+    mgr.register_receiver(0, [100] * 4)
+    e0 = mgr.eta_s(0)
+    assert e0 > 0 and mgr.eta_s(0, 2) < e0
+    _drain(mgr)
+    assert mgr.eta_s(0) == 0.0
+    assert mgr.eta_s(123) == 0.0        # unknown sid: nothing pending
+
+
+# ---------------------------------------------------------------------------
+# fleet integration: sim servers, engines, rejoin
+# ---------------------------------------------------------------------------
+
+N_SPAWN = 4
+PROF = SimProfile(ready_ticks=2, full_ticks=10, bytes_total=1 << 30,
+                  n_segments=8)
+HW_FLEET = replace(GPU_PAPER, host_agg_bw=GPU_PAPER.host_link_bw)
+
+
+def _fleet(topology="tree"):
+    ccfg = ClusterConfig(n_devices=1, n_slots=4, tick_s=0.05,
+                         multicast=MulticastConfig(topology=topology,
+                                                   hw=HW_FLEET))
+    return ClusterRouter(None, None, n_servers=N_SPAWN, ccfg=ccfg,
+                         server_factory=sim_server_factory(PROF),
+                         materialize_prompts=False)
+
+
+def _trace(t0=2.0):
+    # arrivals after the fill window isolate load-stage faults; the late
+    # sentinel keeps run() alive until every background fill completes
+    return [Arrival(t0 + 0.01 * i, prompt_len=8, max_new_tokens=4)
+            for i in range(8)] + [Arrival(5.0, prompt_len=8,
+                                          max_new_tokens=1)]
+
+
+def test_multicast_one_host_read_vs_host_only():
+    r_mc, r_host = _fleet("tree"), _fleet("host")
+    assert len(r_mc.run(_trace(), engine="event")) == 9
+    assert len(r_host.run(_trace(), engine="event")) == 9
+    s_mc = r_mc.metrics.summary()
+    s_host = r_host.metrics.summary()
+    assert all(s.fully_loaded for s in r_mc.servers)
+    # tree: ~one copy over host; host-only: one copy per server
+    assert s_mc["multicast_host_bytes"] <= 1.25 * PROF.bytes_total
+    assert s_host["multicast_host_bytes"] >= \
+        0.99 * N_SPAWN * PROF.bytes_total
+    assert s_mc["multicast_peer_bytes"] > 0
+    assert s_host["multicast_peer_bytes"] == 0
+
+
+def test_source_crash_tick_event_parity():
+    chaos = [ChaosEvent(0.0685, "source_crash", 0)]
+    runs = {}
+    for name, eng in (("event", "event"), ("tick", "tick"),
+                      ("event2", "event")):
+        r = _fleet()
+        done = r.run(_trace(), chaos=list(chaos), engine=eng)
+        runs[name] = (r, {q.rid: tuple(q.generated) for q in done})
+    assert runs["event"][1] == runs["tick"][1] == runs["event2"][1]
+    s_evt = runs["event"][0].metrics.summary()
+    s_tick = runs["tick"][0].metrics.summary()
+    for k in ("n_completed", "multicast_reroots", "multicast_host_bytes",
+              "multicast_peer_bytes", "multicast_host_fallbacks",
+              "recovery_reprefill_tokens", "gpu_seconds"):
+        assert abs(s_evt[k] - s_tick[k]) < 1e-9, (k, s_evt[k], s_tick[k])
+    # the crash really hit the propagation tree, nothing re-prefilled,
+    # and every surviving spawn still completed its copy
+    assert s_evt["multicast_reroots"] >= 1
+    assert s_evt["recovery_reprefill_tokens"] == 0.0
+    assert s_evt["n_completed"] == 9
+    assert all(s.fully_loaded for s in runs["event"][0].servers
+               if s.state not in ("down", "retired"))
+
+
+def test_fill_crash_executes_as_whole_server_crash():
+    r = _fleet()
+    done = r.run(_trace(), chaos=[ChaosEvent(0.0685, "fill_crash", 2)],
+                 engine="event")
+    assert len(done) == 9
+    assert r.servers[2].state == "down"
+    kinds = [k for _, k, _ in r.metrics.events]
+    assert "crash" in kinds
+
+
+def test_source_crash_then_rejoin_refills_via_multicast():
+    chaos = [ChaosEvent(0.0685, "source_crash", 0),
+             ChaosEvent(1.2185, "rejoin", 0)]
+    r = _fleet()
+    done = r.run(_trace(), chaos=chaos, engine="event")
+    assert len(done) == 9
+    s0 = r.servers[0]
+    assert s0.state == "serving" and s0.fully_loaded
+    summ = r.metrics.summary()
+    assert summ["multicast_reroots"] >= 1
+    # the reboot's copy came from the (now warm) survivors, not host:
+    # aggregate host traffic stays well under two full copies
+    assert summ["multicast_host_bytes"] < 2.0 * PROF.bytes_total
+
+
+def test_chaos_script_with_load_kinds_replays_from_disk(tmp_path):
+    p = str(tmp_path / "chaos.json")
+    save_chaos(p, ChaosSchedule([ChaosEvent(0.0685, "source_crash", 0)]))
+    streams = []
+    for eng in ("event", "tick"):
+        r = _fleet()
+        done = r.run(_trace(), chaos=load_chaos(p), engine=eng)
+        streams.append({q.rid: tuple(q.generated) for q in done})
+    assert streams[0] == streams[1]
+
+
+# ---------------------------------------------------------------------------
+# real servers: engine-level peer delivery (small, JAX-backed)
+# ---------------------------------------------------------------------------
+
+def test_real_server_peer_fill_smoke():
+    jax = pytest.importorskip("jax")
+    from repro.configs.base import get_arch
+    from repro.models import transformer as T
+
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ccfg = ClusterConfig(n_devices=2, n_slots=2,
+                         multicast=MulticastConfig(topology="tree"))
+    router = ClusterRouter(cfg, params, n_servers=2, ccfg=ccfg)
+    trace = [Arrival(0.001 * i, prompt_len=8, max_new_tokens=3)
+             for i in range(3)]
+    done = router.run(trace, engine="event")
+    assert len(done) == 3
+    assert all(s.engine.fully_loaded for s in router.servers)
+    # at least one server filled from a peer, not host (tagged rounds)
+    peer = sum(s.engine.peer_loaded_bytes() for s in router.servers)
+    assert peer > 0
+    assert router.metrics.summary()["multicast_peer_bytes"] > 0
