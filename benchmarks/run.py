@@ -31,6 +31,9 @@ Map (paper artifact -> bench):
   (multicast, CPU)   -> bench_multicast (peer-to-peer burst scale-out vs
                         host-only cold starts, with a mid-propagation
                         source crash -> BENCH_multicast.json)
+  (state tier, CPU)  -> bench_prefix (cross-request prefix-cache prefill
+                        savings + spill/resurrect TTFT
+                        -> BENCH_prefix.json)
 
 Run ``python benchmarks/run.py [bench_name ...] [--small]`` to run a
 subset (CI smoke uses ``bench_recovery --small``).  JSON trajectories are
@@ -1455,6 +1458,229 @@ def bench_multicast(small: bool = False):
     print(f"# wrote {path} ({n} entries)")
 
 
+def bench_prefix(small: bool = False):
+    """Fleet state tier: cross-request prefix cache + spill/resurrect.
+
+    Part 1 (real engine, CPU): serve a population of prompts sharing a
+    long prefix through a ``ContinuousBatcher`` with and without a
+    ``PrefixCache`` attached.  Asserts the cached run's token streams are
+    bit-identical to cold prefill, post-warmup prefill tokens drop to
+    <= 2%% of the no-cache run (only the per-request suffix is walked),
+    and the compile guard shows zero new decode/prefill compiles — the
+    import rides the existing donated scatter + fused decode.
+
+    Part 2 (real engine, CPU): wall-clock TTFT of a "resurrected" spawn —
+    a fresh batcher whose cache was seeded from another server's
+    ``export_entries`` bundle (what an idle retirement spills to the
+    ``StateTier``) — vs a genuinely cold spawn serving the same prompt.
+    Asserts resurrect strictly beats cold, and prices the bundle pull
+    with the modeled ``state_resurrect_time``.
+
+    Part 3 (modeled fleet): a two-wave repeated-prefix trace with an idle
+    gap long enough for the autoscaler to retire the fleet down to one
+    server; wave 2's burst respawns it.  With a ``StateTier`` wired in,
+    the retirement spills the prefix cache and the respawn resurrects it
+    warm.  Asserts >= 1 resurrection, prefix hits in both waves, and that
+    the tick and event engines replay streams and every state-tier
+    summary key identically.  Appends to ``BENCH_prefix.json`` (the CI
+    fast-lane smoke runs ``--small``).
+    """
+    from repro.models import transformer as T
+    from repro.serving.engine import (ContinuousBatcher, ServeRequest,
+                                      quantized_greedy)
+    from repro.serving.prefix_cache import PrefixCache
+
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=2, head_dim=64)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pre_len, suf_len = 192, 2
+    n_reqs = 4 if small else 8
+    rng = np.random.default_rng(0)
+    pre = rng.integers(0, 250, size=pre_len)
+    prompts = [np.concatenate([pre, rng.integers(0, 250, size=suf_len)])
+               for _ in range(n_reqs)]
+
+    def batcher(cache=None):
+        cb = ContinuousBatcher(cfg, params, n_slots=4, max_len=256,
+                               sampler=quantized_greedy)
+        if cache is not None:
+            cb.attach_prefix_cache(cache)
+        return cb
+
+    def serve(cb, ps, n_new=4):
+        out = []
+        for i, p in enumerate(ps):
+            r = ServeRequest(1000 + i, p, max_new_tokens=n_new)
+            cb.admit(r)
+            while cb.n_active:
+                cb.step()
+            out.append(tuple(r.generated))
+        return out
+
+    # -- part 1: prefill savings, bit-identity, compile guard --------------
+    cb_cold = batcher()
+    t0 = time.perf_counter()
+    cold = serve(cb_cold, prompts)
+    cold_wall = time.perf_counter() - t0
+    cold_stats = cb_cold.hotpath_stats()
+
+    pc = PrefixCache()
+    cb_warm = batcher(cache=pc)
+    warm_first = serve(cb_warm, prompts[:1])   # warmup: miss + deposit
+    warmup_tokens = cb_warm.n_prefill_tokens
+    t0 = time.perf_counter()
+    warm_rest = serve(cb_warm, prompts[1:])
+    warm_wall = time.perf_counter() - t0
+    warm_stats = cb_warm.hotpath_stats()
+    assert warm_first + warm_rest == cold, \
+        "prefix-cache streams diverged from cold prefill"
+    post_cache = warm_stats["n_prefill_tokens"] - warmup_tokens
+    post_cold = (n_reqs - 1) * (pre_len + suf_len)
+    ratio = post_cache / max(post_cold, 1)
+    assert ratio <= 0.02, (
+        f"post-warmup prefill tokens {post_cache} are "
+        f"{100 * ratio:.1f}% of the no-cache run (gate: <= 2%)")
+    for k in ("decode_compiles", "prefill_compiles"):
+        assert warm_stats[k] <= cold_stats[k], (
+            k, warm_stats[k], cold_stats[k],
+            "prefix import triggered a fresh compile")
+    assert warm_stats["prefix_hits"] == n_reqs - 1
+    emit(f"prefix_serve_cached_n{n_reqs}", warm_wall * 1e6,
+         f"prefill_tokens={post_cache}/{post_cold} "
+         f"ratio={100 * ratio:.2f}% hits={warm_stats['prefix_hits']:.0f} "
+         f"hit_tokens={warm_stats['prefix_hit_tokens']:.0f}")
+    emit(f"prefix_serve_cold_n{n_reqs}", cold_wall * 1e6,
+         f"speedup={cold_wall / max(warm_wall, 1e-9):.2f}x "
+         f"streams_identical=True compiles_unchanged=True")
+
+    # -- part 2: resurrect-from-spill TTFT vs cold spawn -------------------
+    bundle = pc.export_entries()
+    bundle_bytes = sum(e.nbytes for _, e in bundle)
+    probe_prompt = np.concatenate([pre, rng.integers(0, 250, size=suf_len)])
+
+    # pre-warm prompt: same length, guaranteed 0-token overlap with the
+    # cached prefix, so timed admissions measure prefill/import work, not
+    # tracing
+    warm_prompt = np.full(pre_len + suf_len, (int(pre[0]) + 1) % 250,
+                          np.int64)
+
+    def ttft(cb, repeats=3):
+        cb.admit(ServeRequest(1, warm_prompt, max_new_tokens=2))
+        while cb.n_active:
+            cb.step()
+        best = float("inf")
+        for i in range(repeats):
+            r = ServeRequest(10 + i, probe_prompt, max_new_tokens=1)
+            t0 = time.perf_counter()
+            cb.admit(r)
+            while not r.generated:
+                cb.step()
+            best = min(best, time.perf_counter() - t0)
+            while cb.n_active:
+                cb.step()
+        return best
+
+    cold_ttft = ttft(batcher())
+    pc_res = PrefixCache()
+    assert pc_res.import_entries(bundle) >= 1
+    res_ttft = ttft(batcher(cache=pc_res))
+    assert res_ttft < cold_ttft, (
+        f"resurrect TTFT {res_ttft * 1e3:.1f}ms did not beat cold spawn "
+        f"{cold_ttft * 1e3:.1f}ms")
+    modeled_pull = sim.state_resurrect_time(bundle_bytes, GPU_PAPER)
+    emit("prefix_resurrect_ttft", res_ttft * 1e6,
+         f"cold={cold_ttft * 1e3:.1f}ms speedup="
+         f"{cold_ttft / max(res_ttft, 1e-9):.2f}x "
+         f"bundle={bundle_bytes / 1e6:.1f}MB "
+         f"modeled_pull={modeled_pull:.3f}s")
+
+    # -- part 3: modeled fleet spill/resurrect, tick == event --------------
+    import dataclasses
+    import types
+
+    from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                               ClusterMetrics, ClusterRouter, LogicalClock,
+                               SimProfile, SloAware, StateTier,
+                               repeated_prefix_trace, sim_server_factory)
+
+    n_w1 = 8 if small else 16
+    n_w2 = 6 if small else 12
+
+    def fleet_run(engine):
+        ccfg = ClusterConfig(tick_s=0.05, n_slots=4,
+                             prefix_cache_bytes=64 << 20)
+        auto = Autoscaler(AutoscalerConfig(min_servers=1, max_servers=2,
+                                           idle_ticks_before_retire=20))
+        # gaps sit OFF the tick grid (see repeated_prefix_trace docstring)
+        wave1 = repeated_prefix_trace(n_w1, prefix_len=24, suffix_len=4,
+                                      gap_s=0.021, seed=0)
+        wave2 = repeated_prefix_trace(n_w2, prefix_len=24, suffix_len=4,
+                                      gap_s=0.011, seed=100)
+        trace = wave1 + [dataclasses.replace(a, time=a.time + 8.003)
+                         for a in wave2]
+        mcfg = types.SimpleNamespace(vocab_size=250, name="m")
+        r = ClusterRouter(mcfg, None, n_servers=2, ccfg=ccfg,
+                          autoscaler=auto,
+                          dispatch=SloAware(step_cost_s=0.05,
+                                            prefix_bonus_s_per_token=0.001),
+                          clock=LogicalClock(), metrics=ClusterMetrics(),
+                          server_factory=sim_server_factory(SimProfile()),
+                          state_tier=StateTier())
+        done = r.run(trace, engine=engine)
+        return {q.rid: tuple(q.generated) for q in done}, r.metrics.summary()
+
+    t0 = time.perf_counter()
+    runs = {name: fleet_run(eng) for name, eng in
+            (("event", "event"), ("tick", "tick"), ("event2", "event"))}
+    fleet_wall = time.perf_counter() - t0
+    s_evt = runs["event"][1]
+    assert runs["event"][0] == runs["tick"][0] == runs["event2"][0], \
+        "state-tier fleet replay diverged across engines"
+    for k in ("n_completed", "prefix_hits", "prefix_hit_tokens",
+              "prefix_evictions", "spill_resurrections", "spilled_bytes"):
+        assert abs(s_evt[k] - runs["tick"][1][k]) < 1e-9, \
+            (k, s_evt[k], runs["tick"][1][k])
+    assert s_evt["n_completed"] == n_w1 + n_w2
+    assert s_evt["spill_resurrections"] >= 1, \
+        "idle retirement never spilled / respawn never resurrected"
+    assert s_evt["prefix_hits"] > 0
+    emit(f"prefix_fleet_n{n_w1 + n_w2}", fleet_wall * 1e6,
+         f"hits={s_evt['prefix_hits']:.0f} "
+         f"hit_tokens={s_evt['prefix_hit_tokens']:.0f} "
+         f"resurrections={s_evt['spill_resurrections']:.0f} "
+         f"spilled_bytes={s_evt['spilled_bytes']:.0f} tick==event")
+
+    path = "BENCH_prefix.json"
+    n = append_keyed_entry(path, {
+        "commit": _git_commit(),
+        "config": {"bench": "prefix", "arch": cfg.name, "pre_len": pre_len,
+                   "suf_len": suf_len, "n_reqs": n_reqs, "n_w1": n_w1,
+                   "n_w2": n_w2, "small": small},
+        "ts": time.time(),
+        "prefill_tokens_nocache": int(post_cold),
+        "prefill_tokens_cache": int(post_cache),
+        "prefill_token_ratio": ratio,
+        "tokens_identical": True,
+        "prefix_hits": int(warm_stats["prefix_hits"]),
+        "prefix_hit_tokens": int(warm_stats["prefix_hit_tokens"]),
+        "decode_compiles": int(warm_stats["decode_compiles"]),
+        "prefill_compiles": int(warm_stats["prefill_compiles"]),
+        "cold_ttft_s": cold_ttft,
+        "resurrect_ttft_s": res_ttft,
+        "resurrect_speedup": cold_ttft / max(res_ttft, 1e-9),
+        "bundle_bytes": int(bundle_bytes),
+        "modeled_pull_s": modeled_pull,
+        "fleet": {
+            "n_completed": int(s_evt["n_completed"]),
+            "prefix_hits": s_evt["prefix_hits"],
+            "prefix_hit_tokens": s_evt["prefix_hit_tokens"],
+            "spill_resurrections": s_evt["spill_resurrections"],
+            "spilled_bytes": s_evt["spilled_bytes"],
+            "tick_event_equal": True,
+        },
+    })
+    print(f"# wrote {path} ({n} entries)")
+
+
 # ---------------------------------------------------------------------------
 
 BENCHES = [
@@ -1463,7 +1689,8 @@ BENCHES = [
     bench_scaling_devices, bench_adapter_epochs, bench_recovery_loading,
     bench_recovery_inference, bench_engine_functional, bench_cluster_burst,
     bench_decode_hotpath, bench_recovery, bench_coldstart, bench_fleet,
-    bench_azure_day, bench_chaos, bench_multicast, bench_kernels,
+    bench_azure_day, bench_chaos, bench_multicast, bench_prefix,
+    bench_kernels,
 ]
 
 

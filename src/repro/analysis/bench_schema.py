@@ -10,8 +10,9 @@ trajectory (plots and regression checks key on these names).
 Rules per entry:
 
 * ``ts`` (epoch seconds) is always required;
-* ``commit`` + ``config`` are required *together* — the single pre-PR-6
-  legacy row (no keying) is tolerated only when BOTH are absent;
+* ``commit`` + ``config`` are required on EVERY entry — they are the
+  trajectory key ``append_keyed_entry`` replaces on (the one pre-PR-6
+  unkeyed row was backfilled with ``commit: "unknown"``);
 * required metric fields must be present with the right type (bools
   are not numbers);
 * unknown extra fields are reported as warnings, not errors, so new
@@ -112,6 +113,15 @@ SCHEMAS: Dict[str, EntrySchema] = {
         "mc_host_bytes": NUM, "host_only_host_bytes": NUM,
         "host_read_ratio": NUM, "crash": DICT,
     }),
+    "BENCH_prefix.json": EntrySchema(required={
+        "prefill_tokens_nocache": INT, "prefill_tokens_cache": INT,
+        "prefill_token_ratio": NUM, "tokens_identical": BOOL,
+        "prefix_hits": INT, "prefix_hit_tokens": INT,
+        "decode_compiles": INT, "prefill_compiles": INT,
+        "cold_ttft_s": NUM, "resurrect_ttft_s": NUM,
+        "resurrect_speedup": NUM, "bundle_bytes": INT,
+        "modeled_pull_s": NUM, "fleet": DICT,
+    }),
     "BENCH_fleet.json": _FLEET_DISPATCH,   # shape picked per entry below
 }
 
@@ -145,13 +155,11 @@ def validate_file(path: str) -> Tuple[List[str], List[str]]:
             continue
         if "ts" not in entry or not _TYPES[NUM](entry["ts"]):
             errors.append(f"{where}: missing/invalid `ts` (epoch seconds)")
-        has_key = "commit" in entry or "config" in entry
-        if has_key:
-            for k in ("commit", "config"):
-                if k not in entry or not _TYPES[_COMMON[k]](entry[k]):
-                    errors.append(
-                        f"{where}: `{k}` missing or mistyped (commit and "
-                        f"config key the trajectory together)")
+        for k in ("commit", "config"):
+            if k not in entry or not _TYPES[_COMMON[k]](entry[k]):
+                errors.append(
+                    f"{where}: `{k}` missing or mistyped (every entry "
+                    f"must carry the (commit, config) trajectory key)")
         schema = _schema_for(fname, entry)
         for k, t in schema.required.items():
             if k not in entry:

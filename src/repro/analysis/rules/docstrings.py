@@ -1,7 +1,8 @@
 """R6 — docstring coverage for the documented layers.
 
-Folds ``benchmarks/docstring_gate.py`` (the PR 6 stdlib ``interrogate``
-stand-in) into the single ``pbcheck`` lane: within the scoped paths
+Successor of the retired ``benchmarks/docstring_gate.py`` (the PR 6
+stdlib ``interrogate`` stand-in), folded into the single ``pbcheck``
+lane: within the scoped paths
 (``config.docstring_paths`` — by default the cluster layer the gate
 already covered, plus this analysis package), every public module,
 class, and function/method must carry a docstring, reported per item

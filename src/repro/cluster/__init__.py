@@ -20,6 +20,12 @@ peers over ICI — chain or tree propagation with mid-transfer failover
 (re-root on source crash, resume from the last received segment, host
 fallback) — so N simultaneous cold starts cost ~one host read.
 
+Scale-down keeps its warmth when a ``StateTier`` is wired in
+(cluster/state_tier.py): idle retirement spills the server's prefix-cache
+contents (serving/prefix_cache.py) and resident-adapter set host-side,
+and a later spawn for the same pool resurrects them — priced with the
+same shared-host-bandwidth model as snapshot transfers.
+
 Scheduling is pluggable (cluster/scheduler.py): batched dispatch policies
 (least-loaded / SLO-aware / adapter-affine, all implementing
 ``select_many``), placement policies for what a spawned server preloads,
@@ -43,12 +49,14 @@ from repro.cluster.scheduler import (DISPATCH_POLICIES, AdapterAffine,
                                      make_dispatch)
 from repro.cluster.simserver import (SimProfile, SimServer,
                                      sim_server_factory)
+from repro.cluster.state_tier import StateTier
 from repro.cluster.traces import (Arrival, ChaosEvent, ChaosSchedule,
                                   arrival_stream, burst_wave_trace,
                                   gamma_trace, iter_azure_trace,
                                   load_azure_trace, load_chaos, load_trace,
                                   merge_traces, poisson_trace, random_chaos,
-                                  save_chaos, save_trace)
+                                  repeated_prefix_trace, save_chaos,
+                                  save_trace)
 
 __all__ = [
     "AdapterAffine", "Arrival", "Autoscaler", "AutoscalerConfig",
@@ -58,8 +66,9 @@ __all__ = [
     "LeastLoaded", "LogicalClock", "MulticastConfig", "MulticastManager",
     "PlacementPolicy", "PoolSpec",
     "PreloadAll", "ScaleDecision", "SimProfile", "SimServer", "SloAware",
-    "WallClock", "arrival_stream", "burst_wave_trace", "gamma_trace",
-    "iter_azure_trace", "load_azure_trace", "load_chaos", "load_trace",
-    "make_dispatch", "merge_traces", "percentile", "poisson_trace",
-    "random_chaos", "save_chaos", "save_trace", "sim_server_factory",
+    "StateTier", "WallClock", "arrival_stream", "burst_wave_trace",
+    "gamma_trace", "iter_azure_trace", "load_azure_trace", "load_chaos",
+    "load_trace", "make_dispatch", "merge_traces", "percentile",
+    "poisson_trace", "random_chaos", "repeated_prefix_trace", "save_chaos",
+    "save_trace", "sim_server_factory",
 ]

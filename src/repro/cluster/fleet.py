@@ -34,6 +34,7 @@ from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.router import ClusterConfig, ClusterRouter
 from repro.cluster.scheduler import (Clock, DispatchPolicy, LogicalClock,
                                      PlacementPolicy)
+from repro.cluster.state_tier import StateTier
 from repro.cluster.traces import Arrival, arrival_stream
 
 
@@ -51,6 +52,9 @@ class PoolSpec:
     placement: Optional[PlacementPolicy] = None
     server_factory: Any = None      # ClusterServer-like ctor (sim backends)
     materialize_prompts: bool = True
+    # warm-state spill/resurrect across scale-down/up (one StateTier can
+    # be shared fleet-wide: bundles are keyed by pool name); None = off
+    state_tier: Optional[StateTier] = None
 
 
 class Fleet:
@@ -79,7 +83,8 @@ class Fleet:
                 dispatch=spec.dispatch, placement=spec.placement,
                 clock=self._clock, model=name, rid_counter=rid,
                 server_factory=spec.server_factory,
-                materialize_prompts=spec.materialize_prompts)
+                materialize_prompts=spec.materialize_prompts,
+                state_tier=spec.state_tier)
 
     @property
     def clock(self) -> float:

@@ -103,6 +103,9 @@ class ClusterMetrics:
     # bytes/segments by source kind plus the fault-handling counters
     # (re-roots, retries, host fallbacks, receiver stall time)
     multicast: Dict[str, float] = field(default_factory=dict)
+    # fleet state-tier accounting (cluster/state_tier.py): warm-state
+    # spill/resurrect counters from the run's shared StateTier
+    state_tier: Dict[str, float] = field(default_factory=dict)
     # the time source this run records against (the router injects its
     # Clock here, so external instrumentation can stamp events with
     # ``metrics.now()`` under logical AND wall time without branching)
@@ -210,10 +213,18 @@ class ClusterMetrics:
         across servers; compile counts sum too (each server jits its own
         functions), so per-server regressions stay visible in the total."""
         for k in ("n_decode_steps", "decode_time_s", "n_prefill_calls",
-                  "n_prefill_reqs", "n_prefill_pipeline",
+                  "n_prefill_reqs", "n_prefill_pipeline", "n_prefill_tokens",
                   "n_batched_imports", "n_relay_scatters",
+                  "prefix_hits", "prefix_hit_tokens", "prefix_evictions",
                   "decode_compiles", "prefill_compiles"):
             self.hotpath[k] = self.hotpath.get(k, 0.0) + stats.get(k, 0.0)
+
+    def on_state_tier(self, stats: Dict[str, float]) -> None:
+        """Record the run's ``StateTier.stats()`` snapshot.  REPLACE
+        semantics (not sum): the tier's counters are already lifetime
+        totals for the shared instance, and the router re-folds them at
+        ``finalize_metrics`` — summing would double-count every call."""
+        self.state_tier = {k: float(v) for k, v in stats.items()}
 
     def record_coldstart(self, sid, rec: Dict) -> None:
         """Record one server's cold-start accounting (latest wins).
@@ -300,6 +311,14 @@ class ClusterMetrics:
         mc.update(self.multicast)
         for k, v in mc.items():
             out[f"multicast_{k}"] = v
+        # always-present state-tier / prefix-cache counters (zeros when the
+        # prefix cache is off) — the five keys the bench schema pins
+        out["prefix_hits"] = self.hotpath.get("prefix_hits", 0.0)
+        out["prefix_hit_tokens"] = self.hotpath.get("prefix_hit_tokens", 0.0)
+        out["prefix_evictions"] = self.hotpath.get("prefix_evictions", 0.0)
+        out["spill_resurrections"] = \
+            self.state_tier.get("spill_resurrections", 0.0)
+        out["spilled_bytes"] = self.state_tier.get("spilled_bytes", 0.0)
         if self.hotpath.get("decode_time_s", 0.0) > 0:
             out["hotpath_decode_steps_per_s"] = \
                 self.hotpath["n_decode_steps"] / self.hotpath["decode_time_s"]

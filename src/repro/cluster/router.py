@@ -58,12 +58,15 @@ from repro.cluster.multicast import MulticastConfig, MulticastManager
 from repro.cluster.scheduler import (Clock, DispatchPolicy, LeastLoaded,
                                      LogicalClock, PlacementPolicy,
                                      PreloadAll)
+from repro.cluster.state_tier import StateTier
 from repro.cluster.traces import Arrival, arrival_stream, prompt_tokens
 from repro.configs.base import ArchConfig
 from repro.core.adapter_scheduler import EpochSchedulerPolicy
 from repro.core.engine import PipeBoostEngine
+from repro.core.simulator import GPU_PAPER, state_resurrect_time
 from repro.serving.engine import (ServeRequest, ServingEngine,
                                   quantized_greedy)
+from repro.serving.prefix_cache import PrefixCache
 
 
 _PROMPT_STUBS: Dict[int, np.ndarray] = {}
@@ -107,6 +110,11 @@ class ClusterConfig:
     # spawned servers pull their model copy from warm peers over ICI
     # (cluster/multicast.py) instead of each reading from host; None =
     # legacy host-only cold starts
+    prefix_cache_bytes: int = 0    # per-server cross-request prefix cache
+    # budget (serving/prefix_cache.py): admissions import cached prompt-
+    # prefix KV and prefill only the suffix; 0 = off (legacy behaviour).
+    # Pair with a router-level StateTier to keep the cache across
+    # idle-retire/respawn cycles (the fleet state tier)
 
 
 class ClusterServer:
@@ -154,6 +162,55 @@ class ClusterServer:
         # ClusterConfig.multicast is set; fill then arrives as peer
         # deliveries instead of host load rounds (until the copy lands)
         self._mc = None
+        # fleet state tier: modeled seconds the spawn-time resurrect pull
+        # takes (0 = cold spawn); overlaps the weight fill, priced into
+        # predicted_ready_s so dispatch sees it
+        self.resurrect_cost_s = 0.0
+
+    # ---- state-tier surface ----------------------------------------------
+    def attach_prefix_cache(self, cache) -> None:
+        """Give this server's batcher a cross-request prefix cache (the
+        router spawns one per server when
+        ``ClusterConfig.prefix_cache_bytes`` is set)."""
+        self.srv.attach_prefix_cache(cache)
+
+    def predicted_prefix_tokens(self, req: ServeRequest) -> int:
+        """Prompt tokens an admission of ``req`` would NOT re-prefill
+        here (longest usable cached prefix; 0 without a cache) — the
+        savings signal ``SloAware.prefix_bonus_s_per_token`` prices."""
+        pc = self.srv.batcher.prefix_cache
+        if pc is None:
+            return 0
+        return pc.match_len(self.srv.cfg.name, req.adapter,
+                            np.asarray(req.tokens))
+
+    def spill_state(self) -> Optional[Dict[str, Any]]:
+        """Package warm state for the host tier at idle retirement: the
+        prefix cache's entries (KV rows are already host numpy) plus the
+        resident adapter params.  ``None`` when nothing warm is held —
+        the router then retires without a spill."""
+        pc = self.srv.batcher.prefix_cache
+        entries = pc.export_entries() if pc is not None else []
+        if not entries:
+            return None
+        return {"prefix_entries": entries,
+                "adapters": dict(self.srv.adapter_params),
+                "nbytes": int(sum(e.nbytes for _, e in entries))}
+
+    def resurrect_from(self, bundle: Dict[str, Any],
+                       cost_s: float = 0.0) -> int:
+        """Seed this freshly spawned server from a spilled bundle:
+        prefix entries merge into the attached cache, spilled adapters
+        preload (widening ``can_serve``), and the modeled pull time is
+        kept so dispatch prices readiness.  Returns entries admitted."""
+        pc = self.srv.batcher.prefix_cache
+        n = 0
+        if pc is not None:
+            n = pc.import_entries(bundle.get("prefix_entries", ()))
+        for name, params in bundle.get("adapters", {}).items():
+            self.srv.adapter_params.setdefault(name, params)
+        self.resurrect_cost_s = max(self.resurrect_cost_s, cost_s)
+        return n
 
     # ---- multicast surface ------------------------------------------------
     def mc_seg_bytes(self) -> List[int]:
@@ -248,7 +305,12 @@ class ClusterServer:
                 ticks = math.ceil(rounds
                                   / max(1, self.ccfg.load_rounds_per_tick))
                 self._ready_est = (now, ticks * self.ccfg.tick_s)
-            return self._ready_est[1]
+            est = self._ready_est[1]
+            if self.resurrect_cost_s:
+                # the state-tier pull overlaps the weight fill; it only
+                # extends readiness when it outlasts the remaining load
+                est = max(est, self.spawned_at + self.resurrect_cost_s - now)
+            return est
         if self.state == "recovering":
             return max(0, self._recover_left) * self.ccfg.tick_s
         return math.inf
@@ -440,7 +502,8 @@ class ClusterRouter:
                  model: Optional[str] = None,
                  rid_counter: Optional[itertools.count] = None,
                  server_factory=None,
-                 materialize_prompts: bool = True):
+                 materialize_prompts: bool = True,
+                 state_tier: Optional[StateTier] = None):
         self.cfg = cfg
         self.params = params
         self.ccfg = ccfg or ClusterConfig()
@@ -480,6 +543,10 @@ class ClusterRouter:
         # spawned server registers as a receiver, warm peers relay
         self.multicast = (MulticastManager(self.ccfg.multicast)
                           if self.ccfg.multicast is not None else None)
+        # fleet state tier (cluster/state_tier.py): idle retirements spill
+        # warm prefix-cache/adapter state here; later spawns for the same
+        # pool resurrect it.  Shared fleet-wide; None = legacy discard
+        self.state_tier = state_tier
         for _ in range(n_servers):
             self.spawn_server()
 
@@ -502,6 +569,30 @@ class ClusterRouter:
                                 self.ccfg, aps)
         s.spawned_at = self.clock
         self.servers.append(s)
+        if (self.ccfg.prefix_cache_bytes > 0
+                and hasattr(s, "attach_prefix_cache")):
+            s.attach_prefix_cache(PrefixCache(self.ccfg.prefix_cache_bytes))
+        if self.state_tier is not None and hasattr(s, "resurrect_from"):
+            bundle = self.state_tier.take(self.model)
+            if bundle is not None:
+                # price the host->device pull: concurrent resurrect
+                # streams share the aggregate host bandwidth, exactly
+                # like simultaneous host cold-start fills
+                hw = (self.ccfg.multicast.hw
+                      if self.ccfg.multicast is not None else GPU_PAPER)
+                concurrent = 1 + sum(
+                    1 for x in self.servers
+                    if x is not s and x.state == "loading"
+                    and getattr(x, "resurrect_cost_s", 0.0) > 0.0
+                    and self.clock - x.spawned_at < x.resurrect_cost_s)
+                cost = state_resurrect_time(int(bundle.get("nbytes", 0)),
+                                            hw, concurrent)
+                n_ent = s.resurrect_from(bundle, cost_s=cost)
+                self.metrics.on_event(
+                    self.clock, "resurrect",
+                    f"server{self._metrics_sid(s.sid)} entries={n_ent} "
+                    f"bytes={bundle.get('nbytes', 0)} "
+                    f"modeled_pull={cost:.3f}s")
         if self.multicast is not None and hasattr(s, "mc_seg_bytes"):
             self.multicast.register_receiver(s.sid, s.mc_seg_bytes())
             s.mc_attach(self.multicast)
@@ -816,7 +907,21 @@ class ClusterRouter:
             for sid in d.retire:
                 self.metrics.on_event(now, "retire",
                                       f"server{self._metrics_sid(sid)}")
-                self.queue.extend(self.servers[sid].retire())
+                victim = self.servers[sid]
+                if (self.state_tier is not None
+                        and hasattr(victim, "spill_state")):
+                    # idle scale-down keeps the warm state: prefix-cache
+                    # rows + resident adapters spill to the host tier
+                    # instead of dying with the replica
+                    bundle = victim.spill_state()
+                    if bundle is not None:
+                        self.state_tier.spill(self.model, bundle)
+                        self.metrics.on_event(
+                            now, "spill",
+                            f"server{self._metrics_sid(sid)} "
+                            f"bytes={bundle['nbytes']} "
+                            f"entries={len(bundle['prefix_entries'])}")
+                self.queue.extend(victim.retire())
                 if self.multicast is not None:
                     self.multicast.remove(sid)
                 self._recheck_unservable = True
@@ -1081,3 +1186,7 @@ class ClusterRouter:
                                           s.cold_start_record())
         if self.multicast is not None:
             self.metrics.on_multicast(self.multicast.stats())
+        if self.state_tier is not None:
+            # replace-semantics: the tier's counters are fleet-global, so
+            # per-pool finalize calls all observe the same totals
+            self.metrics.on_state_tier(self.state_tier.stats())

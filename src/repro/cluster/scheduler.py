@@ -252,6 +252,11 @@ class SloAware:
     # (servers without the multicast surface read as 0 sends; default 0 =
     # sourcing is free, matching host-only behavior)
     source_penalty_s: float = 0.0
+    # prefix-cache affinity: credit per prompt token a server's prefix
+    # cache would reuse for this request (skipped prefill work).  Servers
+    # without the surface read as 0 reusable tokens; default 0 = cache
+    # state doesn't steer dispatch, matching pre-state-tier behavior
+    prefix_bonus_s_per_token: float = 0.0
 
     def _step_cost(self, server, ccfg) -> float:
         if self.step_cost_s is not None:
@@ -293,6 +298,13 @@ class SloAware:
         # multicast sourcing load: outbound peer transfers this server is
         # feeding right now (0 when multicast is off or unsupported)
         t += self.source_penalty_s * getattr(server, "mc_active_sends", 0)
+        # prefix-cache affinity: reusable cached-prefix tokens shave
+        # prefill work — a credit, not a cost (0 when the cache is off or
+        # the server lacks the surface)
+        if self.prefix_bonus_s_per_token:
+            fn = getattr(server, "predicted_prefix_tokens", None)
+            if fn is not None:
+                t -= self.prefix_bonus_s_per_token * fn(req)
         return t
 
     def _virtual_wait_s(self, server, assigned, req, ccfg) -> float:

@@ -34,6 +34,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.serving.engine import ServeRequest
 
 
@@ -50,6 +52,9 @@ class SimProfile:
     full_ticks: int = 10        # spawn -> fully loaded (background fill)
     bytes_total: int = 1 << 30  # pretend checkpoint size (accounting only)
     n_segments: int = 8         # multicast granularity (segments per copy)
+    # modeled KV footprint per cached prompt token: prices rows-less
+    # PrefixCache entries (and thus state-tier spill bundles) in bytes
+    kv_bytes_per_token: int = 1 << 12
 
 
 class _SimBatcher:
@@ -74,6 +79,16 @@ class _SimServing:
         self.clock = 0.0
         self.epoch_adapter: Optional[str] = None
         self.n_steps = 0
+        # modeled prefix-cache mirror (rows-less entries): token VALUES are
+        # unchanged on a hit — only the hit/byte accounting moves, so the
+        # tick==event stream-parity invariant is untouched
+        self._pc = None
+        self._pc_tag = "sim"
+        self._pc_bytes_per_token = 1 << 12
+        self._pc_evict_base = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.n_prefill_tokens = 0
 
     # ---- scheduling surface (mirrors ServingEngine) -----------------------
     @property
@@ -92,7 +107,13 @@ class _SimServing:
         return default            # modeled: a decode step costs one tick
 
     def hotpath_stats(self) -> Dict[str, float]:
-        return {"n_decode_steps": float(self.n_steps)}
+        evics = 0.0 if self._pc is None \
+            else float(self._pc.evictions - self._pc_evict_base)
+        return {"n_decode_steps": float(self.n_steps),
+                "n_prefill_tokens": float(self.n_prefill_tokens),
+                "prefix_hits": float(self.prefix_hits),
+                "prefix_hit_tokens": float(self.prefix_hit_tokens),
+                "prefix_evictions": evics}
 
     # ---- data plane (modeled) ---------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -116,6 +137,19 @@ class _SimServing:
                 self.epoch_adapter = req.adapter
             req.slot = b.free.pop()
             b.active[req.rid] = req
+            # prefix-cache probe (accounting only: the modeled token stream
+            # never depends on cache state, mirroring the real engine's
+            # bit-identical-to-cold-prefill guarantee)
+            k = 0
+            if self._pc is not None and not req.generated:
+                hit = self._pc.probe(self._pc_tag, req.adapter,
+                                     np.asarray(req.tokens, np.int64))
+                if hit is not None:
+                    entry, k = hit
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += k
+                    self._pc.release(entry)
+            self.n_prefill_tokens += max(0, len(req.tokens) - k)
             if req.first_token_at is None:
                 req.first_token_at = self.clock
             req.generated.append((req.rid + len(req.generated)) % 250)
@@ -131,6 +165,15 @@ class _SimServing:
                 b.free.append(req.slot)
                 del b.active[rid]
                 done.append(req)
+                # deposit the finished prompt's prefix (rows-less entry,
+                # priced at kv_bytes_per_token) — same >=2-token floor as
+                # the real engine's _deposit_prefixes
+                if self._pc is not None and len(req.tokens) >= 2:
+                    toks = np.asarray(req.tokens, np.int64)
+                    self._pc.insert(
+                        self._pc_tag, req.adapter, toks, len(req.tokens),
+                        rows=None,
+                        nbytes=len(req.tokens) * self._pc_bytes_per_token)
         self.n_steps += 1
         return done
 
@@ -159,6 +202,7 @@ class SimServer:
                  adapter_params: Optional[Dict[str, Any]] = None,
                  profile: Optional[SimProfile] = None):
         self.sid = sid
+        self.cfg = cfg
         self.ccfg = ccfg
         self.profile = profile or SimProfile()
         self.srv = _SimServing(ccfg.n_slots, dict(adapter_params or {}))
@@ -177,6 +221,60 @@ class SimServer:
         # progress is delivered segments instead of counted load ticks
         self._mc = None
         self._segs_done = 0
+        # state-tier resurrect: modeled pull cost in whole ticks, gating
+        # the loading -> serving flip alongside the normal ready condition
+        self.resurrect_cost_s = 0.0
+        self._resurrect_ticks_left = 0
+
+    # ---- state-tier surface (mirrors ClusterServer) -----------------------
+    def attach_prefix_cache(self, cache) -> None:
+        """Wire a (rows-less) ``PrefixCache`` into the modeled engine's
+        admission accounting; eviction deltas rebase so a store moving
+        between servers never double-counts."""
+        self.srv._pc = cache
+        self.srv._pc_tag = getattr(self.cfg, "name", None) or "sim"
+        self.srv._pc_bytes_per_token = self.profile.kv_bytes_per_token
+        self.srv._pc_evict_base = 0 if cache is None else cache.evictions
+
+    def predicted_prefix_tokens(self, req: ServeRequest) -> int:
+        """Cached-prefix tokens a dispatch of ``req`` here would reuse
+        (pure read — ``SloAware.prefix_bonus_s_per_token`` pricing)."""
+        pc = self.srv._pc
+        if pc is None:
+            return 0
+        return pc.match_len(self.srv._pc_tag, req.adapter,
+                            np.asarray(req.tokens, np.int64))
+
+    def spill_state(self) -> Optional[Dict[str, Any]]:
+        """Bundle this server's warm state for the ``StateTier`` (None
+        when there is nothing worth spilling)."""
+        pc = self.srv._pc
+        if pc is None:
+            return None
+        entries = pc.export_entries()
+        if not entries:
+            return None
+        return {"prefix_entries": entries,
+                "adapters": dict(self.srv.adapter_params),
+                "nbytes": int(sum(e.nbytes for _, e in entries))}
+
+    def resurrect_from(self, bundle: Dict[str, Any],
+                       cost_s: float = 0.0) -> int:
+        """Seed this spawn from a spilled bundle; the modeled pull holds
+        the server in ``loading`` for ``ceil(cost_s / tick_s)`` extra
+        ticks (max-overlapped with the normal cold start, like the real
+        lane's ``predicted_ready_s`` bound).  Returns entries admitted."""
+        pc = self.srv._pc
+        n = 0
+        if pc is not None:
+            n = pc.import_entries(bundle.get("prefix_entries", ()))
+        for name, params in bundle.get("adapters", {}).items():
+            self.srv.adapter_params.setdefault(name, params)
+        self.resurrect_cost_s = max(self.resurrect_cost_s, float(cost_s))
+        self._resurrect_ticks_left = max(
+            self._resurrect_ticks_left,
+            int(math.ceil(cost_s / max(self.ccfg.tick_s, 1e-9))))
+        return n
 
     # ---- multicast surface (mirrors ClusterServer) ------------------------
     @property
@@ -271,10 +369,14 @@ class SimServer:
             return 0.0
         if self.state == "loading":
             if self._mc is not None:
-                return self._mc.eta_s(self.sid,
+                base = self._mc.eta_s(self.sid,
                                       self._ready_segs - self._segs_done)
-            left = max(0, self.profile.ready_ticks - self._load_ticks)
-            return left * self.ccfg.tick_s
+            else:
+                left = max(0, self.profile.ready_ticks - self._load_ticks)
+                base = left * self.ccfg.tick_s
+            # a state-tier pull overlaps the cold start; readiness is the
+            # slower of the two (mirrors ClusterServer.predicted_ready_s)
+            return max(base, self._resurrect_ticks_left * self.ccfg.tick_s)
         if self.state == "recovering":
             return max(0, self._recover_left) * self.ccfg.tick_s
         return math.inf
@@ -295,12 +397,16 @@ class SimServer:
         progress (ready flip serves the SAME tick), recovery countdown,
         background fill, one modeled engine step, idle bookkeeping."""
         if self.state == "loading":
+            if self._resurrect_ticks_left > 0:
+                self._resurrect_ticks_left -= 1   # state-tier pull in flight
             if self._mc is None:
                 self._load_ticks += 1
                 if self._load_ticks < self.profile.ready_ticks:
                     return []
             elif self._segs_done < self._ready_segs:
                 return []       # multicast fill: waiting on deliveries
+            if self._resurrect_ticks_left > 0:
+                return []       # warm pull outlives the cold start: wait
             self.state = "serving"
             if self.ready_at is None:
                 self.ready_at = now
@@ -362,6 +468,7 @@ class SimServer:
         self.state = "loading"
         self._load_ticks = 0
         self._segs_done = 0
+        self._resurrect_ticks_left = 0
         self.ready_at = None
         self.fully_loaded_at = None
         self.served_while_loading = False

@@ -42,6 +42,12 @@ class Arrival:
     seed: int = 0               # per-request prompt-content seed
     model: Optional[str] = None          # fleet pool (None = default pool)
     ttft_deadline_s: Optional[float] = None  # TTFT SLO relative to arrival
+    # shared-prefix prompts (prefix-cache workloads): the first
+    # ``prefix_len`` tokens are drawn from ``prefix_seed`` so arrivals
+    # sharing it share an exact token prefix; 0/None = fully per-request
+    # content (the pre-state-tier behavior, and what old JSON loads as)
+    prefix_len: int = 0
+    prefix_seed: Optional[int] = None
 
 
 def _materialize(times: Sequence[float], rng: np.random.Generator, *,
@@ -305,10 +311,53 @@ def load_trace(path: str) -> List[Arrival]:
 
 
 def prompt_tokens(arrival: Arrival, vocab_size: int) -> np.ndarray:
-    """Deterministic prompt content for an arrival (seed-addressed)."""
-    rng = np.random.default_rng(arrival.seed)
-    return rng.integers(0, min(vocab_size, 250),
-                        size=arrival.prompt_len).astype(np.int64)
+    """Deterministic prompt content for an arrival (seed-addressed).
+
+    With ``prefix_len`` > 0 the first ``prefix_len`` tokens come from
+    ``prefix_seed`` (arrivals sharing it share the exact token prefix —
+    the shared-system-prompt shape the prefix cache exploits) and the
+    remainder from the per-request ``seed``.  ``prefix_len`` 0 keeps the
+    original single-draw behavior bit-for-bit.
+    """
+    hi = min(vocab_size, 250)
+    n_pre = min(max(0, arrival.prefix_len), arrival.prompt_len) \
+        if arrival.prefix_seed is not None else 0
+    if n_pre == 0:
+        rng = np.random.default_rng(arrival.seed)
+        return rng.integers(0, hi,
+                            size=arrival.prompt_len).astype(np.int64)
+    pre = np.random.default_rng(arrival.prefix_seed) \
+        .integers(0, hi, size=n_pre).astype(np.int64)
+    sfx = np.random.default_rng(arrival.seed) \
+        .integers(0, hi, size=arrival.prompt_len - n_pre).astype(np.int64)
+    return np.concatenate([pre, sfx])
+
+
+def repeated_prefix_trace(n: int, *, prefix_len: int, suffix_len: int,
+                          n_prefixes: int = 1, gap_s: float = 0.2,
+                          max_new_tokens: int = 6, seed: int = 0,
+                          model: Optional[str] = None,
+                          adapter: Optional[str] = None,
+                          ttft_deadline_s: Optional[float] = None
+                          ) -> List[Arrival]:
+    """Evenly spaced arrivals whose prompts cycle over ``n_prefixes``
+    shared token prefixes with per-request suffixes — the workload shape
+    (system prompt + unique user turn) the cross-request prefix cache is
+    built for.  Deterministic in ``seed``; arrival ``i`` lands at
+    ``i * gap_s`` and reuses prefix ``i % n_prefixes``.
+
+    Pick a ``gap_s`` OFF the router's tick grid (not a multiple of
+    ``tick_s`` — same rule as chaos event times): an arrival exactly on
+    a tick boundary can be admitted on different ticks by the tick and
+    event engines (their clocks accumulate float error differently)."""
+    out = []
+    for i in range(n):
+        out.append(Arrival(
+            time=i * gap_s, prompt_len=prefix_len + suffix_len,
+            max_new_tokens=max_new_tokens, adapter=adapter,
+            seed=seed + i, model=model, ttft_deadline_s=ttft_deadline_s,
+            prefix_len=prefix_len, prefix_seed=10_000 + (i % n_prefixes)))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -160,6 +160,21 @@ def snapshot_transfer_time(nbytes: int, hw: HwModel,
     return hw.hop_latency + nbytes / bw
 
 
+def state_resurrect_time(nbytes: int, hw: HwModel,
+                         concurrent: int = 1) -> float:
+    """Seconds to pull a spilled state-tier bundle (prefix-cache rows +
+    KV snapshots) from host DRAM back onto a freshly spawned server.
+
+    The bundle streams over the DRAM->device path, so with ``concurrent``
+    simultaneous pulls (several servers resurrecting, or a resurrect
+    overlapping host cold-start fills) each stream shares the aggregate
+    via :func:`host_bw_effective` — the same contention model multicast
+    prices host fills through — plus one per-device transfer setup cost.
+    The cluster router prices spill/resurrect decisions with this
+    (``docs/ARCHITECTURE.md`` § "Fleet state tier")."""
+    return hw.transfer_fixed_s + nbytes / host_bw_effective(hw, concurrent)
+
+
 # ---------------------------------------------------------------------------
 # Cold start
 # ---------------------------------------------------------------------------

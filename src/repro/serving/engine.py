@@ -144,6 +144,15 @@ class ContinuousBatcher:
         self.n_batched_imports = 0       # import_snapshots scatter calls
         self.n_relay_scatters = 0        # relay_inflight scatter calls
                                          # (repartition re-lay)
+        # cross-request prefix reuse (serving/prefix_cache.py): when a
+        # store is attached, admission probes it per request, imports hits
+        # through the shared donated scatter, and prefills only the
+        # uncached suffix; completed/drained prompts deposit their rows
+        self.prefix_cache = None
+        self._prefix_evict_base = 0      # evictions before attach (delta)
+        self.n_prefill_tokens = 0        # real (unpadded) tokens prefilled
+        self.prefix_hits = 0             # admissions served from the cache
+        self.prefix_hit_tokens = 0       # prompt tokens NOT re-prefilled
         self._sampler = sampler or (lambda lg: jnp.argmax(lg, axis=-1))
         self._build_jits()
 
@@ -306,6 +315,19 @@ class ContinuousBatcher:
         self.admit_batch([req])
         return True
 
+    def attach_prefix_cache(self, cache) -> None:
+        """Attach (or detach with ``None``) a ``PrefixCache``.
+
+        Eviction accounting is delta-based from this moment, so a store
+        that moves between servers via the cluster's ``StateTier`` never
+        double-counts its history into two servers' hot-path stats.
+        Prefix reuse rides the bucketed-attention cache contract
+        (``_can_bucket``): SSM/recurrent state integrates every token and
+        a ring buffer evicts real K/V, so those models skip probing.
+        """
+        self.prefix_cache = cache
+        self._prefix_evict_base = 0 if cache is None else cache.evictions
+
     def admit_batch(self, reqs: Sequence[ServeRequest]) -> None:
         """Prefill several requests in one batched, bucketed call.
 
@@ -313,13 +335,112 @@ class ContinuousBatcher:
         padded to the largest bucket in the group (the scheduler groups by
         bucket, so normally they share one).  Models that can't pad safely
         are prefilled one by one at exact length.
+
+        With a prefix cache attached, each fresh request first probes it:
+        hits import their cached prompt-prefix rows and replay only the
+        uncached suffix (``_admit_prefix_hits``); misses — and re-submits
+        carrying a generated prefix — take the normal prefill path.
         """
         assert len(reqs) <= len(self.free), (len(reqs), len(self.free))
+        hits: List[Tuple[ServeRequest, Any]] = []
+        misses: List[ServeRequest] = []
+        for r in reqs:
+            h = None
+            if (self.prefix_cache is not None and self._can_bucket
+                    and not r.generated):
+                h = self.prefix_cache.probe(self.cfg.name, r.adapter,
+                                            np.asarray(r.tokens, np.int64))
+            if h is None:
+                misses.append(r)
+            else:
+                hits.append((r, h))
+        if hits:
+            self._admit_prefix_hits(hits)
+        if not misses:
+            return
         if not self._can_bucket:
-            for r in reqs:
+            for r in misses:
                 self._admit_rows([r])
         else:
-            self._admit_rows(list(reqs))
+            self._admit_rows(misses)
+
+    def _admit_prefix_hits(self, hits: List[Tuple[ServeRequest, Any]]
+                           ) -> None:
+        """Admit prefix-cache hits: import cached rows, walk the suffix.
+
+        The cached rows land in ONE donated ``fused_scatter`` — the same
+        compilation batched migration and the pipeline prefill share, so
+        cache imports add zero compiles — with each hit's slot position
+        set to its usable prefix length ``k``.  The uncached suffix then
+        replays through the already-compiled fused decode step: walk step
+        ``i`` feeds suffix token ``i`` of every hit still walking, while
+        finished hits and unrelated live slots are frozen by the active
+        mask (the existing free-slot mechanism: their pos is restored and
+        the garbage write at their uncommitted index is overwritten by
+        their next real step).  Each hit therefore emits exactly ONE
+        sampled token at admission — the observable shape of a cold
+        prefill.  Sampled tokens accumulate on device; a single host read
+        at the end picks each hit's first generated token (the sample
+        after its last prompt token).  Bit-identity with cold prefill
+        rides on the same quantized-sampler argument as snapshot resume:
+        rows are exact host copies, and causal attention makes prefix KV
+        a function of prefix tokens only.
+        """
+        P = self.n_slots
+        slots_np = np.zeros((P,), np.int32)
+        pos_np = np.zeros((P,), np.int32)
+        valid_np = np.zeros((P,), bool)
+        rows: Dict[str, Dict[str, np.ndarray]] = {}
+        assigned: List[Tuple[int, ServeRequest, int, np.ndarray]] = []
+        for j, (req, (entry, k)) in enumerate(hits):
+            slot = self.free.pop()
+            req.slot = slot
+            slots_np[j] = slot
+            pos_np[j] = k
+            valid_np[j] = True
+            for kind, leaves in entry.rows.items():
+                dst = rows.setdefault(kind, {})
+                for leaf, a in leaves.items():
+                    if leaf not in dst:
+                        dst[leaf] = np.zeros((a.shape[0], P) + a.shape[1:],
+                                             a.dtype)
+                    dst[leaf][:, j] = a
+            assigned.append((slot, req, k,
+                             np.asarray(req.tokens, np.int64)[k:]))
+        self.cache = self._scatter_fused(
+            self.cache, rows, jnp.asarray(slots_np), jnp.asarray(pos_np),
+            jnp.asarray(valid_np))
+        for _, (entry, _k) in hits:
+            self.prefix_cache.release(entry)
+        W = max(len(sfx) for _, _, _, sfx in assigned)
+        toks = np.zeros((W, P), np.int32)
+        act = np.zeros((W, P), bool)
+        for slot, _req, _k, sfx in assigned:
+            w = len(sfx)
+            toks[:w, slot] = sfx
+            act[:w, slot] = True
+        outs = []
+        for i in range(W):
+            nxt, self.cache = self._decode_fused(
+                self.params, jnp.asarray(toks[i]), jnp.asarray(act[i]),
+                self.cache)
+            outs.append(nxt)
+        # pbcheck: disable=R2 (designed sync: ONE host read for the whole suffix walk; admission needs the hits' first tokens)
+        walked = np.asarray(jnp.stack(outs))
+        for slot, req, k, sfx in assigned:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += k
+            self.n_prefill_tokens += len(sfx)
+            tok = int(walked[len(sfx) - 1, slot])
+            req.generated.append(tok)
+            at_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or at_eos:
+                req.done = True
+                self.free.append(slot)
+                req.slot = -1
+            else:
+                self.active[slot] = req
+        self._io_dirty = True
 
     def _admit_rows(self, reqs: List[ServeRequest]) -> None:
         bucket = max(self.bucket_for(r) for r in reqs)
@@ -341,6 +462,7 @@ class ContinuousBatcher:
             if req.generated:
                 t = np.concatenate([t, np.asarray(req.generated, np.int64)])
             L = len(t)
+            self.n_prefill_tokens += L
             toks[i, :L] = t
             last_idx[i] = L - 1
             slot = self.free.pop()
@@ -405,6 +527,7 @@ class ContinuousBatcher:
         nxt_host = np.asarray(nxt)
         self.n_decode_steps += 1
         finished = []
+        done_slots: List[Tuple[int, ServeRequest]] = []
         for slot, req in list(self.active.items()):
             tok = int(nxt_host[slot])
             req.generated.append(tok)
@@ -412,12 +535,41 @@ class ContinuousBatcher:
             if len(req.generated) >= req.max_new_tokens or at_eos:
                 req.done = True
                 finished.append(req)
+                done_slots.append((slot, req))
                 del self.active[slot]
                 self.free.append(slot)
         if finished:
             self._io_dirty = True        # active mask changed
+            if self.prefix_cache is not None and self._can_bucket:
+                # deposit finished prompts before their slots are reused
+                # (nothing else touches the cache within this step)
+                self._deposit_prefixes(done_slots)
         self.decode_time_s += time.perf_counter() - t0
         return finished
+
+    def _deposit_prefixes(self, pairs: Sequence[Tuple[int, ServeRequest]]
+                          ) -> None:
+        """Insert finished requests' prompt-prefix KV into the attached
+        prefix cache.  Prompts the store already covers are skipped
+        BEFORE exporting, so the device->host row transfer only happens
+        for genuinely new prefixes; the batched ``export_slots`` keeps it
+        to one transfer per kind leaf for the rest."""
+        todo: List[Tuple[int, ServeRequest, np.ndarray]] = []
+        for slot, req in pairs:
+            toks = np.asarray(req.tokens, np.int64)
+            if toks.shape[0] < 2:
+                continue                 # nothing reusable below 2 tokens
+            if self.prefix_cache.covers(self.cfg.name, req.adapter, toks):
+                continue
+            todo.append((slot, req, toks))
+        if not todo:
+            return
+        snaps = export_slots(self.cache, [s for s, _, _ in todo],
+                             arch=self.cfg.name, max_len=self.max_len)
+        for (_slot, req, toks), snap in zip(todo, snaps):
+            self.prefix_cache.insert(self.cfg.name, req.adapter, toks,
+                                     min(toks.shape[0], snap.pos),
+                                     rows=snap.rows)
 
     def drain(self, export_state: bool = True) -> List[ServeRequest]:
         """Pull every in-flight request out of the batch (server crash /
@@ -436,6 +588,16 @@ class ContinuousBatcher:
                                  arch=self.cfg.name, max_len=self.max_len)
             for (_, req), snap in zip(items, snaps):
                 req.snapshot = snap
+                # the rows are already on host: deposit the prompt prefix
+                # for free (drain insertion — the other half of the
+                # completion-time deposit)
+                if self.prefix_cache is not None and self._can_bucket:
+                    toks = np.asarray(req.tokens, np.int64)
+                    if toks.shape[0] >= 2 and not self.prefix_cache.covers(
+                            self.cfg.name, req.adapter, toks):
+                        self.prefix_cache.insert(
+                            self.cfg.name, req.adapter, toks,
+                            min(toks.shape[0], snap.pos), rows=snap.rows)
         drained = []
         for slot, req in items:
             req.slot = -1
@@ -691,6 +853,13 @@ class ContinuousBatcher:
             "n_prefill_pipeline": float(self.n_prefill_pipeline),
             "n_batched_imports": float(self.n_batched_imports),
             "n_relay_scatters": float(self.n_relay_scatters),
+            "n_prefill_tokens": float(self.n_prefill_tokens),
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
+            "prefix_evictions": (
+                0.0 if self.prefix_cache is None
+                else float(self.prefix_cache.evictions
+                           - self._prefix_evict_base)),
         }
         s.update({k: float(v) for k, v in self.compile_stats().items()})
         return s
@@ -872,6 +1041,11 @@ class ServingEngine:
                 break
             out.extend(item.req for item in batch)
         return out
+
+    def attach_prefix_cache(self, cache) -> None:
+        """Attach a cross-request ``PrefixCache`` to the batcher (see
+        ContinuousBatcher.attach_prefix_cache)."""
+        self.batcher.attach_prefix_cache(cache)
 
     def reconstruct_inflight(self, has_state) -> Dict[str, float]:
         """Partial-crash in-place rebuild of the live batch's lost layers

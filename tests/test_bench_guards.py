@@ -1,14 +1,16 @@
 """Benchmark tooling guards: the compile-count verdict logic, the keyed
 trajectory-JSON writer (re-runs replace, never duplicate), and the
-docstring-coverage gate CI runs over the cluster layer."""
+docstring-coverage rule (pbcheck R6) CI runs over the documented
+layers."""
+import ast
 import json
 
 import pytest
 
 from benchmarks.compile_guard import evaluate
-from benchmarks.docstring_gate import collect
-from benchmarks.docstring_gate import main as gate_main
 from benchmarks.run import append_keyed_entry
+from repro.analysis.cli import CheckConfig, run_check
+from repro.analysis.rules.docstrings import iter_defs
 
 
 GOOD = {"prefill_compiles": 3, "decode_compiles": 1}
@@ -101,7 +103,9 @@ def test_keyed_entry_preserves_legacy_unkeyed_rows(tmp_path):
     assert len(entries) == 2 and entries[0]["value"] == 5
 
 # ---------------------------------------------------------------------------
-# docstring-coverage gate (benchmarks/docstring_gate.py)
+# docstring coverage (pbcheck R6 — the successor of the retired
+# benchmarks/docstring_gate.py percentage gate; same walk, per-item
+# findings instead of a coverage number)
 # ---------------------------------------------------------------------------
 
 _SAMPLE = '''"""Module doc."""
@@ -154,56 +158,74 @@ def _write_sample(tmp_path, name="mod.py", text=_SAMPLE):
     return str(p)
 
 
-def test_gate_exclusions_mirror_interrogate(tmp_path):
+# docstring_paths=("",) scopes R6 onto the tmp files (substring match)
+def _r6(paths, root):
+    return run_check(paths, CheckConfig(rules=("R6",),
+                                        docstring_paths=("",)),
+                     root=root)
+
+
+def test_r6_exclusions_mirror_interrogate():
     """Only module + public class + public non-property defs count:
     dunders, properties/setters, private names, private scopes, and
-    function-nested functions are all invisible to the gate."""
-    entries = collect([_write_sample(tmp_path)])
-    quals = {q: ok for _, q, _, ok in entries}
+    function-nested functions are all invisible to the walk."""
+    quals = {q: ok for _, q, _, ok in iter_defs(ast.parse(_SAMPLE))}
     assert set(quals) == {"<module>", "Public", "Public.documented",
                           "Public.bare", "documented_fn", "bare_fn"}
     assert [q for q, ok in sorted(quals.items()) if not ok] == \
         ["Public.bare", "bare_fn"]
 
 
-def test_gate_pass_and_fail_thresholds(tmp_path, capsys):
-    path = _write_sample(tmp_path)
-    # 4/6 documented = 66.7%: below 95 fails, below-threshold 50 passes
-    assert gate_main([path, "--fail-under", "95"]) == 1
-    assert "FAIL" in capsys.readouterr().out
-    assert gate_main([path, "--fail-under", "50"]) == 0
-    out = capsys.readouterr().out
-    assert "4/6 = 66.7%" in out and "OK" in out
+def test_r6_reports_each_missing_name(tmp_path):
+    """Per-item findings (the reason R6 replaced the percentage gate):
+    exactly the two undocumented defs are flagged, by qualname."""
+    _write_sample(tmp_path)
+    res = _r6([str(tmp_path)], root=str(tmp_path))
+    details = sorted(f.detail for f in res.findings)
+    assert details == ["missing-doc:function:Public.bare",
+                       "missing-doc:function:bare_fn"]
+    assert not any("documented" in d for d in details)
 
 
-def test_gate_reports_missing_names(tmp_path, capsys):
-    gate_main([_write_sample(tmp_path), "--fail-under", "0", "-v"])
-    out = capsys.readouterr().out
-    assert "Public.bare" in out and "bare_fn" in out
-    assert "Public.documented" not in out
+def test_r6_clean_file_has_no_findings(tmp_path):
+    _write_sample(tmp_path, text='"""Doc."""\n\ndef f():\n    """D."""\n')
+    assert _r6([str(tmp_path)], root=str(tmp_path)).ok
 
 
-def test_gate_walks_directories_and_skips_pycache(tmp_path):
+def test_r6_walks_directories_and_skips_pycache(tmp_path):
     _write_sample(tmp_path, "a.py")
     (tmp_path / "__pycache__").mkdir()
     _write_sample(tmp_path / "__pycache__", "b.py",
                   text="def junk():\n    return 0\n")
-    entries = collect([str(tmp_path)])
-    assert all("__pycache__" not in p for p, _, _, _ in entries)
-    assert len(entries) == 6
+    res = _r6([str(tmp_path)], root=str(tmp_path))
+    assert res.n_files == 1
+    assert all("__pycache__" not in f.path for f in res.findings)
 
 
-def test_gate_rejects_unparseable_source(tmp_path):
+def test_r6_rejects_unparseable_source(tmp_path):
     bad = tmp_path / "bad.py"
     bad.write_text("def broken(:\n")
     with pytest.raises(SystemExit, match="not parseable"):
-        collect([str(bad)])
+        _r6([str(bad)], root=str(tmp_path))
 
 
-def test_cluster_layer_meets_its_own_gate():
-    """The CI invocation verbatim: the shipped cluster layer satisfies
-    the gate it is guarded by."""
-    assert gate_main(["src/repro/cluster", "--fail-under", "95"]) == 0
+def test_r6_scoping_skips_paths_outside_the_documented_layers(tmp_path):
+    """R6 only fires inside ``docstring_paths`` — the same scoping the
+    CI invocation relies on to leave undocumented scratch code alone."""
+    _write_sample(tmp_path)
+    res = run_check([str(tmp_path)],
+                    CheckConfig(rules=("R6",),
+                                docstring_paths=("repro/cluster/",)),
+                    root=str(tmp_path))
+    assert res.ok and not res.findings
+
+
+def test_cluster_layer_meets_r6():
+    """The CI gate verbatim: the shipped documented layers carry full
+    public-API docstring coverage under R6."""
+    res = run_check(["src/repro/cluster", "src/repro/analysis"],
+                    CheckConfig(rules=("R6",)))
+    assert res.ok, [f.render() for f in res.findings]
 
 
 # ---------------------------------------------------------------------------

@@ -175,17 +175,20 @@ def test_bench_schema_rejects_bool_as_number(tmp_path):
     assert any("speedup" in e for e in errors)
 
 
-def test_bench_schema_tolerates_legacy_unkeyed_entry(tmp_path):
-    legacy = {k: v for k, v in _GOOD_COLDSTART.items()
-              if k not in ("commit", "config")}
-    p = _write_bench(tmp_path, "BENCH_coldstart.json", [legacy])
+def test_bench_schema_rejects_unkeyed_entry(tmp_path):
+    """Every entry must carry the (commit, config) trajectory key — the
+    one pre-PR-6 unkeyed row was backfilled, so the tolerance is gone."""
+    unkeyed = {k: v for k, v in _GOOD_COLDSTART.items()
+               if k not in ("commit", "config")}
+    p = _write_bench(tmp_path, "BENCH_coldstart.json", [unkeyed])
     errors, _ = validate_file(p)
-    assert not errors
-    # but commit WITHOUT config (or vice versa) is an error
+    assert any("commit" in e for e in errors)
+    assert any("config" in e for e in errors)
+    # half a key is equally an error
     half = {k: v for k, v in _GOOD_COLDSTART.items() if k != "config"}
     p2 = _write_bench(tmp_path, "BENCH_coldstart.json", [half])
     errors2, _ = validate_file(p2)
-    assert errors2
+    assert any("config" in e for e in errors2)
 
 
 def test_bench_schema_checked_in_files_validate():

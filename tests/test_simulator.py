@@ -143,3 +143,68 @@ def test_property_pipeboost_never_slower(link, agg, ssd, n):
         assert pb.ttft <= pb_small.ttft + 0.05  # hop overheads may add ms
     # background fill never finishes before the serve-ready point
     assert pb.t_full >= pb.t_ready - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# host bandwidth sharing + state-tier resurrect pricing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw", [GPU_PAPER, TPU_V5E])
+def test_host_bw_effective_exact(hw):
+    """N concurrent streams split host_agg_bw, each capped at its link:
+    the exact min(link, agg/N) law, checked for both hardware models."""
+    for n in (1, 2, 4, 8, 64):
+        eff = sim.host_bw_effective(hw, n)
+        assert eff == min(hw.host_link_bw, hw.host_agg_bw / n)
+    # link-limited regime: few streams each saturate their own link
+    assert sim.host_bw_effective(hw, 1) == hw.host_link_bw
+    # aggregate-limited regime: enough streams to oversubscribe the host
+    many = int(hw.host_agg_bw / hw.host_link_bw) * 4
+    assert sim.host_bw_effective(hw, many) == hw.host_agg_bw / many
+
+
+def test_host_bw_effective_monotone_and_guarded():
+    """More streams never get MORE per-stream bandwidth, and degenerate
+    concurrent counts (0, negative) behave like a single stream."""
+    prev = None
+    for n in range(1, 33):
+        eff = sim.host_bw_effective(GPU_PAPER, n)
+        if prev is not None:
+            assert eff <= prev + 1e-9
+        prev = eff
+    assert sim.host_bw_effective(GPU_PAPER, 0) == \
+        sim.host_bw_effective(GPU_PAPER, 1)
+    assert sim.host_bw_effective(GPU_PAPER, -3) == \
+        sim.host_bw_effective(GPU_PAPER, 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    link=st.floats(1e9, 40e9),
+    agg=st.floats(20e9, 400e9),
+    n=st.integers(1, 128),
+)
+def test_property_host_bw_conservation(link, agg, n):
+    """For ANY hardware point: no stream exceeds its link, and the fleet
+    of N streams never collectively exceeds the aggregate path."""
+    hw = HwModel(host_link_bw=link, host_agg_bw=agg)
+    eff = sim.host_bw_effective(hw, n)
+    assert eff <= link + 1e-9
+    assert n * eff <= agg * (1 + 1e-9) or eff == link
+
+
+def test_state_resurrect_time_prices_contention():
+    """Resurrect pulls pay the fixed setup plus bytes over the SHARED
+    host path: single-stream matches link rate, concurrent pulls slow
+    down once the aggregate saturates, zero bytes cost only the setup."""
+    nb = 1 << 30
+    t1 = sim.state_resurrect_time(nb, GPU_PAPER)
+    assert t1 == pytest.approx(GPU_PAPER.transfer_fixed_s
+                               + nb / GPU_PAPER.host_link_bw)
+    # enough concurrency to push per-stream below the link rate
+    many = int(GPU_PAPER.host_agg_bw / GPU_PAPER.host_link_bw) + 1
+    assert sim.state_resurrect_time(nb, GPU_PAPER, many) > t1
+    assert sim.state_resurrect_time(0, GPU_PAPER) == \
+        GPU_PAPER.transfer_fixed_s
+    # bigger bundles take longer; monotone in payload
+    assert sim.state_resurrect_time(2 * nb, GPU_PAPER) > t1

@@ -1,0 +1,464 @@
+"""Fleet state tier: prefix cache, spill/resurrect, engine bit-identity.
+
+Covers the cross-request prefix cache store (serving/prefix_cache.py),
+the host-side ``StateTier`` (cluster/state_tier.py), the real serving
+engine's hit-import path (one donated scatter + suffix walk, streams
+bit-identical to cold prefill, zero new compiles), and the cluster loop:
+idle retirement spills warm state, a later spawn resurrects it, and the
+tick and event engines replay the whole story identically.
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.cluster import (Autoscaler, AutoscalerConfig, ClusterConfig,
+                           ClusterMetrics, ClusterRouter, LogicalClock,
+                           SimProfile, SloAware, StateTier,
+                           repeated_prefix_trace, sim_server_factory)
+from repro.cluster.traces import Arrival, prompt_tokens
+from repro.serving.prefix_cache import PrefixCache, PrefixEntry, _lcp
+
+RNG = np.random.default_rng(7)
+
+
+def _toks(*vals):
+    return np.asarray(vals, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache store semantics (pure host, no JAX)
+# ---------------------------------------------------------------------------
+
+def test_lcp_basic():
+    assert _lcp(_toks(1, 2, 3), _toks(1, 2, 3)) == 3
+    assert _lcp(_toks(1, 2, 3), _toks(1, 2, 9, 9)) == 2
+    assert _lcp(_toks(5), _toks(6)) == 0
+    assert _lcp(_toks(), _toks(1, 2)) == 0
+
+
+def test_probe_matches_shared_prefix_different_suffix():
+    """The case per-length hashing provably fails: a donor prompt serves
+    a new prompt sharing only a shorter prefix, with no entry ever
+    inserted at that length."""
+    pc = PrefixCache()
+    donor = _toks(*range(10))
+    pc.insert("m", None, donor, pos=10, rows=None, nbytes=100)
+    query = np.concatenate([donor[:6], _toks(99, 98)])
+    hit = pc.probe("m", None, query)
+    assert hit is not None
+    entry, k = hit
+    assert k == 6
+    pc.release(entry)
+    # exact replay of the donor prompt: usable prefix is len-1 (one
+    # suffix token must remain to produce the first sampled logits)
+    _, k2 = pc.probe("m", None, donor)
+    assert k2 == 9
+
+
+def test_probe_keys_on_arch_and_adapter():
+    pc = PrefixCache()
+    t = _toks(1, 2, 3, 4)
+    pc.insert("m", "lora-a", t, pos=4, rows=None, nbytes=10)
+    assert pc.probe("m", None, t) is None
+    assert pc.probe("other", "lora-a", t) is None
+    assert pc.probe("m", "lora-a", t) is not None
+
+
+def test_match_len_is_pure_read():
+    pc = PrefixCache()
+    t = _toks(1, 2, 3, 4)
+    pc.insert("m", None, t, pos=4, rows=None, nbytes=10)
+    assert pc.match_len("m", None, t) == 3
+    assert pc.hits == 0 and pc.hit_tokens == 0
+    e, _ = pc.probe("m", None, t)
+    assert e.refs == 1 and pc.hits == 1
+    pc.match_len("m", None, t)
+    assert e.refs == 1                      # no extra pin from match_len
+    pc.release(e)
+    assert e.refs == 0
+
+
+def test_insert_skips_covered_and_drops_dominated():
+    pc = PrefixCache()
+    long = _toks(*range(8))
+    assert pc.insert("m", None, long, pos=8, rows=None, nbytes=80)
+    # already covered: a shorter prefix of an existing entry is a no-op
+    assert not pc.insert("m", None, long[:5], pos=5, rows=None, nbytes=50)
+    assert pc.n_entries == 1
+    # dominated in the other direction: a longer prompt whose prefix IS
+    # the old entry's full tokens replaces it
+    pc2 = PrefixCache()
+    pc2.insert("m", None, long[:5], pos=5, rows=None, nbytes=50)
+    pc2.insert("m", None, long, pos=8, rows=None, nbytes=80)
+    assert pc2.n_entries == 1
+    assert pc2.evictions == 1
+    assert pc2.bytes_used == 80
+
+
+def test_lru_eviction_respects_byte_budget_and_pins():
+    pc = PrefixCache(capacity_bytes=250)
+    a = _toks(1, 2, 3)
+    b = _toks(4, 5, 6)
+    c = _toks(7, 8, 9)
+    pc.insert("m", None, a, pos=3, rows=None, nbytes=100)
+    pc.insert("m", None, b, pos=3, rows=None, nbytes=100)
+    ea, _ = pc.probe("m", None, np.concatenate([a, _toks(50)]))  # pin a
+    pc.insert("m", None, c, pos=3, rows=None, nbytes=100)
+    # budget forced one eviction; the pinned entry must have survived
+    # even though it is NOT the most recently used
+    assert pc.bytes_used <= 250 or any(
+        e.refs for g in pc._groups.values() for e in g)
+    assert pc.covers("m", None, a)
+    assert not pc.covers("m", None, b)      # LRU victim was b
+    assert pc.covers("m", None, c)
+    pc.release(ea)
+    assert pc.evictions >= 1
+
+
+def test_insert_rowsless_requires_nbytes_and_respects_capacity():
+    pc = PrefixCache(capacity_bytes=100)
+    with pytest.raises(ValueError):
+        pc.insert("m", None, _toks(1, 2), pos=2)
+    # an entry larger than the whole budget is refused outright
+    assert not pc.insert("m", None, _toks(1, 2), pos=2, nbytes=101)
+    assert pc.insert("m", None, _toks(1, 2), pos=2, nbytes=99)
+
+
+def test_export_import_round_trip():
+    pc = PrefixCache()
+    pc.insert("m", None, _toks(1, 2, 3), pos=3, rows=None, nbytes=30)
+    pc.insert("m", "a", _toks(4, 5), pos=2, rows=None, nbytes=20)
+    items = pc.export_entries()
+    assert len(items) == 2
+    fresh = PrefixCache()
+    assert fresh.import_entries(items) == 2
+    assert fresh.covers("m", None, _toks(1, 2, 3))
+    assert fresh.covers("m", "a", _toks(4, 5))
+    # re-import into the SAME cache is a covered no-op
+    assert pc.import_entries(items) == 0
+
+
+def test_stats_keys_stable():
+    pc = PrefixCache()
+    assert set(pc.stats()) == {
+        "prefix_hits", "prefix_hit_tokens", "prefix_evictions",
+        "prefix_insertions", "prefix_bytes", "prefix_entries"}
+
+
+# ---------------------------------------------------------------------------
+# StateTier bundle store
+# ---------------------------------------------------------------------------
+
+def _bundle(nb, entries=1):
+    e = [(("m", None), PrefixEntry(tokens=_toks(i, i + 1), pos=2,
+                                   rows=None, nbytes=nb // entries))
+         for i in range(entries)]
+    return {"prefix_entries": e, "adapters": {"a": object()}, "nbytes": nb}
+
+
+def test_state_tier_spill_merge_and_take():
+    tier = StateTier()
+    tier.spill("p", _bundle(100, entries=2))
+    tier.spill("p", _bundle(50))
+    assert tier.peek_nbytes("p") == 150
+    assert tier.pools == ["p"]
+    got = tier.take("p")
+    assert got is not None and got["nbytes"] == 150
+    assert len(got["prefix_entries"]) == 3
+    # exactly one spawn resurrects each spill generation
+    assert tier.take("p") is None
+    assert tier.peek_nbytes("p") == 0
+    s = tier.stats()
+    assert s["spill_count"] == 2.0
+    assert s["spilled_bytes"] == 150.0
+    assert s["spill_resurrections"] == 1.0
+    assert s["resurrected_bytes"] == 150.0
+
+
+def test_state_tier_pools_are_independent():
+    tier = StateTier()
+    tier.spill("a", _bundle(10))
+    tier.spill(None, _bundle(20))            # standalone router: no pool
+    assert tier.take("b") is None
+    assert tier.take("a")["nbytes"] == 10
+    assert tier.take(None)["nbytes"] == 20
+
+
+# ---------------------------------------------------------------------------
+# traces: shared-prefix prompt composition
+# ---------------------------------------------------------------------------
+
+def test_prompt_tokens_prefix_composition():
+    a1 = Arrival(0.0, prompt_len=12, seed=1, prefix_len=8, prefix_seed=42)
+    a2 = Arrival(1.0, prompt_len=12, seed=2, prefix_len=8, prefix_seed=42)
+    t1, t2 = prompt_tokens(a1, 250), prompt_tokens(a2, 250)
+    assert np.array_equal(t1[:8], t2[:8])
+    assert not np.array_equal(t1[8:], t2[8:])
+    # prefix_len=0 (and legacy records without the fields) keeps the
+    # original single-draw content bit-for-bit
+    legacy = Arrival(0.0, prompt_len=12, seed=1)
+    expect = np.random.default_rng(1).integers(0, 250, size=12)
+    assert np.array_equal(prompt_tokens(legacy, 250), expect)
+
+
+def test_repeated_prefix_trace_shape():
+    tr = repeated_prefix_trace(6, prefix_len=10, suffix_len=3,
+                               n_prefixes=2, gap_s=0.07, seed=5)
+    assert len(tr) == 6
+    assert all(a.prompt_len == 13 for a in tr)
+    assert tr[0].prefix_seed == tr[2].prefix_seed != tr[1].prefix_seed
+    p0, p2 = prompt_tokens(tr[0], 250), prompt_tokens(tr[2], 250)
+    assert np.array_equal(p0[:10], p2[:10])
+
+
+# ---------------------------------------------------------------------------
+# cluster loop: spill -> resurrect, tick == event (modeled backend)
+# ---------------------------------------------------------------------------
+
+def _tier_run(engine):
+    ccfg = ClusterConfig(tick_s=0.05, n_slots=4, prefix_cache_bytes=64 << 20)
+    auto = Autoscaler(AutoscalerConfig(min_servers=1, max_servers=2,
+                                       idle_ticks_before_retire=20))
+    # two bursts with an idle gap long enough to retire the scaled-up
+    # server in between; gaps sit OFF the tick grid (see traces docs)
+    wave1 = repeated_prefix_trace(16, prefix_len=24, suffix_len=4,
+                                  gap_s=0.021, seed=0)
+    wave2 = repeated_prefix_trace(12, prefix_len=24, suffix_len=4,
+                                  gap_s=0.011, seed=100)
+    trace = wave1 + [dataclasses.replace(a, time=a.time + 8.003)
+                     for a in wave2]
+    cfg = types.SimpleNamespace(vocab_size=250, name="m")
+    r = ClusterRouter(cfg, None, n_servers=2, ccfg=ccfg, autoscaler=auto,
+                      dispatch=SloAware(step_cost_s=0.05,
+                                        prefix_bonus_s_per_token=0.001),
+                      clock=LogicalClock(), metrics=ClusterMetrics(),
+                      server_factory=sim_server_factory(SimProfile()),
+                      state_tier=StateTier())
+    done = r.run(trace, engine=engine)
+    return r, {q.rid: tuple(q.generated) for q in done}
+
+
+def test_spill_resurrect_cycle_tick_event_parity():
+    r_evt, s_evt = _tier_run("event")
+    r_tick, s_tick = _tier_run("tick")
+    assert s_evt == s_tick and len(s_evt) == 28
+    sum_evt, sum_tick = r_evt.metrics.summary(), r_tick.metrics.summary()
+    for k in ("n_completed", "prefix_hits", "prefix_hit_tokens",
+              "prefix_evictions", "spill_resurrections", "spilled_bytes",
+              "hotpath_n_prefill_tokens"):
+        assert abs(sum_evt[k] - sum_tick[k]) < 1e-9, (k, sum_evt[k],
+                                                      sum_tick[k])
+    assert sum_evt["prefix_hits"] > 0
+    assert sum_evt["spill_resurrections"] == 1.0
+    assert sum_evt["spilled_bytes"] > 0
+    kinds = [k for _, k, _ in r_evt.metrics.events]
+    assert "spill" in kinds and "resurrect" in kinds
+    # the resurrected server starts warm: its cache holds the spilled
+    # entries on top of whatever its own traffic deposited
+    warm = [s for s in r_evt.servers if s.sid == 2]
+    assert warm and warm[0].srv._pc.n_entries >= 8
+
+
+def test_summary_keys_always_present_when_tier_off():
+    """The five summary keys exist (as zeros) even for legacy runs with
+    no prefix cache and no state tier."""
+    m = ClusterMetrics()
+    s = m.summary()
+    for k in ("prefix_hits", "prefix_hit_tokens", "prefix_evictions",
+              "spill_resurrections", "spilled_bytes"):
+        assert s[k] == 0.0, k
+
+
+def test_resurrect_cost_delays_modeled_readiness():
+    """A big state-tier pull holds the spawn in ``loading`` past the
+    normal ready point (max-overlap, not additive)."""
+    ccfg = ClusterConfig(tick_s=0.05, n_slots=4, prefix_cache_bytes=1 << 20)
+    from repro.cluster.simserver import SimServer
+    s = SimServer(0, types.SimpleNamespace(name="m"), None, ccfg,
+                  profile=SimProfile(ready_ticks=2))
+    s.attach_prefix_cache(PrefixCache(1 << 20))
+    bundle = {"prefix_entries": [(("m", None), PrefixEntry(
+        tokens=_toks(1, 2, 3), pos=3, rows=None, nbytes=64))],
+        "adapters": {}, "nbytes": 64}
+    n = s.resurrect_from(bundle, cost_s=0.25)   # 5 ticks > ready_ticks=2
+    assert n == 1
+    assert s.predicted_ready_s(0.0) == pytest.approx(0.25)
+    ticks = 0
+    while s.state == "loading":
+        s.tick(ticks * 0.05)
+        ticks += 1
+    assert ticks == 5                           # held by the pull, not 2
+
+
+def test_slo_aware_prefix_bonus_steers_dispatch():
+    """With the bonus on, a warm-cache server wins a dispatch it would
+    otherwise tie/lose; with the default 0 the scoring is unchanged."""
+    ccfg = ClusterConfig(tick_s=0.05, n_slots=4)
+    cold = SimProfile()
+    mk = sim_server_factory(cold)
+    s0 = mk(0, types.SimpleNamespace(name="m"), None, ccfg)
+    s1 = mk(1, types.SimpleNamespace(name="m"), None, ccfg)
+    for s in (s0, s1):
+        s.state = "serving"
+    pc = PrefixCache()
+    warm_prompt = _toks(*range(20))
+    pc.insert("m", None, warm_prompt, pos=20, rows=None, nbytes=20 << 10)
+    s1.attach_prefix_cache(pc)
+    from repro.serving.engine import ServeRequest
+    req = ServeRequest(0, np.concatenate([warm_prompt[:16], _toks(9, 9)]),
+                       max_new_tokens=4)
+    plain = SloAware(step_cost_s=0.05)
+    t0 = plain.predicted_first_token_s(s0, req, 0.0, ccfg)
+    t1 = plain.predicted_first_token_s(s1, req, 0.0, ccfg)
+    assert t0 == t1                              # default: no steering
+    bonus = SloAware(step_cost_s=0.05, prefix_bonus_s_per_token=0.01)
+    t1b = bonus.predicted_first_token_s(s1, req, 0.0, ccfg)
+    t0b = bonus.predicted_first_token_s(s0, req, 0.0, ccfg)
+    assert t1b == pytest.approx(t0b - 0.01 * 16)
+    pick = bonus.select([req], [s0, s1], 0.0, ccfg)
+    assert pick is not None and pick[1] is s1
+
+
+# ---------------------------------------------------------------------------
+# real serving engine: hit import is bit-identical and compile-free
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs.base import get_arch
+    from repro.models import transformer as T
+    cfg = get_arch("qwen3-1.7b").reduced(n_layers=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    return cfg, params
+
+
+def _batcher(cfg, params, cache=None):
+    from repro.serving.engine import ContinuousBatcher, quantized_greedy
+    cb = ContinuousBatcher(cfg, params, n_slots=4, max_len=96,
+                           sampler=quantized_greedy)
+    if cache is not None:
+        cb.attach_prefix_cache(cache)
+    return cb
+
+
+def _serve(cb, prompts, n_new=6):
+    from repro.serving.engine import ServeRequest
+    reqs = [ServeRequest(i, p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    cb.admit_batch(reqs)
+    while cb.n_active:
+        cb.step()
+    return [tuple(r.generated) for r in reqs]
+
+
+def test_prefix_hit_streams_bit_identical(setup):
+    """Shared-prefix prompts served through the cache produce EXACTLY the
+    cold-prefill token streams, with fewer prefill tokens and zero new
+    decode/prefill compiles."""
+    cfg, params = setup
+    pre = RNG.integers(0, 250, size=24)
+    prompts = [np.concatenate([pre, RNG.integers(0, 250, size=4)])
+               for _ in range(2)]
+    cold = _serve(_batcher(cfg, params), prompts)
+    pc = PrefixCache()
+    cb = _batcher(cfg, params, cache=pc)
+    warm0 = _serve(cb, [prompts[0]])          # miss; deposits on finish
+    assert warm0[0] == cold[0]
+    assert cb.prefix_hits == 0 and pc.n_entries == 1
+    base_tokens = cb.n_prefill_tokens
+    comp0 = {k: cb.hotpath_stats()[k]
+             for k in ("decode_compiles", "prefill_compiles")}
+    warm1 = _serve(cb, [prompts[1]])          # hits the deposited prefix
+    assert warm1[0] == cold[1]
+    assert cb.prefix_hits == 1 and cb.prefix_hit_tokens == 24
+    # only the 4-token suffix was walked, not the 28-token prompt
+    assert cb.n_prefill_tokens - base_tokens == 4
+    comp1 = {k: cb.hotpath_stats()[k]
+             for k in ("decode_compiles", "prefill_compiles")}
+    assert comp1 == comp0, "prefix import triggered a fresh compile"
+
+
+def test_full_prompt_replay_hits_len_minus_one(setup):
+    """Replaying an identical prompt reuses len-1 cached tokens (one
+    suffix token must remain to sample from)."""
+    cfg, params = setup
+    prompt = RNG.integers(0, 250, size=16)
+    cold = _serve(_batcher(cfg, params), [prompt])
+    pc = PrefixCache()
+    cb = _batcher(cfg, params, cache=pc)
+    assert _serve(cb, [prompt]) == cold
+    assert _serve(cb, [prompt]) == cold
+    assert cb.prefix_hits == 1 and cb.prefix_hit_tokens == 15
+
+
+def test_hit_admission_mid_decode_is_transparent(setup):
+    """A prefix-hit admission landing while another request is mid-decode
+    leaves every stream bit-identical (the suffix walk freezes live slots
+    the same way snapshot imports do)."""
+    cfg, params = setup
+    from repro.serving.engine import ServeRequest
+    pre = RNG.integers(0, 250, size=20)
+    shared = [np.concatenate([pre, RNG.integers(0, 250, size=4)])
+              for _ in range(2)]
+    lone = RNG.integers(0, 250, size=11)
+
+    def run(cache):
+        cb = _batcher(cfg, params, cache=cache)
+        r_lone = ServeRequest(99, lone, max_new_tokens=8)
+        cb.admit_batch([r_lone])
+        cb.step()                             # lone is mid-decode
+        rs = [ServeRequest(i, p, max_new_tokens=5)
+              for i, p in enumerate(shared)]
+        cb.admit_batch([rs[0]])
+        while rs[0].done is False and cb.n_active:
+            cb.step()
+        cb.admit_batch([rs[1]])               # hit, lone still decoding
+        while cb.n_active:
+            cb.step()
+        return [tuple(r.generated) for r in rs + [r_lone]]
+
+    cold = run(None)
+    pc = PrefixCache()
+    assert run(pc) == cold
+    assert pc.hits >= 1
+
+
+def test_spill_resurrect_real_rows_round_trip(setup):
+    """Entries exported from one server's cache (real KV rows) resurrect
+    into a fresh server and serve bit-identically via the import path."""
+    cfg, params = setup
+    pre = RNG.integers(0, 250, size=24)
+    prompts = [np.concatenate([pre, RNG.integers(0, 250, size=4)])
+               for _ in range(2)]
+    cold = _serve(_batcher(cfg, params), prompts)
+    pc_a = PrefixCache()
+    cb_a = _batcher(cfg, params, cache=pc_a)
+    assert _serve(cb_a, [prompts[0]]) == [cold[0]]
+    spilled = pc_a.export_entries()           # what a retirement spills
+    assert spilled and all(e.rows is not None for _, e in spilled)
+    pc_b = PrefixCache()
+    assert pc_b.import_entries(spilled) == len(spilled)
+    cb_b = _batcher(cfg, params, cache=pc_b)
+    assert _serve(cb_b, [prompts[1]]) == [cold[1]]
+    assert cb_b.prefix_hits == 1 and cb_b.prefix_hit_tokens == 24
+
+
+def test_drain_deposits_inflight_prompts(setup):
+    """drain() deposits the prompts of in-flight requests, so retiring a
+    busy server still warms the tier for its successors."""
+    cfg, params = setup
+    from repro.serving.engine import ServeRequest
+    prompt = RNG.integers(0, 250, size=14)
+    pc = PrefixCache()
+    cb = _batcher(cfg, params, cache=pc)
+    r = ServeRequest(0, prompt, max_new_tokens=10)
+    cb.admit_batch([r])
+    cb.step()                                 # in flight, not finished
+    assert pc.n_entries == 0
+    cb.drain(export_state=True)
+    assert pc.n_entries == 1
+    assert pc.covers(cfg.name, None, np.asarray(prompt, np.int64),
+                     pos=len(prompt))
